@@ -1,0 +1,53 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+  fig23_scaling    — paper Fig. 2/3 (DP speedup, fixed + scaled batch)
+  table1_profile   — paper Table 1 (loop decomposition w/ blocking)
+  roofline_report  — §Roofline terms per dry-run cell (this repo's tables)
+  kernel_bench     — Pallas kernel micro-benchmarks
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def emit(name: str, us: float, derived: str = "") -> None:
+    print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list: fig23,table1,roofline,kernels")
+    args = ap.parse_args()
+    want = set((args.only or "fig23,table1,roofline,kernels").split(","))
+
+    print("name,us_per_call,derived")
+    ok = True
+    if "roofline" in want:
+        from benchmarks import roofline_report
+        roofline_report.main(emit)
+    if "kernels" in want:
+        from benchmarks import kernel_bench
+        kernel_bench.main(emit)
+    if "table1" in want:
+        from benchmarks import table1_profile
+        try:
+            table1_profile.main(emit)
+        except Exception:
+            ok = False
+            traceback.print_exc()
+    if "fig23" in want:
+        from benchmarks import fig23_scaling
+        try:
+            fig23_scaling.main(emit)
+        except Exception:
+            ok = False
+            traceback.print_exc()
+    sys.exit(0 if ok else 1)
+
+
+if __name__ == "__main__":
+    main()

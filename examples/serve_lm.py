@@ -1,0 +1,59 @@
+"""Batched serving example: prefill a batch of prompts and decode with the
+sequence-sharded KV cache path (the same decode_step the dry-run lowers).
+
+Run:  PYTHONPATH=src python examples/serve_lm.py --arch gemma2-27b
+(uses the reduced smoke config on CPU; greedy decoding is deterministic).
+"""
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.launch.mesh import single_device_mesh
+from repro.models import registry
+from repro.models.common import ShardRules
+from repro.serve import ServeConfig, generate
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--new-tokens", type=int, default=12)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch)
+    mesh = single_device_mesh()
+    rules = ShardRules.for_mesh(mesh)
+    mod = registry.get_module(cfg)
+    params = mod.init(cfg, jax.random.PRNGKey(0))
+
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab, (args.batch, args.prompt_len)).astype(np.int32)
+    extra = None
+    if cfg.family == "vlm":
+        extra = rng.normal(size=(args.batch, cfg.frontend_tokens,
+                                 cfg.frontend_dim)).astype(np.float32)
+    if cfg.family == "audio":
+        extra = rng.normal(size=(args.batch, cfg.enc_seq,
+                                 cfg.d_model)).astype(np.float32)
+
+    out = generate(cfg, mesh, rules, params, prompts, extra,
+                   ServeConfig(max_new_tokens=args.new_tokens,
+                               temperature=args.temperature))
+    print(f"arch={cfg.name}  batch={args.batch}  new_tokens={args.new_tokens}")
+    for i, row in enumerate(out):
+        print(f"  seq{i}: {row.tolist()}")
+    # determinism check for greedy decoding
+    if args.temperature == 0.0:
+        out2 = generate(cfg, mesh, rules, params, prompts, extra,
+                        ServeConfig(max_new_tokens=args.new_tokens))
+        assert np.array_equal(out, out2), "greedy decode must be deterministic"
+        print("deterministic: OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""repro: Synkhronos-in-JAX — multi-pod data-parallel function framework."""
+
+__version__ = "1.0.0"

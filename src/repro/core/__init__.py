@@ -1,0 +1,42 @@
+"""Synkhronos-JAX core: data parallelism at the level of individual functions.
+
+Public API (mirrors the paper's, Appendix A):
+
+    import repro.core as synk
+
+    ctx = synk.fork()                       # build the device mesh
+    f = synk.function(fn, inputs=[synk.Scatter(), synk.Scatter()],
+                      outputs=synk.Reduce("mean"))
+    params = synk.distribute(params)        # replicate shared state
+    out = f(x, y)                           # scatter -> compute -> reduce
+    out = f(x, y, num_slices=4)             # §5.1 input slicing
+    out = f(dx, dy, batch=idxs)             # §5.2 input indexing
+    params = synk.all_reduce(params, "avg") # NCCL-style collective
+"""
+from .context import SynkContext, current, fork, make_mesh, reset
+from .specs import Broadcast, Reduce, Scatter
+from .function import SynkFunction, function
+from .data import DeviceDataset, SynkData, data, scatter_data
+from .collectives import (
+    LocalValues,
+    all_reduce,
+    as_replicated,
+    broadcast,
+    distribute,
+    gather,
+    get_value,
+    reduce_to,
+    replicate,
+    scatter_shared,
+    set_value,
+)
+
+__all__ = [
+    "SynkContext", "current", "fork", "make_mesh", "reset",
+    "Broadcast", "Reduce", "Scatter",
+    "SynkFunction", "function",
+    "DeviceDataset", "SynkData", "data", "scatter_data",
+    "LocalValues", "all_reduce", "as_replicated", "broadcast", "distribute",
+    "gather", "get_value", "reduce_to", "replicate", "scatter_shared",
+    "set_value",
+]

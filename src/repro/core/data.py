@@ -1,0 +1,150 @@
+"""Synkhronos data objects (paper §4).
+
+Two storage tiers, mirroring the paper:
+
+* :class:`SynkData` — host-resident arrays (the paper's OS shared memory).
+  Numpy-interfaced, over-allocatable so they can grow/shrink without
+  reallocation (paper §4.1), excerptable by index lists with no extra
+  copies beyond the excerpt itself.
+
+* :class:`DeviceDataset` — device-resident datasets sharded along the
+  leading axis across the data-parallel workers (paper §4.2 "scatter"),
+  for programs whose inputs are re-used across many function calls.
+  Indexing happens *on device, per worker, against the local shard*
+  (paper §5.2's on-GPU input indexing).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import context as ctx_mod
+
+
+class SynkData:
+    """Host array with over-allocation, the analogue of paper §4.1 objects.
+
+    The outward-facing numpy view may be smaller than the underlying
+    allocation, so growing within capacity never copies.
+    """
+
+    def __init__(self, values: np.ndarray, *, oversize: float = 1.0):
+        values = np.asarray(values)
+        if oversize < 1.0:
+            raise ValueError("oversize must be >= 1.0")
+        cap = int(math.ceil(values.shape[0] * oversize)) if values.ndim else 1
+        self._buffer = np.empty((max(cap, values.shape[0]),) + values.shape[1:], values.dtype)
+        self._length = values.shape[0]
+        self._buffer[: self._length] = values
+
+    # -- numpy interface -------------------------------------------------
+    @property
+    def array(self) -> np.ndarray:
+        """The outward-facing numpy view (writable, zero-copy)."""
+        return self._buffer[: self._length]
+
+    def __array__(self, dtype=None, copy=None):
+        a = self.array
+        return a.astype(dtype) if dtype is not None else a
+
+    def __getitem__(self, idx):
+        return self.array[idx]
+
+    def __setitem__(self, idx, value):
+        self.array[idx] = value
+
+    def __len__(self) -> int:
+        return self._length
+
+    @property
+    def shape(self):
+        return self.array.shape
+
+    @property
+    def dtype(self):
+        return self.array.dtype
+
+    @property
+    def capacity(self) -> int:
+        return self._buffer.shape[0]
+
+    # -- paper §4.1 special methods ---------------------------------------
+    def set_length(self, n: int) -> None:
+        """Grow/shrink the outward array; no copy while ``n <= capacity``."""
+        if n <= self._buffer.shape[0]:
+            self._length = n
+            return
+        new = np.empty((n,) + self._buffer.shape[1:], self._buffer.dtype)
+        new[: self._length] = self._buffer[: self._length]
+        self._buffer = new
+        self._length = n
+
+    def free(self) -> None:
+        """Release the underlying allocation (paper: freeing their memory)."""
+        self._buffer = np.empty((0,) + self._buffer.shape[1:], self._buffer.dtype)
+        self._length = 0
+
+    def excerpt(self, idx) -> np.ndarray:
+        """Materialize ``self[idx]`` — the single copy the paper permits for
+        shuffling (each worker excerpts its share in parallel; here the
+        excerpt feeds a sharded ``device_put``)."""
+        return self.array[idx]
+
+
+def data(values, *, oversize: float = 1.0) -> SynkData:
+    """Paper's ``synk.data(...)`` constructor."""
+    return SynkData(np.asarray(values), oversize=oversize)
+
+
+class DeviceDataset:
+    """Dataset scattered across device memories (paper §4.2).
+
+    ``array`` is a global jax.Array sharded along axis 0 over the data
+    axes.  ``local_length`` is the per-worker shard length; device-side
+    indexing (``batch=``) is interpreted against the local shard.
+    """
+
+    def __init__(self, array: jax.Array, n_shards: int):
+        self.array = array
+        self.n_shards = n_shards
+        if array.shape[0] % n_shards != 0:
+            raise ValueError("scattered dataset length must divide the data-parallel size")
+        self.local_length = array.shape[0] // n_shards
+
+    @property
+    def shape(self):
+        return self.array.shape
+
+    @property
+    def dtype(self):
+        return self.array.dtype
+
+    def __len__(self):
+        return self.array.shape[0]
+
+
+def scatter_data(values, ctx: "ctx_mod.SynkContext | None" = None) -> DeviceDataset:
+    """Paper §4.2 'scatter' collective: split an array by its first axis
+    into device-resident storage across the data-parallel workers."""
+    ctx = ctx or ctx_mod.current()
+    values = np.asarray(values) if not isinstance(values, (jax.Array, jnp.ndarray)) else values
+    n = ctx.n_data
+    if values.shape[0] % n != 0:
+        pad = n - values.shape[0] % n  # paper scatters "equally (as possible)"
+        reps = np.repeat(values[-1:], pad, axis=0)
+        values = np.concatenate([np.asarray(values), reps], axis=0)
+    sharding = ctx.sharding(ctx.data_spec(*([None] * (values.ndim - 1))))
+    arr = jax.device_put(values, sharding)
+    return DeviceDataset(arr, n)
+
+
+def is_dataset(x: Any) -> bool:
+    return isinstance(x, DeviceDataset)
+
+
+def is_host_data(x: Any) -> bool:
+    return isinstance(x, SynkData)

@@ -1,0 +1,304 @@
+"""``synk.function`` — data-parallel execution of a serial function.
+
+The user writes a serial ``fn`` over its batch of inputs; calling the
+Synkhronos function induces the paper's §3.2 sequence:
+
+  1) data inputs are scattered equally across workers,
+  2) each worker calls the same function on its assigned data,
+  3) results are reduced or gathered back and returned.
+
+Two backends:
+
+* ``shard_map`` (default, paper-faithful): an explicit per-worker program.
+  Each device runs ``fn`` on its shard; outputs are combined with
+  ``lax.pmean/psum/pmax/pmin/all_gather`` according to each output's
+  :class:`Reduce` spec.  Updates to state are local per worker unless the
+  user reduces them — exactly the paper's semantics.
+
+* ``gspmd``: ``jax.jit`` with batch-sharded ``in_shardings``.  Here ``fn``
+  is the *global* program and XLA inserts/overlaps collectives.  This is
+  the beyond-paper optimized path used by the large-scale trainer.
+
+Both support the paper's §5 extensions: ``num_slices=`` (automated input
+slicing with aggregation) and ``batch=`` (input indexing, host- or
+device-resident).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from . import context as ctx_mod
+from .data import DeviceDataset, SynkData, is_dataset, is_host_data
+from .slicing import _flatten_ops, sliced_call
+from .specs import Broadcast, Reduce, Scatter, canonicalize_in_spec, canonicalize_out_spec
+
+
+@dataclasses.dataclass
+class _CallPlan:
+    """Static description of one call signature (cache key companion)."""
+
+    num_slices: int
+    indexed: bool            # batch= indices present
+    dataset_arg: tuple[bool, ...]   # which args are DeviceDatasets
+
+
+class SynkFunction:
+    def __init__(
+        self,
+        fn: Callable,
+        in_specs: Sequence[Any],
+        out_specs: Any = Reduce("mean"),
+        *,
+        ctx: ctx_mod.SynkContext | None = None,
+        backend: str = "shard_map",
+        name: str | None = None,
+    ):
+        self.fn = fn
+        self.in_specs = tuple(canonicalize_in_spec(s) for s in in_specs)
+        self.out_specs = jax.tree.map(
+            canonicalize_out_spec, out_specs,
+            is_leaf=lambda x: isinstance(x, (Reduce, str)) or x is None,
+        )
+        self.ctx = ctx or ctx_mod.current()
+        if backend not in ("shard_map", "gspmd"):
+            raise ValueError(backend)
+        self.backend = backend
+        self.name = name or getattr(fn, "__name__", "synk_fn")
+        self._cache: dict[Any, Callable] = {}
+
+    # ------------------------------------------------------------------
+    def __call__(self, *args, num_slices: int = 1, batch=None):
+        if len(args) != len(self.in_specs):
+            raise TypeError(
+                f"{self.name} takes {len(self.in_specs)} inputs, got {len(args)}"
+            )
+        ctx = self.ctx
+        dataset_arg = tuple(is_dataset(a) for a in args)
+        indexed = batch is not None
+
+        staged = []
+        idx_global = None
+        if indexed:
+            idx_global = np.asarray(batch)
+            if idx_global.ndim != 1:
+                raise ValueError("batch= must be a 1-D index array")
+            n = ctx.n_data
+            if idx_global.shape[0] % n != 0:
+                idx_global = _pad_indices(idx_global, n)
+        for a, spec, is_ds in zip(args, self.in_specs, dataset_arg):
+            if is_ds:
+                if not isinstance(spec, Scatter):
+                    raise ValueError("DeviceDataset inputs must use Scatter spec")
+                staged.append(a.array)  # already sharded on device
+            elif is_host_data(a):
+                arr = a.excerpt(idx_global) if (indexed and isinstance(spec, Scatter)) else a.array
+                staged.append(self._stage(arr, spec))
+            else:
+                def prep(leaf):
+                    if indexed and isinstance(spec, Scatter):
+                        leaf = np.asarray(leaf)[idx_global]
+                    return leaf
+                staged.append(jax.tree.map(
+                    lambda leaf: self._stage(prep(leaf), spec), a))
+
+        plan = _CallPlan(num_slices=num_slices, indexed=indexed, dataset_arg=dataset_arg)
+        extra = ()
+        if indexed and any(dataset_arg):
+            # Device-resident indexing (paper §5.2): indices are scattered and
+            # applied to each worker's local shard.
+            local_idx = idx_global
+            extra = (self._stage(local_idx.astype(np.int32), Scatter()),)
+        key = self._key(staged, plan)
+        if key not in self._cache:
+            self._cache[key] = self._build(plan, staged, extra)
+        return self._cache[key](*staged, *extra)
+
+    # ------------------------------------------------------------------
+    def _stage(self, arr, spec) -> jax.Array:
+        ctx = self.ctx
+        arr = jnp.asarray(arr) if not isinstance(arr, jax.Array) else arr
+        if isinstance(spec, Scatter):
+            if arr.shape[0] % ctx.n_data != 0:
+                raise ValueError(
+                    f"scattered input batch {arr.shape[0]} must divide the "
+                    f"data-parallel worker count {ctx.n_data}"
+                )
+            sh = ctx.sharding(ctx.data_spec(*([None] * (arr.ndim - 1))))
+        else:
+            sh = ctx.sharding(P())
+        return jax.device_put(arr, sh)
+
+    def _key(self, staged, plan: _CallPlan):
+        shapes = tuple(
+            tuple((l.shape, str(l.dtype)) for l in jax.tree.leaves(a))
+            + (jax.tree.structure(a),)
+            for a in staged
+        )
+        return (shapes, plan.num_slices, plan.indexed, plan.dataset_arg)
+
+    # ------------------------------------------------------------------
+    def _build(self, plan: _CallPlan, staged, extra) -> Callable:
+        if self.backend == "shard_map":
+            return self._build_shard_map(plan, staged, extra)
+        return self._build_gspmd(plan, staged, extra)
+
+    def _sliceable_mask(self, plan: _CallPlan) -> list[bool]:
+        # A worker slices the args it scattered (incl. gathered dataset rows).
+        return [isinstance(s, Scatter) for s in self.in_specs]
+
+    def _build_shard_map(self, plan: _CallPlan, staged, extra) -> Callable:
+        ctx = self.ctx
+        daxes = ctx.data_axes
+        mask = self._sliceable_mask(plan)
+
+        def device_fn(*dev_args):
+            dev_args = list(dev_args)
+            if plan.indexed and any(plan.dataset_arg):
+                local_idx = dev_args[-1]
+                dev_args = dev_args[:-1]
+                for i, is_ds in enumerate(plan.dataset_arg):
+                    if is_ds:
+                        dev_args[i] = jnp.take(dev_args[i], local_idx, axis=0)
+            if plan.num_slices > 1:
+                out = sliced_call(
+                    self.fn, dev_args, mask, self.out_specs, plan.num_slices,
+                    vary_axes=daxes,
+                )
+            else:
+                out = self.fn(*dev_args)
+            return self._apply_reduces(out, daxes)
+
+        in_specs = []
+        for a, spec in zip(staged, self.in_specs):
+            if isinstance(spec, Scatter):
+                in_specs.append(jax.tree.map(
+                    lambda l: P(daxes, *([None] * (l.ndim - 1))), a))
+            else:
+                in_specs.append(jax.tree.map(lambda l: P(), a))
+        if plan.indexed and any(plan.dataset_arg):
+            in_specs.append(P(daxes))
+
+        out_shape = jax.eval_shape(
+            lambda *xs: self.fn(*self._probe_args(xs, plan)), *staged, *extra
+        )
+        out_tree = jax.tree.structure(out_shape)
+        op_leaves = _flatten_ops(self.out_specs, out_tree)
+        out_pspecs = jax.tree.unflatten(
+            out_tree,
+            [self._out_pspec(op, daxes) for op in op_leaves],
+        )
+        # check_vma=False: keep per-worker results LOCAL until the explicit
+        # reduce below (paper semantics).  With VMA tracking on, jax.grad of
+        # a replicated input inside shard_map auto-inserts a psum (the
+        # pbroadcast transpose), silently pre-reducing user gradients.
+        mapped = jax.shard_map(
+            device_fn, mesh=ctx.mesh, in_specs=tuple(in_specs),
+            out_specs=out_pspecs, check_vma=False,
+        )
+        return jax.jit(mapped)
+
+    def _probe_args(self, xs, plan: _CallPlan):
+        """Build abstract per-worker args for output-structure discovery."""
+        ctx = self.ctx
+        xs = list(xs)
+        if plan.indexed and any(plan.dataset_arg):
+            idx = xs[-1]
+            xs = xs[:-1]
+        out = []
+        for a, spec, is_ds in zip(xs, self.in_specs, plan.dataset_arg):
+            if isinstance(spec, Scatter):
+                def shrink(l):
+                    b = l.shape[0] // ctx.n_data
+                    if is_ds and plan.indexed:
+                        b = idx.shape[0] // ctx.n_data
+                    return jnp.zeros((b,) + l.shape[1:], l.dtype)
+                out.append(jax.tree.map(shrink, a))
+            else:
+                out.append(a)
+        return out
+
+    @staticmethod
+    def _out_pspec(op: Reduce, daxes) -> P:
+        if op.op in ("mean", "sum", "max", "min", "last"):
+            return P()
+        if op.op == "concat":
+            return P(daxes)
+        return P(daxes)  # None: stacked per-worker results, leading axis
+
+    def _apply_reduces(self, out, daxes):
+        leaves, tree = jax.tree.flatten(out)
+        op_leaves = _flatten_ops(self.out_specs, tree)
+        red = []
+        for val, op in zip(leaves, op_leaves):
+            if op.op == "mean":
+                red.append(jax.lax.pmean(val, daxes))
+            elif op.op == "sum":
+                red.append(jax.lax.psum(val, daxes))
+            elif op.op == "max":
+                red.append(jax.lax.pmax(val, daxes))
+            elif op.op == "min":
+                red.append(jax.lax.pmin(val, daxes))
+            elif op.op == "last":
+                # identical-by-construction state: return worker 0's copy
+                red.append(jax.lax.all_gather(val, daxes, axis=0, tiled=False)[0])
+            elif op.op == "concat":
+                red.append(val)  # out_spec P(daxes) concatenates shards
+            else:  # None: per-worker results stacked on a new leading axis
+                red.append(val[None])
+        return jax.tree.unflatten(tree, red)
+
+    # ------------------------------------------------------------------
+    def _build_gspmd(self, plan: _CallPlan, staged, extra) -> Callable:
+        """Beyond-paper backend: fn is the global program; XLA partitions it."""
+        ctx = self.ctx
+        mask = self._sliceable_mask(plan)
+
+        def global_fn(*g_args):
+            g_args = list(g_args)
+            if plan.indexed and any(plan.dataset_arg):
+                idx = g_args[-1]
+                g_args = g_args[:-1]
+                for i, is_ds in enumerate(plan.dataset_arg):
+                    if is_ds:
+                        g_args[i] = jnp.take(g_args[i], idx, axis=0)
+            if plan.num_slices > 1:
+                return sliced_call(self.fn, g_args, mask, self.out_specs, plan.num_slices)
+            return self.fn(*g_args)
+
+        in_sh = []
+        for a, spec in zip(staged, self.in_specs):
+            if isinstance(spec, Scatter):
+                in_sh.append(ctx.sharding(ctx.data_spec(*([None] * (a.ndim - 1)))))
+            else:
+                in_sh.append(ctx.sharding(P()))
+        if plan.indexed and any(plan.dataset_arg):
+            in_sh.append(ctx.sharding(ctx.data_spec()))
+        return jax.jit(global_fn, in_shardings=tuple(in_sh))
+
+
+def function(
+    fn: Callable,
+    inputs: Sequence[Any],
+    outputs: Any = "mean",
+    *,
+    ctx: ctx_mod.SynkContext | None = None,
+    backend: str = "shard_map",
+    name: str | None = None,
+) -> SynkFunction:
+    """Paper's ``synk.function`` (replacing ``theano.function``)."""
+    return SynkFunction(fn, inputs, outputs, ctx=ctx, backend=backend, name=name)
+
+
+def _pad_indices(idx: np.ndarray, n: int) -> np.ndarray:
+    """Pad an index list so it scatters evenly (paper: 'as equal as
+    possible' — we repeat trailing indices; reductions stay approximately
+    correct and concat callers should slice to the original length)."""
+    pad = (-len(idx)) % n
+    return np.concatenate([idx, idx[-pad:]]) if pad else idx

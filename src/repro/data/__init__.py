@@ -1,0 +1,8 @@
+from .pipeline import (
+    DataConfig, SyntheticEmbeds, SyntheticTokens, host_corpus, make_batch_fn,
+)
+
+__all__ = [
+    "DataConfig", "SyntheticEmbeds", "SyntheticTokens", "host_corpus",
+    "make_batch_fn",
+]

@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the compute hot spots.
+
+Each subpackage: ``kernel.py`` (pl.pallas_call + BlockSpec), ``ops.py``
+(jitted wrapper), ``ref.py`` (pure-jnp oracle).  Validated in
+interpret mode on CPU; TPU is the compilation target.
+"""
+from .flash_attention.ops import flash_attention
+from .flat_adam.ops import flat_adam_op
+from .rmsnorm.ops import rmsnorm_add_op, rmsnorm_op
+from .ssd.ops import ssd_model_layout, ssd_op
+
+__all__ = [
+    "flash_attention", "flat_adam_op", "rmsnorm_add_op", "rmsnorm_op",
+    "ssd_model_layout", "ssd_op",
+]

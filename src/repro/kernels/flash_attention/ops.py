@@ -1,0 +1,71 @@
+"""Jitted public wrapper for the flash attention kernel.
+
+Accepts the model layout (B, S, H, D) used across models/, transposes to
+the kernel layout, and dispatches to the Pallas kernel.
+
+Differentiable: a ``custom_vjp`` runs the fused kernel on the forward
+pass and recomputes attention through the memory-bounded XLA path
+(``models.attention.chunked_attention``) for the backward — the standard
+recompute-backward pairing for a forward-only kernel (saves only q/k/v,
+never the score matrix).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_fwd
+from .ref import attention_ref
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def _flash(q, k, v, causal, window, softcap, block_q, block_k, interpret):
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    out = flash_attention_fwd(
+        qt, kt, vt,
+        causal=causal, window=window, softcap=softcap,
+        block_q=block_q, block_k=block_k, interpret=interpret,
+    )
+    return out.transpose(0, 2, 1, 3)
+
+
+def _flash_fwd(q, k, v, causal, window, softcap, block_q, block_k, interpret):
+    out = _flash(q, k, v, causal, window, softcap, block_q, block_k, interpret)
+    return out, (q, k, v)
+
+
+def _flash_bwd(causal, window, softcap, block_q, block_k, interpret,
+               residuals, g):
+    from repro.models.attention import chunked_attention
+    q, k, v = residuals
+
+    def ref_fn(q, k, v):
+        return chunked_attention(
+            q, k, v, causal=causal, window=window, softcap=softcap,
+            q_chunk=block_q, kv_chunk=block_k,
+        )
+
+    _, vjp = jax.vjp(ref_fn, q, k, v)
+    return vjp(g)
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "softcap", "block_q",
+                                   "block_k", "interpret"))
+def flash_attention(
+    q, k, v, *,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool | None = None,
+):
+    """q: (B, Sq, H, D); k/v: (B, Sk, Hk, D) — model layout."""
+    return _flash(q, k, v, causal, window, softcap, block_q, block_k, interpret)

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the flash attention kernel (naive O(S^2) memory)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0e38
+
+
+def attention_ref(q, k, v, *, causal=True, window=0, softcap=0.0):
+    """q: (B, H, Sq, D); k/v: (B, Hk, Sk, D) with H % Hk == 0."""
+    B, H, Sq, D = q.shape
+    _, Hk, Sk, _ = k.shape
+    rep = H // Hk
+    qf = q.astype(jnp.float32).reshape(B, Hk, rep, Sq, D)
+    s = jnp.einsum("bhrqd,bhkd->bhrqk", qf, k.astype(jnp.float32)) * (D ** -0.5)
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    pos_q = jnp.arange(Sq)[:, None]
+    pos_k = jnp.arange(Sk)[None, :]
+    ok = jnp.ones((Sq, Sk), bool)
+    if causal:
+        ok &= pos_k <= pos_q
+    if window:
+        ok &= pos_k > pos_q - window
+    s = jnp.where(ok, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhrqk,bhkd->bhrqd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, Sq, D).astype(q.dtype)

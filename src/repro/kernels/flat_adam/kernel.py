@@ -1,0 +1,62 @@
+"""Fused flat-buffer Adam — Pallas TPU kernel.
+
+The paper (§3.3) flattens all gradients into one array so the all-reduce
+is a single collective; this kernel is the natural conclusion: the
+optimizer update is ONE fused elementwise pass over the flat fp32
+buffers (p, g, m, v -> p', m', v'), instead of one kernel launch and
+3x read + 3x write per parameter tensor.  Grid over 1-D tiles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _adam_kernel(step_ref, p_ref, g_ref, m_ref, v_ref,
+                 p_out, m_out, v_out, *,
+                 lr: float, beta1: float, beta2: float, eps: float,
+                 weight_decay: float):
+    t = step_ref[0].astype(jnp.float32)
+    p = p_ref[...]
+    g = g_ref[...]
+    m = beta1 * m_ref[...] + (1.0 - beta1) * g
+    v = beta2 * v_ref[...] + (1.0 - beta2) * g * g
+    mhat = m / (1.0 - beta1 ** t)
+    vhat = v / (1.0 - beta2 ** t)
+    upd = lr * mhat / (jnp.sqrt(vhat) + eps)
+    if weight_decay:
+        upd = upd + lr * weight_decay * p
+    p_out[...] = p - upd
+    m_out[...] = m
+    v_out[...] = v
+
+
+def flat_adam(p, g, m, v, step, *,
+              lr: float, beta1: float = 0.9, beta2: float = 0.95,
+              eps: float = 1e-8, weight_decay: float = 0.0,
+              block: int = 65536, interpret: bool | None = None):
+    """All buffers: (n,) fp32, n % block == 0 (the FlatLayout pads).
+
+    step: (1,) int32 — 1-based step count.  Returns (p', m', v').
+    """
+    n = p.shape[0]
+    while n % block:
+        block //= 2
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    kernel = functools.partial(
+        _adam_kernel, lr=lr, beta1=beta1, beta2=beta2, eps=eps,
+        weight_decay=weight_decay,
+    )
+    vec = pl.BlockSpec((block,), lambda i: (i,))
+    return pl.pallas_call(
+        kernel,
+        grid=(n // block,),
+        in_specs=[pl.BlockSpec((1,), lambda i: (0,)), vec, vec, vec, vec],
+        out_specs=[vec, vec, vec],
+        out_shape=[jax.ShapeDtypeStruct((n,), jnp.float32)] * 3,
+        interpret=interpret,
+    )(step, p, g, m, v)

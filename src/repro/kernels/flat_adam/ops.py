@@ -1,0 +1,12 @@
+"""Jitted wrapper for the fused flat Adam kernel."""
+from __future__ import annotations
+
+import jax
+
+from .kernel import flat_adam
+
+flat_adam_op = jax.jit(
+    flat_adam,
+    static_argnames=("lr", "beta1", "beta2", "eps", "weight_decay", "block",
+                     "interpret"),
+)

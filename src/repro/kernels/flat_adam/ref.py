@@ -1,0 +1,20 @@
+"""Pure-jnp oracle: repro.optim.flat.flat_adam_update re-exported with the
+kernel's exact signature."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.optim.flat import flat_adam_update
+
+
+def flat_adam_ref(p, g, m, v, step, *, lr, beta1=0.9, beta2=0.95, eps=1e-8,
+                  weight_decay=0.0):
+    if weight_decay:
+        # decoupled weight decay folded the same way as the kernel
+        p_new, m_new, v_new = flat_adam_update(
+            p, g, m, v, step.reshape(())[None][0] if step.ndim else step,
+            lr=lr, beta1=beta1, beta2=beta2, eps=eps,
+        )
+        return p_new - lr * weight_decay * p, m_new, v_new
+    s = step.reshape(()) if step.ndim else step
+    return flat_adam_update(p, g, m, v, s, lr=lr, beta1=beta1, beta2=beta2, eps=eps)

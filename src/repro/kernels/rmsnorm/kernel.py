@@ -1,0 +1,94 @@
+"""Fused RMSNorm (+ optional residual add) — Pallas TPU kernel.
+
+Grid over row tiles of the flattened (rows, D) input; one VMEM block of
+(block_rows, D) per program.  Mean-square in fp32, (1 + gamma) scaling
+(the repo-wide convention: gamma is zero-initialised).  Fusing the
+residual add saves one full HBM round-trip of the residual stream per
+block — the traffic the §Roofline memory term charges at op granularity.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, g_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    g = g_ref[...].astype(jnp.float32)
+    o_ref[...] = (y * (1.0 + g)[None, :]).astype(o_ref.dtype)
+
+
+def _rmsnorm_add_kernel(x_ref, r_ref, g_ref, o_ref, s_ref, *, eps: float):
+    s = x_ref[...].astype(jnp.float32) + r_ref[...].astype(jnp.float32)
+    var = jnp.mean(jnp.square(s), axis=-1, keepdims=True)
+    y = s * jax.lax.rsqrt(var + eps)
+    g = g_ref[...].astype(jnp.float32)
+    o_ref[...] = (y * (1.0 + g)[None, :]).astype(o_ref.dtype)
+    s_ref[...] = s.astype(s_ref.dtype)
+
+
+def rmsnorm(x, gamma, *, eps: float = 1e-6, block_rows: int = 256,
+            interpret: bool | None = None):
+    """x: (..., D); gamma: (D,).  Returns rmsnorm(x) * (1 + gamma)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    shape = x.shape
+    D = shape[-1]
+    rows = 1
+    for s in shape[:-1]:
+        rows *= s
+    x2 = x.reshape(rows, D)
+    br = block_rows
+    while rows % br:
+        br //= 2
+    out = pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=(rows // br,),
+        in_specs=[
+            pl.BlockSpec((br, D), lambda i: (i, 0)),
+            pl.BlockSpec((D,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, D), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, D), x.dtype),
+        interpret=interpret,
+    )(x2, gamma)
+    return out.reshape(shape)
+
+
+def rmsnorm_add(x, residual, gamma, *, eps: float = 1e-6,
+                block_rows: int = 256, interpret: bool | None = None):
+    """Fused (x + residual) -> rmsnorm.  Returns (normed, new_residual)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    shape = x.shape
+    D = shape[-1]
+    rows = 1
+    for s in shape[:-1]:
+        rows *= s
+    br = block_rows
+    while rows % br:
+        br //= 2
+    normed, summed = pl.pallas_call(
+        functools.partial(_rmsnorm_add_kernel, eps=eps),
+        grid=(rows // br,),
+        in_specs=[
+            pl.BlockSpec((br, D), lambda i: (i, 0)),
+            pl.BlockSpec((br, D), lambda i: (i, 0)),
+            pl.BlockSpec((D,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((br, D), lambda i: (i, 0)),
+            pl.BlockSpec((br, D), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, D), x.dtype),
+            jax.ShapeDtypeStruct((rows, D), x.dtype),
+        ],
+        interpret=interpret,
+    )(x.reshape(rows, D), residual.reshape(rows, D), gamma)
+    return normed.reshape(shape), summed.reshape(shape)

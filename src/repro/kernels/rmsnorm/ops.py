@@ -1,0 +1,13 @@
+"""Jitted wrappers for the fused RMSNorm kernels."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .kernel import rmsnorm, rmsnorm_add
+
+rmsnorm_op = jax.jit(rmsnorm, static_argnames=("eps", "block_rows", "interpret"))
+rmsnorm_add_op = jax.jit(
+    rmsnorm_add, static_argnames=("eps", "block_rows", "interpret")
+)

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the fused RMSNorm kernels."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm_ref(x, gamma, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + gamma.astype(jnp.float32))).astype(dt)
+
+
+def rmsnorm_add_ref(x, residual, gamma, eps: float = 1e-6):
+    s = x.astype(jnp.float32) + residual.astype(jnp.float32)
+    return rmsnorm_ref(s, gamma, eps), s.astype(x.dtype)

@@ -1,0 +1,20 @@
+"""Jitted wrapper for the SSD kernel (model layout adapters)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .kernel import ssd_fwd
+
+ssd_op = jax.jit(ssd_fwd, static_argnames=("chunk", "interpret"))
+
+
+def ssd_model_layout(x, dt, A, Bm, Cm, *, chunk: int = 128, interpret=None):
+    """models/ssm.py layout: x (B,T,H,P), dt (B,T,H), Bm/Cm (B,T,G,N)."""
+    y = ssd_op(
+        x.transpose(0, 2, 1, 3), dt.transpose(0, 2, 1), A,
+        Bm.transpose(0, 2, 1, 3), Cm.transpose(0, 2, 1, 3),
+        chunk=chunk, interpret=interpret,
+    )
+    return y.transpose(0, 2, 1, 3)

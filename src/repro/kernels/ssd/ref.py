@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the SSD kernel: step-by-step SSM recurrence."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x, dt, A, Bm, Cm):
+    """x: (B, H, T, P); dt: (B, H, T); A: (H,); Bm/Cm: (B, G, T, N)."""
+    B, H, T, P = x.shape
+    G, N = Bm.shape[1], Bm.shape[-1]
+    rep = H // G
+    Bh = jnp.repeat(Bm.astype(jnp.float32), rep, axis=1)   # (B,H,T,N)
+    Ch = jnp.repeat(Cm.astype(jnp.float32), rep, axis=1)
+    dtf = dt.astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+
+    def step(S, inp):
+        xt, dtt, bt, ct = inp       # (B,H,P),(B,H),(B,H,N),(B,H,N)
+        decay = jnp.exp(dtt * A)
+        S = S * decay[..., None, None] + jnp.einsum(
+            "bhn,bhp->bhnp", bt, xt * dtt[..., None]
+        )
+        y = jnp.einsum("bhn,bhnp->bhp", ct, S)
+        return S, y
+
+    S0 = jnp.zeros((B, H, N, P), jnp.float32)
+    _, ys = jax.lax.scan(
+        step, S0,
+        (xf.transpose(2, 0, 1, 3), dtf.transpose(2, 0, 1),
+         Bh.transpose(2, 0, 1, 3), Ch.transpose(2, 0, 1, 3)),
+    )
+    return ys.transpose(1, 2, 0, 3).astype(x.dtype)

@@ -1,0 +1,3 @@
+from .mesh import local_mesh, make_production_mesh, single_device_mesh
+
+__all__ = ["local_mesh", "make_production_mesh", "single_device_mesh"]

@@ -1,0 +1,9 @@
+from . import attention, common, lm, moe, registry, ssm, whisper, xlstm, xlstm_lm, zamba
+from .common import ShardRules
+from .registry import abstract_params, get_module, param_pspecs
+
+__all__ = [
+    "attention", "common", "lm", "moe", "registry", "ssm", "whisper",
+    "xlstm", "xlstm_lm", "zamba", "ShardRules",
+    "abstract_params", "get_module", "param_pspecs",
+]

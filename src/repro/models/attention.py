@@ -1,0 +1,290 @@
+"""Attention: RoPE, chunked (flash-style) attention, distributed decode.
+
+``chunked_attention`` is the portable XLA path: an online-softmax scan over
+query/key chunks so the (S x S) score matrix is never materialised — the
+same blocking the Pallas kernel (kernels/flash_attention) uses on TPU, and
+the oracle it is tested against.
+
+``decode_attention`` is the serving path: KV caches are sharded along the
+*sequence* axis across the ``model`` (and, for batch-1 long-context, also
+the ``data``/``pod``) mesh axes; each shard computes a partial softmax and
+the results are combined with a log-sum-exp reduction (distributed
+flash-decoding).  This is what makes 32k/500k-token caches fit.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+NEG_INF = -2.0e38
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope(x, positions, theta: float = 10_000.0):
+    """Rotary embedding.  x: (..., S, H, D); positions: (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = jnp.exp(-jnp.arange(0, half, dtype=jnp.float32) * (np.log(theta) / half))
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(angles)[..., :, None, :]   # (..., S, 1, half)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Chunked attention (training / prefill)
+# ---------------------------------------------------------------------------
+
+def pick_chunk(n: int, target: int) -> int:
+    """Largest divisor of ``n`` that is <= target (attention chunk size)."""
+    c = min(target, n)
+    while n % c:
+        c -= 1
+    return max(c, 1)
+
+
+def _mask_scores(s, pos_q, pos_k, causal, window, kv_len):
+    """s: (..., Q, K) fp32; pos_q: (Q,), pos_k: (K,)."""
+    ok = jnp.ones((pos_q.shape[0], pos_k.shape[0]), bool)
+    if causal:
+        ok &= pos_k[None, :] <= pos_q[:, None]
+    if window:
+        ok &= pos_k[None, :] > pos_q[:, None] - window
+    if kv_len is not None:
+        ok &= pos_k[None, :] < kv_len
+    return jnp.where(ok, s, NEG_INF)
+
+
+def chunked_attention(
+    q, k, v, *,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    q_chunk: int = 256,
+    kv_chunk: int = 256,
+    q_offset: int = 0,
+    kv_len=None,
+):
+    """Memory-bounded attention.
+
+    q: (B, Sq, H, D); k/v: (B, Sk, Hk, D) with H % Hk == 0 (GQA).
+    Sliding-window causal attention uses a *static band* of KV chunks
+    (exact, no wasted blocks); full attention scans all KV chunks with
+    masking (the Pallas kernel skips masked blocks on TPU).
+    Returns (B, Sq, H, D) in q.dtype.
+    """
+    B, Sq, H, D = q.shape
+    _, Sk, Hk, _ = k.shape
+    rep = H // Hk
+    scale = D ** -0.5
+
+    q_chunk = pick_chunk(Sq, q_chunk)
+    kv_chunk = pick_chunk(Sk, kv_chunk)
+    nq, nk = Sq // q_chunk, Sk // kv_chunk
+
+    qg = q.reshape(B, nq, q_chunk, Hk, rep, D).transpose(1, 0, 3, 4, 2, 5)
+    # qg: (nq, B, Hk, rep, qc, D)
+    kg = k.reshape(B, nk, kv_chunk, Hk, D).transpose(1, 0, 3, 2, 4)   # (nk,B,Hk,kc,D)
+    vg = v.reshape(B, nk, kv_chunk, Hk, D).transpose(1, 0, 3, 2, 4)
+
+    band = causal and window and window < Sk and q_chunk == kv_chunk
+    # q-chunk rows [iC, iC+C-1] may attend keys in [iC - window + 1, iC + C - 1]
+    # -> ceil((window + C - 1) / C) KV chunks ending at chunk i.
+    nb = int(np.ceil((window + kv_chunk - 1) / kv_chunk)) if band else nk
+
+    def q_step(_, inputs):
+        qi, i = inputs
+        pos_q = q_offset + i * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry, jn):
+            m, l, acc = carry
+            if band:
+                off = jn
+                j = jnp.maximum(i - off, 0)
+                valid_chunk = (i - off) >= 0
+            else:
+                j = jn
+                valid_chunk = True
+            kj = jax.lax.dynamic_index_in_dim(kg, j, axis=0, keepdims=False)
+            vj = jax.lax.dynamic_index_in_dim(vg, j, axis=0, keepdims=False)
+            pos_k = j * kv_chunk + jnp.arange(kv_chunk)
+            s = jnp.einsum(
+                "bhrqd,bhkd->bhrqk", qi.astype(jnp.float32), kj.astype(jnp.float32)
+            ) * scale
+            if softcap:
+                s = softcap * jnp.tanh(s / softcap)
+            s = _mask_scores(s, pos_q, pos_k, causal, window, kv_len)
+            if band:
+                s = jnp.where(valid_chunk, s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + jnp.sum(p, axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bhrqk,bhkd->bhrqd", p, vj.astype(jnp.float32)
+            )
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, Hk, rep, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hk, rep, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, Hk, rep, q_chunk, D), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), jnp.arange(nb)
+        )
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        # cast per-chunk: the stacked output (and any SPMD reshard of it)
+        # stays in the compute dtype rather than f32
+        return None, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_step, None, (qg, jnp.arange(nq)))
+    # outs: (nq, B, Hk, rep, qc, D) -> (B, Sq, H, D)
+    return outs.transpose(1, 0, 4, 2, 3, 5).reshape(B, Sq, H, D)
+
+
+def reference_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
+                        q_offset: int = 0, kv_len=None):
+    """Naive O(S^2)-memory oracle for tests."""
+    B, Sq, H, D = q.shape
+    _, Sk, Hk, _ = k.shape
+    rep = H // Hk
+    qf = q.astype(jnp.float32).reshape(B, Sq, Hk, rep, D)
+    s = jnp.einsum("bqhrd,bkhd->bhrqk", qf, k.astype(jnp.float32)) * (D ** -0.5)
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    pos_q = q_offset + jnp.arange(Sq)
+    pos_k = jnp.arange(Sk)
+    s = _mask_scores(s, pos_q, pos_k, causal, window, kv_len)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhrqk,bkhd->bqhrd", p, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Distributed decode (sequence-sharded KV cache, LSE combine)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DecodeSharding:
+    """How the KV cache is laid out on the mesh for decoding."""
+
+    mesh: Mesh
+    batch_axes: tuple[str, ...]     # axes sharding the batch dim (may be empty)
+    seq_axes: tuple[str, ...]       # axes sharding the cache sequence dim
+
+    @classmethod
+    def choose(cls, mesh: Mesh, batch: int) -> "DecodeSharding":
+        dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        tp = tuple(a for a in ("model",) if a in mesh.axis_names)
+        ndp = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+        if batch % max(ndp, 1) == 0 and batch >= ndp:
+            return cls(mesh, dp, tp)
+        # batch too small (long-context, batch=1): spread the sequence over
+        # every axis instead.
+        return cls(mesh, (), dp + tp)
+
+    def cache_spec(self) -> P:
+        b = self.batch_axes or None
+        s = self.seq_axes or None
+        return P(b, s, None, None)     # (B, S, Hk, D)
+
+
+def decode_attention(
+    q, k_cache, v_cache, k_new, v_new, cur_index, *,
+    sharding: DecodeSharding,
+    window: int = 0,
+    softcap: float = 0.0,
+):
+    """One decoding step against a sequence-sharded KV cache.
+
+    q:            (B, Hk, rep, D) — current-token queries (RoPE applied)
+    k_cache/v_cache: (B, S, Hk, D) — sharded per ``sharding.cache_spec()``
+    k_new/v_new:  (B, Hk, D) — current token's K/V, written at ``cur_index``
+    cur_index:    scalar int32 — number of tokens already in the cache
+
+    Returns (out (B, Hk, rep, D), k_cache', v_cache').
+    """
+    mesh = sharding.mesh
+    baxes, saxes = sharding.batch_axes, sharding.seq_axes
+    S = k_cache.shape[1]
+    n_seq = int(np.prod([mesh.shape[a] for a in saxes])) if saxes else 1
+    s_loc = S // n_seq
+
+    def shard_fn(q, kc, vc, kn, vn, idx):
+        # local shapes: q (Bl, Hk, rep, D); kc/vc (Bl, s_loc, Hk, D)
+        if saxes:
+            shard_id = jax.lax.axis_index(saxes)
+        else:
+            shard_id = jnp.int32(0)
+        start = shard_id * s_loc
+        local_pos = jnp.clip(idx - start, 0, s_loc - 1)
+        in_range = (idx >= start) & (idx < start + s_loc)
+
+        def write(c, new):
+            upd = jax.lax.dynamic_update_slice_in_dim(
+                c, new[:, None].astype(c.dtype), local_pos, axis=1
+            )
+            return jnp.where(in_range, upd, c)
+
+        kc = write(kc, kn)
+        vc = write(vc, vn)
+
+        pos = start + jnp.arange(s_loc)
+        valid = pos <= idx
+        if window:
+            valid &= pos > idx - window
+        s = jnp.einsum(
+            "bhrd,bshd->bhrs", q.astype(jnp.float32), kc.astype(jnp.float32)
+        ) * (q.shape[-1] ** -0.5)
+        if softcap:
+            s = softcap * jnp.tanh(s / softcap)
+        s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+
+        m_loc = jnp.max(s, axis=-1)
+        p = jnp.exp(s - m_loc[..., None])
+        l_loc = jnp.sum(p, axis=-1)
+        o_loc = jnp.einsum("bhrs,bshd->bhrd", p, vc.astype(jnp.float32))
+
+        if saxes:
+            m_g = jax.lax.pmax(m_loc, saxes)
+            m_g = jnp.maximum(m_g, -1e30)
+            corr = jnp.exp(m_loc - m_g)
+            l_g = jax.lax.psum(l_loc * corr, saxes)
+            o_g = jax.lax.psum(o_loc * corr[..., None], saxes)
+        else:
+            l_g, o_g = l_loc, o_loc
+        out = (o_g / jnp.maximum(l_g, 1e-30)[..., None]).astype(q.dtype)
+        return out, kc, vc
+
+    b = baxes or None
+    s_sp = saxes or None
+    in_specs = (
+        P(b, None, None, None),          # q
+        P(b, s_sp, None, None),          # k_cache
+        P(b, s_sp, None, None),          # v_cache
+        P(b, None, None),                # k_new
+        P(b, None, None),                # v_new
+        P(),                             # cur_index
+    )
+    out_specs = (
+        P(b, None, None, None),
+        P(b, s_sp, None, None),
+        P(b, s_sp, None, None),
+    )
+    fn = jax.shard_map(
+        shard_fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_vma=False,
+    )
+    return fn(q, k_cache, v_cache, k_new, v_new, cur_index)

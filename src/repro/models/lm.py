@@ -1,0 +1,418 @@
+"""Decoder-only LM assembly: dense (llama/deepseek/stablelm/smollm),
+gemma2 (alternating local/global attention + softcaps + post-norms),
+qwen3-MoE (expert-parallel FFN), and InternVL-style VLM (stubbed vision
+frontend projected into the sequence).
+
+Layers are stacked on a leading axis and executed with ``lax.scan`` (pairs
+of (local, global) layers for gemma2), which keeps HLO size independent of
+depth — essential for 95-layer models partitioned over 512 devices.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.configs.base import ArchConfig
+from .attention import DecodeSharding, chunked_attention, decode_attention, rope
+from .common import (
+    ParamSpec,
+    ShardRules,
+    constrain,
+    cross_entropy_loss,
+    init_tree,
+    rms_norm,
+    softcap,
+    wuse,
+)
+from .moe import moe_ffn
+
+# ---------------------------------------------------------------------------
+# Parameter declaration
+# ---------------------------------------------------------------------------
+
+
+def _leading(cfg: ArchConfig) -> tuple[int, ...]:
+    if cfg.alt_local_global:
+        assert cfg.n_layers % 2 == 0, "alternating archs need an even layer count"
+        return (cfg.n_layers // 2, 2)
+    return (cfg.n_layers,)
+
+
+def _lead_logical(cfg: ArchConfig) -> tuple[None, ...]:
+    return (None,) * len(_leading(cfg))
+
+
+def block_specs(cfg: ArchConfig) -> dict:
+    lead, ll = _leading(cfg), _lead_logical(cfg)
+    D, dh, H, Hk = cfg.d_model, cfg.head_dim, cfg.n_heads, cfg.n_kv
+    dt = jnp.dtype(cfg.param_dtype)
+    s: dict[str, ParamSpec] = {
+        "ln1": ParamSpec(lead + (D,), ll + (None,), dt, init_scale=0.0),
+        "ln2": ParamSpec(lead + (D,), ll + (None,), dt, init_scale=0.0),
+        "wq": ParamSpec(lead + (D, H * dh), ll + ("fsdp", "tp"), dt),
+        "wk": ParamSpec(lead + (D, Hk * dh), ll + ("fsdp", "tp"), dt),
+        "wv": ParamSpec(lead + (D, Hk * dh), ll + ("fsdp", "tp"), dt),
+        "wo": ParamSpec(lead + (H * dh, D), ll + ("tp", "fsdp"), dt),
+    }
+    if cfg.qk_norm:
+        s["qnorm"] = ParamSpec(lead + (dh,), ll + (None,), dt, init_scale=0.0)
+        s["knorm"] = ParamSpec(lead + (dh,), ll + (None,), dt, init_scale=0.0)
+    if cfg.alt_local_global:  # gemma2 post-norms
+        s["ln1b"] = ParamSpec(lead + (D,), ll + (None,), dt, init_scale=0.0)
+        s["ln2b"] = ParamSpec(lead + (D,), ll + (None,), dt, init_scale=0.0)
+    if cfg.moe.num_experts:
+        E, F = cfg.moe.num_experts, cfg.moe.d_expert
+        s["router"] = ParamSpec(lead + (D, E), ll + (None, None), dt)
+        s["wg_e"] = ParamSpec(lead + (E, D, F), ll + ("tp", "fsdp", None), dt)
+        s["wu_e"] = ParamSpec(lead + (E, D, F), ll + ("tp", "fsdp", None), dt)
+        s["wd_e"] = ParamSpec(lead + (E, F, D), ll + ("tp", None, "fsdp"), dt)
+    else:
+        F = cfg.d_ff
+        s["wg"] = ParamSpec(lead + (D, F), ll + ("fsdp", "tp"), dt)
+        s["wu"] = ParamSpec(lead + (D, F), ll + ("fsdp", "tp"), dt)
+        s["wd"] = ParamSpec(lead + (F, D), ll + ("tp", "fsdp"), dt)
+    return s
+
+
+def param_specs(cfg: ArchConfig) -> dict:
+    dt = jnp.dtype(cfg.param_dtype)
+    D = cfg.d_model
+    s = {
+        "embed": ParamSpec((cfg.vocab, D), ("tp", "fsdp"), dt),
+        "ln_f": ParamSpec((D,), (None,), dt, init_scale=0.0),
+        "blocks": block_specs(cfg),
+    }
+    if not cfg.tie_embeddings:
+        s["unembed"] = ParamSpec((D, cfg.vocab), ("fsdp", "tp"), dt)
+    if cfg.family == "vlm":
+        s["img_proj"] = ParamSpec((cfg.frontend_dim, D), (None, "fsdp"), dt)
+    return s
+
+
+def init(cfg: ArchConfig, key) -> dict:
+    return init_tree(key, param_specs(cfg))
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+
+def _gate(cfg: ArchConfig, g):
+    return jax.nn.gelu(g) if cfg.gate_act == "gelu" else jax.nn.silu(g)
+
+
+def _q_scale(cfg: ArchConfig) -> float:
+    # chunked_attention applies dh**-0.5; fold any override into q.
+    if cfg.query_scale:
+        return cfg.query_scale * (cfg.head_dim ** 0.5)
+    return 1.0
+
+
+def _tp_size(mesh: Mesh, rules: ShardRules) -> int:
+    return mesh.shape[rules.tp] if rules.tp and rules.tp in mesh.axis_names else 1
+
+
+def _attn_proj(cfg, mesh, rules, h, bp, positions):
+    B, S, _ = h.shape
+    dh, H, Hk = cfg.head_dim, cfg.n_heads, cfg.n_kv
+    cdt = jnp.dtype(cfg.compute_dtype)
+    q = jnp.einsum("bsd,dk->bsk", h, wuse(bp["wq"], rules, "fsdp", "tp", dtype=cdt)).reshape(B, S, H, dh)
+    k = jnp.einsum("bsd,dk->bsk", h, wuse(bp["wk"], rules, "fsdp", "tp", dtype=cdt)).reshape(B, S, Hk, dh)
+    v = jnp.einsum("bsd,dk->bsk", h, wuse(bp["wv"], rules, "fsdp", "tp", dtype=cdt)).reshape(B, S, Hk, dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, bp["qnorm"], cfg.norm_eps)
+        k = rms_norm(k, bp["knorm"], cfg.norm_eps)
+    q = rope(q, positions, cfg.rope_theta) * _q_scale(cfg)
+    k = rope(k, positions, cfg.rope_theta)
+    tp = _tp_size(mesh, rules)
+    q = constrain(q, rules, "dp", None, "tp" if H % tp == 0 else None, None)
+    k = constrain(k, rules, "dp", None, "tp" if Hk % tp == 0 else None, None)
+    return q, k, v
+
+
+def _ffn(cfg, mesh, rules, x, bp):
+    """Returns (ffn_out, aux)."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    if cfg.moe.num_experts:
+        return moe_ffn(
+            x, bp["router"], bp["wg_e"], bp["wu_e"], bp["wd_e"],
+            cfg=cfg, mesh=mesh, rules=rules,
+        )
+    g = jnp.einsum("bsd,df->bsf", x, wuse(bp["wg"], rules, "fsdp", "tp", dtype=cdt))
+    u = jnp.einsum("bsd,df->bsf", x, wuse(bp["wu"], rules, "fsdp", "tp", dtype=cdt))
+    h = _gate(cfg, g) * u
+    h = constrain(h, rules, "dp", None, "tp")
+    out = jnp.einsum("bsf,fd->bsd", h, wuse(bp["wd"], rules, "tp", "fsdp", dtype=cdt))
+    out = constrain(out, rules, "dp", "sp", None)   # psum -> reduce-scatter
+    return out, {"lb_loss": jnp.float32(0.0), "drop_frac": jnp.float32(0.0)}
+
+
+def _block_fwd(cfg, mesh, rules, x, bp, positions, *, window: int, collect_kv: bool):
+    """One transformer block, training/prefill path.
+
+    Returns (x, aux, (k, v) or None).
+    """
+    h = rms_norm(x, bp["ln1"], cfg.norm_eps)
+    h = constrain(h, rules, "dp", "sp", None)
+    q, k, v = _attn_proj(cfg, mesh, rules, h, bp, positions)
+    if cfg.attn_impl == "pallas":
+        # TPU hot-spot path: fused flash kernel with dynamic block skipping
+        # (validated against chunked_attention in tests/test_kernels.py)
+        from repro.kernels import flash_attention
+        attn = flash_attention(
+            q, k, v, causal=True, window=window, softcap=cfg.attn_softcap,
+        )
+    else:
+        attn = chunked_attention(
+            q, k, v,
+            causal=True,
+            window=window,
+            softcap=cfg.attn_softcap,
+            q_chunk=min(256, q.shape[1]),
+            kv_chunk=min(256, k.shape[1]),
+        )
+    B, S = x.shape[:2]
+    cdt = jnp.dtype(cfg.compute_dtype)
+    o = jnp.einsum(
+        "bsk,kd->bsd", attn.reshape(B, S, -1), wuse(bp["wo"], rules, "tp", "fsdp", dtype=cdt)
+    )
+    # pin the psum output BEFORE the residual add so the TP partial sum
+    # lowers to reduce-scatter (all-reduce + slice after the add costs 2x)
+    o = constrain(o, rules, "dp", "sp", None)
+    if cfg.alt_local_global:
+        o = rms_norm(o, bp["ln1b"], cfg.norm_eps)
+    x = constrain(x + o, rules, "dp", "sp", None)
+    h2 = rms_norm(x, bp["ln2"], cfg.norm_eps)
+    h2 = constrain(h2, rules, "dp", "sp", None)
+    ffn, aux = _ffn(cfg, mesh, rules, h2, bp)
+    if cfg.alt_local_global:
+        ffn = rms_norm(ffn, bp["ln2b"], cfg.norm_eps)
+    x = constrain(x + ffn, rules, "dp", "sp", None)
+    kv = (k, v) if collect_kv else None
+    return x, aux, kv
+
+
+def _block_decode(cfg, mesh, rules, x, bp, kc, vc, cur_index, *, window: int,
+                  dec_sharding: DecodeSharding):
+    """One block, single-token decode. x: (B, D). Returns (x, kc, vc)."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    dh, H, Hk = cfg.head_dim, cfg.n_heads, cfg.n_kv
+    B = x.shape[0]
+    h = rms_norm(x, bp["ln1"], cfg.norm_eps)
+    q = jnp.einsum("bd,dk->bk", h, bp["wq"].astype(cdt)).reshape(B, H, dh)
+    k = jnp.einsum("bd,dk->bk", h, bp["wk"].astype(cdt)).reshape(B, Hk, dh)
+    v = jnp.einsum("bd,dk->bk", h, bp["wv"].astype(cdt)).reshape(B, Hk, dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, bp["qnorm"], cfg.norm_eps)
+        k = rms_norm(k, bp["knorm"], cfg.norm_eps)
+    pos = jnp.full((B, 1), cur_index, jnp.int32)
+    q = rope(q[:, None], pos, cfg.rope_theta)[:, 0] * _q_scale(cfg)
+    k = rope(k[:, None], pos, cfg.rope_theta)[:, 0]
+    q = q.reshape(B, Hk, H // Hk, dh)
+    attn, kc, vc = decode_attention(
+        q, kc, vc, k, v, cur_index,
+        sharding=dec_sharding, window=window, softcap=cfg.attn_softcap,
+    )
+    o = jnp.einsum("bk,kd->bd", attn.reshape(B, H * dh), bp["wo"].astype(cdt))
+    if cfg.alt_local_global:
+        o = rms_norm(o, bp["ln1b"], cfg.norm_eps)
+    x = x + o
+    h2 = rms_norm(x, bp["ln2"], cfg.norm_eps)
+    ffn, _ = _ffn(cfg, mesh, rules, h2[:, None], bp)
+    ffn = ffn[:, 0]
+    if cfg.alt_local_global:
+        ffn = rms_norm(ffn, bp["ln2b"], cfg.norm_eps)
+    return x + ffn, kc, vc
+
+
+def _sub(tree, i):
+    return jax.tree.map(lambda p: p[i], tree)
+
+
+def _windows(cfg: ArchConfig) -> tuple[int, ...]:
+    """Window per sub-block within a scan step."""
+    if cfg.alt_local_global:
+        return (cfg.window, 0)       # (local, global)
+    return (cfg.window,)             # 0 => full causal
+
+
+# ---------------------------------------------------------------------------
+# Forward / loss
+# ---------------------------------------------------------------------------
+
+
+def embed_tokens(cfg, rules, params, tokens):
+    cdt = jnp.dtype(cfg.compute_dtype)
+    x = jnp.take(wuse(params["embed"], rules, "tp", "fsdp", dtype=cdt), tokens, axis=0)
+    if cfg.alt_local_global:   # gemma scales embeddings
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), cdt)
+    return x
+
+
+def unembed(cfg, rules, params, x):
+    cdt = jnp.dtype(cfg.compute_dtype)
+    if cfg.tie_embeddings:
+        w = wuse(params["embed"], rules, "tp", "fsdp", dtype=cdt).T
+    else:
+        w = wuse(params["unembed"], rules, "fsdp", "tp", dtype=cdt)
+    logits = jnp.einsum("...d,dv->...v", x, w)
+    logits = constrain(logits, rules, "dp", None, "tp") if logits.ndim == 3 \
+        else constrain(logits, rules, "dp", "tp")
+    if cfg.logit_softcap:
+        logits = softcap(logits.astype(jnp.float32), cfg.logit_softcap)
+    return logits
+
+
+def forward(cfg: ArchConfig, mesh: Mesh, rules: ShardRules, params, tokens,
+            img_embeds=None, *, remat: bool = True, collect_kv: bool = False):
+    """Returns (hidden (B,S,D), aux, kv_stack or None)."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    x = embed_tokens(cfg, rules, params, tokens)
+    if cfg.family == "vlm":
+        img = jnp.einsum(
+            "bnf,fd->bnd", img_embeds.astype(cdt), params["img_proj"].astype(cdt)
+        )
+        x = jnp.concatenate([img, x], axis=1)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x = constrain(x, rules, "dp", "sp", None)
+
+    windows = _windows(cfg)
+
+    def body(carry, bp):
+        x, lb, dr = carry
+        kvs = []
+        for i, w in enumerate(windows):
+            sub_bp = _sub(bp, i) if len(windows) > 1 else bp
+            x, aux, kv = _block_fwd(
+                cfg, mesh, rules, x, sub_bp, positions,
+                window=w, collect_kv=collect_kv,
+            )
+            lb, dr = lb + aux["lb_loss"], jnp.maximum(dr, aux["drop_frac"])
+            kvs.append(kv)
+        if collect_kv:
+            ys = jax.tree.map(lambda *xs: jnp.stack(xs), *kvs) if len(kvs) > 1 else kvs[0]
+        else:
+            ys = None
+        return (x, lb, dr), ys
+
+    from .common import remat_wrap
+    body = remat_wrap(body, remat)
+    (x, lb, dr), kv_stack = jax.lax.scan(
+        body, (x, jnp.float32(0.0), jnp.float32(0.0)), params["blocks"]
+    )
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    return x, {"lb_loss": lb, "drop_frac": dr}, kv_stack
+
+
+def loss_fn(cfg: ArchConfig, mesh: Mesh, rules: ShardRules, params, batch,
+            *, remat: bool = True):
+    tokens = batch["tokens"]                    # (B, S_text + 1)
+    inp, labels = tokens[:, :-1], tokens[:, 1:]
+    img = batch.get("patch_embeds")
+    hidden, aux, _ = forward(cfg, mesh, rules, params, inp, img, remat=remat)
+    if cfg.family == "vlm":
+        n = cfg.frontend_tokens
+        hidden = hidden[:, n - 1 : n - 1 + labels.shape[1]]
+    logits = unembed(cfg, rules, params, hidden)
+    loss = cross_entropy_loss(logits, labels)
+    total = loss + 1e-2 * aux["lb_loss"] / max(cfg.n_layers, 1)
+    return total, {"ce_loss": loss, **aux}
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+
+def make_cache_specs(cfg: ArchConfig, batch: int, max_len: int):
+    """Abstract KV cache (lead..., B, S, Hk, dh) as ShapeDtypeStructs."""
+    lead = _leading(cfg)
+    shape = lead + (batch, max_len, cfg.n_kv, cfg.head_dim)
+    c = jax.ShapeDtypeStruct(shape, jnp.dtype(cfg.compute_dtype))
+    return {"k": c, "v": c}
+
+
+def cache_pspec(cfg: ArchConfig, dec: DecodeSharding):
+    lead = (None,) * len(_leading(cfg))
+    from jax.sharding import PartitionSpec as P
+    spec = P(*lead, dec.batch_axes or None, dec.seq_axes or None, None, None)
+    return {"k": spec, "v": spec}
+
+
+def prefill(cfg: ArchConfig, mesh: Mesh, rules: ShardRules, params, tokens,
+            img_embeds=None, *, max_len: int | None = None):
+    """Returns (cache {k,v}, last-token logits (B, V))."""
+    hidden, _, kv = forward(
+        cfg, mesh, rules, params, tokens, img_embeds,
+        remat=False, collect_kv=True,
+    )
+    k, v = kv                                   # (L[,2], B, S, Hk, dh)
+    dec = DecodeSharding.choose(mesh, tokens.shape[0])
+
+    def pad(c):
+        if max_len and max_len > c.shape[-3]:
+            pad_width = [(0, 0)] * c.ndim
+            pad_width[-3] = (0, max_len - c.shape[-3])
+            c = jnp.pad(c, pad_width)
+        return c
+
+    cache = {"k": pad(k), "v": pad(v)}
+    specs = cache_pspec(cfg, dec)
+    from .common import constrain_spec
+    cache = {
+        name: constrain_spec(c, mesh, specs[name]) for name, c in cache.items()
+    }
+    logits = unembed(cfg, rules, params, hidden[:, -1])
+    return cache, logits
+
+
+def decode_step(cfg: ArchConfig, mesh: Mesh, rules: ShardRules, params, cache,
+                tokens, cur_index):
+    """tokens: (B,) int32; cur_index: scalar — tokens already in cache.
+
+    Returns (logits (B, V), new cache).
+    """
+    x = embed_tokens(cfg, rules, params, tokens[:, None])[:, 0]
+    dec = DecodeSharding.choose(mesh, tokens.shape[0])
+    windows = _windows(cfg)
+
+    # fori_loop with in-place dynamic updates on the carried cache: the
+    # stacked KV cache lives in ONE buffer (a scan's xs+ys would
+    # double-buffer it — 2x HBM for the dominant decode tensor).  The
+    # leading layer axis is unsharded, so the per-layer slice/update is
+    # local (no collectives).
+    def body(i, carry):
+        x, kc_all, vc_all = carry
+        idx = lambda a: jax.lax.dynamic_index_in_dim(a, i, 0, keepdims=False)
+        bp = jax.tree.map(idx, params["blocks"])
+        kc, vc = idx(kc_all), idx(vc_all)
+        if len(windows) > 1:
+            kcs, vcs = [], []
+            for j, w in enumerate(windows):
+                x, kcj, vcj = _block_decode(
+                    cfg, mesh, rules, x, _sub(bp, j), kc[j], vc[j], cur_index,
+                    window=w, dec_sharding=dec,
+                )
+                kcs.append(kcj); vcs.append(vcj)
+            kc, vc = jnp.stack(kcs), jnp.stack(vcs)
+        else:
+            x, kc, vc = _block_decode(
+                cfg, mesh, rules, x, bp, kc, vc, cur_index,
+                window=windows[0], dec_sharding=dec,
+            )
+        upd = lambda a, s: jax.lax.dynamic_update_index_in_dim(a, s, i, 0)
+        return x, upd(kc_all, kc), upd(vc_all, vc)
+
+    L = jax.tree.leaves(params["blocks"])[0].shape[0]
+    x, k_new, v_new = jax.lax.fori_loop(
+        0, L, body, (x, cache["k"], cache["v"]))
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = unembed(cfg, rules, params, x)
+    return logits, {"k": k_new, "v": v_new}

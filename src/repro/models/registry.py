@@ -1,0 +1,102 @@
+"""Family registry: uniform model API + abstract input builders.
+
+Every family module exposes:
+  param_specs(cfg) / init(cfg, key)
+  loss_fn(cfg, mesh, rules, params, batch, *, remat)
+  prefill(cfg, mesh, rules, params, tokens, extra, *, max_len)
+  decode_step(cfg, mesh, rules, params, cache, tokens, cur_index)
+  make_cache_specs(cfg, batch, max_len) / cache_pspec(cfg, dec_sharding)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from . import lm, whisper, xlstm_lm, zamba
+from .attention import DecodeSharding
+from .common import ShardRules, spec_tree_to_pspecs, spec_tree_to_sds
+
+_FAMILIES = {
+    "dense": lm,
+    "moe": lm,
+    "vlm": lm,
+    "hybrid": zamba,
+    "ssm": xlstm_lm,
+    "audio": whisper,
+}
+
+
+def get_module(cfg: ArchConfig):
+    return _FAMILIES[cfg.family]
+
+
+def abstract_params(cfg: ArchConfig):
+    return spec_tree_to_sds(get_module(cfg).param_specs(cfg))
+
+
+def param_pspecs(cfg: ArchConfig, rules: ShardRules):
+    return spec_tree_to_pspecs(get_module(cfg).param_specs(cfg), rules)
+
+
+# ---------------------------------------------------------------------------
+# Abstract inputs (ShapeDtypeStruct + PartitionSpec) per shape kind
+# ---------------------------------------------------------------------------
+
+
+def _extra_key(cfg: ArchConfig) -> str | None:
+    if cfg.family == "vlm":
+        return "patch_embeds"
+    if cfg.family == "audio":
+        return "frames"
+    return None
+
+
+def train_inputs(cfg: ArchConfig, shape: ShapeConfig, rules: ShardRules):
+    """Returns ({name: sds}, {name: pspec}) for the training batch."""
+    B, S = shape.global_batch, shape.seq_len
+    sds, ps = {}, {}
+    s_text = S - (cfg.frontend_tokens if cfg.family == "vlm" else 0)
+    sds["tokens"] = jax.ShapeDtypeStruct((B, s_text + 1), jnp.int32)
+    ps["tokens"] = rules.pspec("dp", None)
+    if cfg.family == "vlm":
+        sds["patch_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.frontend_tokens, cfg.frontend_dim), jnp.dtype(cfg.compute_dtype)
+        )
+        ps["patch_embeds"] = rules.pspec("dp", None, None)
+    if cfg.family == "audio":
+        sds["frames"] = jax.ShapeDtypeStruct(
+            (B, cfg.enc_seq, cfg.d_model), jnp.dtype(cfg.compute_dtype)
+        )
+        ps["frames"] = rules.pspec("dp", None, None)
+    return sds, ps
+
+
+def prefill_inputs(cfg: ArchConfig, shape: ShapeConfig, rules: ShardRules):
+    B, S = shape.global_batch, shape.seq_len
+    s_text = S - (cfg.frontend_tokens if cfg.family == "vlm" else 0)
+    sds = {"tokens": jax.ShapeDtypeStruct((B, s_text), jnp.int32)}
+    ps = {"tokens": rules.pspec("dp", None)}
+    k = _extra_key(cfg)
+    if k == "patch_embeds":
+        sds[k] = jax.ShapeDtypeStruct(
+            (B, cfg.frontend_tokens, cfg.frontend_dim), jnp.dtype(cfg.compute_dtype))
+        ps[k] = rules.pspec("dp", None, None)
+    elif k == "frames":
+        sds[k] = jax.ShapeDtypeStruct(
+            (B, cfg.enc_seq, cfg.d_model), jnp.dtype(cfg.compute_dtype))
+        ps[k] = rules.pspec("dp", None, None)
+    return sds, ps
+
+
+def decode_inputs(cfg: ArchConfig, shape: ShapeConfig, mesh):
+    """(cache sds/pspec, token sds/pspec, cur_index sds)."""
+    B, S = shape.global_batch, shape.seq_len
+    mod = get_module(cfg)
+    dec = DecodeSharding.choose(mesh, B)
+    cache_sds = mod.make_cache_specs(cfg, B, S)
+    cache_ps = mod.cache_pspec(cfg, dec)
+    tok_sds = jax.ShapeDtypeStruct((B,), jnp.int32)
+    tok_ps = P(dec.batch_axes or None)
+    return cache_sds, cache_ps, tok_sds, tok_ps

@@ -1,0 +1,258 @@
+"""Whisper-style encoder-decoder [arXiv:2212.04356].
+
+The conv frontend is a STUB per the task spec: inputs are precomputed
+frame embeddings (B, enc_seq, d_model) standing in for the 2x conv1d
+features.  Encoder: bidirectional attention + sinusoidal positions.
+Decoder: causal self-attention (RoPE — an adaptation of Whisper's learned
+positions, noted in DESIGN.md) + cross-attention + GELU MLP.  Embeddings
+tied with the output head, as in the published model.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from .attention import DecodeSharding, chunked_attention, decode_attention, rope
+from .common import (
+    ParamSpec, ShardRules, constrain, cross_entropy_loss, init_tree, rms_norm,
+)
+
+
+def _attn_specs(cfg, L, ll, dt, prefix=""):
+    D, dh, H, Hk = cfg.d_model, cfg.head_dim, cfg.n_heads, cfg.n_kv
+    return {
+        prefix + "wq": ParamSpec(L + (D, H * dh), ll + ("fsdp", "tp"), dt),
+        prefix + "wk": ParamSpec(L + (D, Hk * dh), ll + ("fsdp", "tp"), dt),
+        prefix + "wv": ParamSpec(L + (D, Hk * dh), ll + ("fsdp", "tp"), dt),
+        prefix + "wo": ParamSpec(L + (H * dh, D), ll + ("tp", "fsdp"), dt),
+    }
+
+
+def _mlp_specs(cfg, L, ll, dt):
+    D, F = cfg.d_model, cfg.d_ff
+    return {
+        "w1": ParamSpec(L + (D, F), ll + ("fsdp", "tp"), dt),
+        "w2": ParamSpec(L + (F, D), ll + ("tp", "fsdp"), dt),
+    }
+
+
+def padded_vocab(cfg: ArchConfig) -> int:
+    """Whisper's 51865-token vocab is odd; pad the (tied) embedding table to
+    a 256-multiple so it shards over the tp axis.  Labels never reference
+    the padding, so the CE over the extended vocab is exact."""
+    return int(np.ceil(cfg.vocab / 256) * 256)
+
+
+def param_specs(cfg: ArchConfig) -> dict:
+    dt = jnp.dtype(cfg.param_dtype)
+    D = cfg.d_model
+    Le, Ld = (cfg.enc_layers,), (cfg.n_layers,)
+    ll = (None,)
+    enc = {
+        "ln1": ParamSpec(Le + (D,), ll + (None,), dt, init_scale=0.0),
+        "ln2": ParamSpec(Le + (D,), ll + (None,), dt, init_scale=0.0),
+        **_attn_specs(cfg, Le, ll, dt),
+        **_mlp_specs(cfg, Le, ll, dt),
+    }
+    dec = {
+        "ln1": ParamSpec(Ld + (D,), ll + (None,), dt, init_scale=0.0),
+        "lnx": ParamSpec(Ld + (D,), ll + (None,), dt, init_scale=0.0),
+        "ln2": ParamSpec(Ld + (D,), ll + (None,), dt, init_scale=0.0),
+        **_attn_specs(cfg, Ld, ll, dt),
+        **_attn_specs(cfg, Ld, ll, dt, prefix="x_"),
+        **_mlp_specs(cfg, Ld, ll, dt),
+    }
+    return {
+        "embed": ParamSpec((padded_vocab(cfg), D), ("tp", "fsdp"), dt),
+        "enc": enc,
+        "dec": dec,
+        "enc_ln_f": ParamSpec((D,), (None,), dt, init_scale=0.0),
+        "ln_f": ParamSpec((D,), (None,), dt, init_scale=0.0),
+    }
+
+
+def init(cfg: ArchConfig, key) -> dict:
+    return init_tree(key, param_specs(cfg))
+
+
+def _sinusoid(T: int, D: int, dtype):
+    pos = np.arange(T)[:, None]
+    dim = np.arange(D // 2)[None, :]
+    ang = pos / (10_000 ** (2 * dim / D))
+    emb = np.concatenate([np.sin(ang), np.cos(ang)], axis=-1)
+    return jnp.asarray(emb, dtype)
+
+
+def _mha(cfg, bp, prefix, xq, xkv, *, causal):
+    """Full attention between xq (B,Sq,D) and xkv (B,Sk,D)."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    B, Sq, D = xq.shape
+    Sk = xkv.shape[1]
+    dh, H, Hk = cfg.head_dim, cfg.n_heads, cfg.n_kv
+    q = jnp.einsum("bsd,dk->bsk", xq, bp[prefix + "wq"].astype(cdt)).reshape(B, Sq, H, dh)
+    k = jnp.einsum("bsd,dk->bsk", xkv, bp[prefix + "wk"].astype(cdt)).reshape(B, Sk, Hk, dh)
+    v = jnp.einsum("bsd,dk->bsk", xkv, bp[prefix + "wv"].astype(cdt)).reshape(B, Sk, Hk, dh)
+    if causal:  # decoder self-attention: rotary positions
+        pos_q = jnp.broadcast_to(jnp.arange(Sq, dtype=jnp.int32), (B, Sq))
+        pos_k = jnp.broadcast_to(jnp.arange(Sk, dtype=jnp.int32), (B, Sk))
+        q, k = rope(q, pos_q, cfg.rope_theta), rope(k, pos_k, cfg.rope_theta)
+    out = chunked_attention(
+        q, k, v, causal=causal,
+        q_chunk=min(256, Sq), kv_chunk=min(256, Sk),
+    )
+    o = jnp.einsum("bsk,kd->bsd", out.reshape(B, Sq, -1), bp[prefix + "wo"].astype(cdt))
+    return o, (k, v)
+
+
+def _mlp(cfg, bp, x):
+    cdt = jnp.dtype(cfg.compute_dtype)
+    h = jnp.einsum("bsd,df->bsf", x, bp["w1"].astype(cdt))
+    return jnp.einsum("bsf,fd->bsd", jax.nn.gelu(h), bp["w2"].astype(cdt))
+
+
+def encode(cfg, mesh, rules, params, frames):
+    cdt = jnp.dtype(cfg.compute_dtype)
+    x = frames.astype(cdt) + _sinusoid(frames.shape[1], cfg.d_model, cdt)[None]
+    x = constrain(x, rules, "dp", None, None)
+
+    def body(x, bp):
+        h = rms_norm(x, bp["ln1"], cfg.norm_eps)
+        o, _ = _mha(cfg, bp, "", h, h, causal=False)
+        x = x + o
+        h = rms_norm(x, bp["ln2"], cfg.norm_eps)
+        return x + _mlp(cfg, bp, h), None
+
+    x, _ = jax.lax.scan(body, x, params["enc"])
+    return rms_norm(x, params["enc_ln_f"], cfg.norm_eps)
+
+
+def decode_train(cfg, mesh, rules, params, tokens, enc_out, *, remat=True,
+                 collect_kv=False):
+    cdt = jnp.dtype(cfg.compute_dtype)
+    x = jnp.take(params["embed"].astype(cdt), tokens, axis=0)
+    x = constrain(x, rules, "dp", None, None)
+
+    def body(x, bp):
+        h = rms_norm(x, bp["ln1"], cfg.norm_eps)
+        o, kv = _mha(cfg, bp, "", h, h, causal=True)
+        x = x + o
+        h = rms_norm(x, bp["lnx"], cfg.norm_eps)
+        o, xkv = _mha(cfg, bp, "x_", h, enc_out, causal=False)
+        x = x + o
+        h = rms_norm(x, bp["ln2"], cfg.norm_eps)
+        x = x + _mlp(cfg, bp, h)
+        ys = (kv, xkv) if collect_kv else None
+        return x, ys
+
+    from .common import remat_wrap
+    body = remat_wrap(body, remat)
+    x, kvs = jax.lax.scan(body, x, params["dec"])
+    return rms_norm(x, params["ln_f"], cfg.norm_eps), kvs
+
+
+def _logits(cfg, rules, params, x):
+    cdt = jnp.dtype(cfg.compute_dtype)
+    logits = jnp.einsum("...d,vd->...v", x, params["embed"].astype(cdt))
+    return constrain(logits, rules, *( ("dp", None, "tp") if logits.ndim == 3 else ("dp", "tp") ))
+
+
+def loss_fn(cfg, mesh, rules, params, batch, *, remat=True):
+    tokens = batch["tokens"]
+    inp, labels = tokens[:, :-1], tokens[:, 1:]
+    enc_out = encode(cfg, mesh, rules, params, batch["frames"])
+    hidden, _ = decode_train(cfg, mesh, rules, params, inp, enc_out, remat=remat)
+    loss = cross_entropy_loss(_logits(cfg, rules, params, hidden), labels)
+    return loss, {"ce_loss": loss, "lb_loss": jnp.float32(0.0),
+                  "drop_frac": jnp.float32(0.0)}
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+
+def make_cache_specs(cfg: ArchConfig, batch: int, max_len: int):
+    cdt = jnp.dtype(cfg.compute_dtype)
+    L = cfg.n_layers
+    kv = jax.ShapeDtypeStruct((L, batch, max_len, cfg.n_kv, cfg.head_dim), cdt)
+    xkv = jax.ShapeDtypeStruct((L, batch, cfg.enc_seq, cfg.n_kv, cfg.head_dim), cdt)
+    return {"k": kv, "v": kv, "xk": xkv, "xv": xkv}
+
+
+def cache_pspec(cfg: ArchConfig, dec: DecodeSharding):
+    from jax.sharding import PartitionSpec as P
+    b = dec.batch_axes or None
+    s = dec.seq_axes or None
+    return {
+        "k": P(None, b, s, None, None), "v": P(None, b, s, None, None),
+        "xk": P(None, b, None, None, None), "xv": P(None, b, None, None, None),
+    }
+
+
+def prefill(cfg, mesh, rules, params, tokens, frames=None, *, max_len=None):
+    enc_out = encode(cfg, mesh, rules, params, frames)
+    hidden, ((k, v), (xk, xv)) = decode_train(
+        cfg, mesh, rules, params, tokens, enc_out, remat=False, collect_kv=True
+    )
+    dec = DecodeSharding.choose(mesh, tokens.shape[0])
+
+    def pad(c):
+        if max_len and max_len > c.shape[2]:
+            pw = [(0, 0)] * c.ndim
+            pw[2] = (0, max_len - c.shape[2])
+            c = jnp.pad(c, pw)
+        return c
+
+    cache = {"k": pad(k), "v": pad(v), "xk": xk, "xv": xv}
+    specs = cache_pspec(cfg, dec)
+    from .common import constrain_spec
+    cache = {n: constrain_spec(c, mesh, specs[n]) for n, c in cache.items()}
+    return cache, _logits(cfg, rules, params, hidden[:, -1])
+
+
+def _cross_decode(cfg, bp, x, xk, xv):
+    """Single-token cross attention over the cached encoder K/V."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    B, D = x.shape
+    dh, H, Hk = cfg.head_dim, cfg.n_heads, cfg.n_kv
+    q = jnp.einsum("bd,dk->bk", x, bp["x_wq"].astype(cdt)).reshape(B, Hk, H // Hk, dh)
+    s = jnp.einsum("bhrd,bshd->bhrs", q.astype(jnp.float32), xk.astype(jnp.float32))
+    s = s * (dh ** -0.5)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhrs,bshd->bhrd", p, xv.astype(jnp.float32)).astype(cdt)
+    return jnp.einsum("bk,kd->bd", o.reshape(B, H * dh), bp["x_wo"].astype(cdt))
+
+
+def decode_step(cfg, mesh, rules, params, cache, tokens, cur_index):
+    cdt = jnp.dtype(cfg.compute_dtype)
+    x = jnp.take(params["embed"].astype(cdt), tokens, axis=0)
+    B = x.shape[0]
+    dh, H, Hk = cfg.head_dim, cfg.n_heads, cfg.n_kv
+    dec = DecodeSharding.choose(mesh, B)
+
+    def body(x, xs):
+        bp, kc, vc, xk, xv = xs
+        h = rms_norm(x, bp["ln1"], cfg.norm_eps)
+        q = jnp.einsum("bd,dk->bk", h, bp["wq"].astype(cdt)).reshape(B, H, dh)
+        k = jnp.einsum("bd,dk->bk", h, bp["wk"].astype(cdt)).reshape(B, Hk, dh)
+        v = jnp.einsum("bd,dk->bk", h, bp["wv"].astype(cdt)).reshape(B, Hk, dh)
+        pos = jnp.full((B, 1), cur_index, jnp.int32)
+        q = rope(q[:, None], pos, cfg.rope_theta)[:, 0].reshape(B, Hk, H // Hk, dh)
+        k = rope(k[:, None], pos, cfg.rope_theta)[:, 0]
+        attn, kc, vc = decode_attention(q, kc, vc, k, v, cur_index, sharding=dec)
+        x = x + jnp.einsum("bk,kd->bd", attn.reshape(B, H * dh), bp["wo"].astype(cdt))
+        h = rms_norm(x, bp["lnx"], cfg.norm_eps)
+        x = x + _cross_decode(cfg, bp, h, xk, xv)
+        h = rms_norm(x, bp["ln2"], cfg.norm_eps)
+        h1 = jnp.einsum("bd,df->bf", h, bp["w1"].astype(cdt))
+        x = x + jnp.einsum("bf,fd->bd", jax.nn.gelu(h1), bp["w2"].astype(cdt))
+        return x, (kc, vc)
+
+    x, (k_new, v_new) = jax.lax.scan(
+        body, x, (params["dec"], cache["k"], cache["v"], cache["xk"], cache["xv"])
+    )
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    new_cache = {"k": k_new, "v": v_new, "xk": cache["xk"], "xv": cache["xv"]}
+    return _logits(cfg, rules, params, x), new_cache

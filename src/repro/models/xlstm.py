@@ -1,0 +1,315 @@
+"""xLSTM blocks [arXiv:2405.04517]: mLSTM (matrix memory, chunkwise
+parallel) and sLSTM (scalar memory, sequential scan with recurrent mixing).
+
+The mLSTM recurrence (per head; C: (dk, dv) matrix memory):
+
+    m_t = max(logf_t + m_{t-1}, logi_t)
+    C_t = exp(logf_t + m_{t-1} - m_t) C_{t-1} + exp(logi_t - m_t) k_t v_t^T
+    n_t = exp(logf_t + m_{t-1} - m_t) n_{t-1} + exp(logi_t - m_t) k_t
+    h_t = C_t^T q_t / max(|n_t . q_t|, exp(-m_t))
+
+is evaluated chunkwise: intra-chunk terms as (Q x Q) masked matmuls,
+inter-chunk state carried as (C*, n*, m*) with the stabiliser folded in —
+the same max-rescaling bookkeeping as flash attention, which makes the
+block MXU-friendly (the paper's CUDA kernels are fused scans; on TPU the
+chunked matmul form is the right adaptation — see DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from .common import ParamSpec, ShardRules, constrain, rms_norm
+from .ssm import _causal_conv
+
+# ---------------------------------------------------------------------------
+# mLSTM cell
+# ---------------------------------------------------------------------------
+
+
+def mlstm_chunked(q, k, v, i_pre, f_pre, *, chunk: int, return_state: bool = False):
+    """q/k/v: (B,T,H,Dh); i_pre/f_pre: (B,T,H).  Returns (B,T,H,Dh)
+    (and the final (C, n, m) cell state if requested)."""
+    B, T, H, Dh = q.shape
+    Q = min(chunk, T)
+    T_real = T
+    if T % Q:
+        # identity padding: f -> 1 (f_pre large +), i -> 0 (i_pre large -)
+        pad = Q - T % Q
+        zpad = lambda a, val=0.0: jnp.pad(
+            a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2),
+            constant_values=val)
+        q, k, v = zpad(q), zpad(k), zpad(v)
+        i_pre, f_pre = zpad(i_pre, -1e30), zpad(f_pre, 30.0)
+        T = T + pad
+    nc = T // Q
+
+    qf = q.astype(jnp.float32) * (Dh ** -0.5)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    logf = jax.nn.log_sigmoid(f_pre.astype(jnp.float32))     # (B,T,H)
+    logi = i_pre.astype(jnp.float32)
+
+    qc = qf.reshape(B, nc, Q, H, Dh).transpose(1, 0, 3, 2, 4)   # (nc,B,H,Q,Dh)
+    kc = kf.reshape(B, nc, Q, H, Dh).transpose(1, 0, 3, 2, 4)
+    vc = vf.reshape(B, nc, Q, H, Dh).transpose(1, 0, 3, 2, 4)
+    lfc = logf.reshape(B, nc, Q, H).transpose(1, 0, 3, 2)       # (nc,B,H,Q)
+    lic = logi.reshape(B, nc, Q, H).transpose(1, 0, 3, 2)
+
+    def chunk_step(carry, inp):
+        Cs, ns, ms = carry            # (B,H,Dh,Dh), (B,H,Dh), (B,H)
+        qi, ki, vi, lf, li = inp
+        b = jnp.cumsum(lf, axis=-1)                      # (B,H,Q) inclusive
+        g = li - b                                       # (B,H,Q)
+        gmax = jax.lax.cummax(g, axis=g.ndim - 1)
+        M = b + jnp.maximum(ms[..., None], gmax)         # (B,H,Q) row stabiliser
+
+        # intra: w[t,s] = exp(b_t - b_s + li_s - M_t), s <= t
+        w = jnp.exp(b[..., :, None] - b[..., None, :] + li[..., None, :] - M[..., :, None])
+        mask = jnp.tril(jnp.ones((Q, Q), bool))
+        w = jnp.where(mask, w, 0.0)
+        qk = jnp.einsum("bhtd,bhsd->bhts", qi, ki)
+        scores = qk * w
+        num = jnp.einsum("bhts,bhsd->bhtd", scores, vi)
+        den = jnp.einsum("bhts->bht", scores)
+
+        # inter: stored state scaled by exp(ms); contribution exp(ms + b_t - M_t)
+        scale = jnp.exp(ms[..., None] + b - M)           # (B,H,Q)
+        num = num + jnp.einsum("bhtd,bhde->bhte", qi * scale[..., None], Cs)
+        den = den + jnp.einsum("bhtd,bhd->bht", qi * scale[..., None], ns)
+
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-M))[..., None]
+
+        # end-of-chunk state
+        btot = b[..., -1]                                # (B,H)
+        m_new = btot + jnp.maximum(ms, jnp.max(g, axis=-1))
+        wst = jnp.exp(btot[..., None] - b + li - m_new[..., None])   # (B,H,Q)
+        C_new = Cs * jnp.exp(ms + btot - m_new)[..., None, None] + jnp.einsum(
+            "bhsd,bhse->bhde", ki * wst[..., None], vi
+        )
+        n_new = ns * jnp.exp(ms + btot - m_new)[..., None] + jnp.einsum(
+            "bhsd,bhs->bhd", ki, wst
+        )
+        return (C_new, n_new, m_new), h
+
+    C0 = jnp.zeros((B, H, Dh, Dh), jnp.float32)
+    n0 = jnp.zeros((B, H, Dh), jnp.float32)
+    m0 = jnp.full((B, H), -1e30, jnp.float32)
+    final, hs = jax.lax.scan(chunk_step, (C0, n0, m0), (qc, kc, vc, lfc, lic))
+    # hs: (nc, B, H, Q, Dh) -> (B, T, H, Dh)
+    y = hs.transpose(1, 0, 3, 2, 4).reshape(B, T, H, Dh)[:, :T_real].astype(q.dtype)
+    if return_state:
+        return y, final
+    return y
+
+
+def mlstm_reference(q, k, v, i_pre, f_pre):
+    """Per-step recurrence oracle."""
+    B, T, H, Dh = q.shape
+    qf = q.astype(jnp.float32) * (Dh ** -0.5)
+    kf, vf = k.astype(jnp.float32), v.astype(jnp.float32)
+    logf = jax.nn.log_sigmoid(f_pre.astype(jnp.float32))
+    logi = i_pre.astype(jnp.float32)
+
+    def step(carry, inp):
+        C, n, m = carry
+        qt, kt, vt, lf, li = inp
+        m_new = jnp.maximum(lf + m, li)
+        fs = jnp.exp(lf + m - m_new)
+        is_ = jnp.exp(li - m_new)
+        C = C * fs[..., None, None] + is_[..., None, None] * jnp.einsum("bhd,bhe->bhde", kt, vt)
+        n = n * fs[..., None] + is_[..., None] * kt
+        num = jnp.einsum("bhd,bhde->bhe", qt, C)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qt, n)), jnp.exp(-m_new))
+        return (C, n, m_new), num / den[..., None]
+
+    C0 = jnp.zeros((B, H, Dh, Dh), jnp.float32)
+    n0 = jnp.zeros((B, H, Dh), jnp.float32)
+    m0 = jnp.full((B, H), -1e30, jnp.float32)
+    _, hs = jax.lax.scan(
+        step, (C0, n0, m0),
+        (qf.transpose(1, 0, 2, 3), kf.transpose(1, 0, 2, 3), vf.transpose(1, 0, 2, 3),
+         logf.transpose(1, 0, 2), logi.transpose(1, 0, 2)),
+    )
+    return hs.transpose(1, 0, 2, 3).astype(q.dtype)
+
+
+def mlstm_decode_step(state, qt, kt, vt, i_pre, f_pre):
+    """state: (C (B,H,Dh,Dh), n (B,H,Dh), m (B,H)); one token step."""
+    C, n, m = state
+    Dh = qt.shape[-1]
+    qf = qt.astype(jnp.float32) * (Dh ** -0.5)
+    lf = jax.nn.log_sigmoid(f_pre.astype(jnp.float32))
+    li = i_pre.astype(jnp.float32)
+    m_new = jnp.maximum(lf + m, li)
+    fs = jnp.exp(lf + m - m_new)
+    is_ = jnp.exp(li - m_new)
+    C = C * fs[..., None, None] + is_[..., None, None] * jnp.einsum(
+        "bhd,bhe->bhde", kt.astype(jnp.float32), vt.astype(jnp.float32))
+    n = n * fs[..., None] + is_[..., None] * kt.astype(jnp.float32)
+    num = jnp.einsum("bhd,bhde->bhe", qf, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qf, n)), jnp.exp(-m_new))
+    return (C, n, m_new), (num / den[..., None]).astype(qt.dtype)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM cell (sequential scan; block-diagonal recurrent mixing)
+# ---------------------------------------------------------------------------
+
+
+def slstm_scan(x_z, x_i, x_f, x_o, r_z, r_i, r_f, r_o, h0, c0, n0, m0):
+    """x_*: (B,T,H,Dh) pre-activations from the input path;
+    r_*: (H,Dh,Dh) recurrent (block-diagonal head mixing) weights.
+    Returns (h (B,T,H,Dh), final_state).
+
+    NOTE (EXPERIMENTS.md §Perf E): under SPMD the scan transpose reduces
+    dR = h x delta across the batch axes EVERY step. Passing R through the
+    scan carry does not help — XLA's loop-invariant-code motion hoists it
+    back (verified: bit-identical HLO).  The real fix is a chunk-unrolled
+    sLSTM cell or a Pallas bwd kernel with a local dR accumulator."""
+
+    def step(carry, inp):
+        h, c, n, m = carry
+        xz, xi, xf, xo = inp
+        zt = jnp.tanh(xz + jnp.einsum("bhd,hde->bhe", h, r_z))
+        it = xi + jnp.einsum("bhd,hde->bhe", h, r_i)
+        ft = xf + jnp.einsum("bhd,hde->bhe", h, r_f)
+        ot = jax.nn.sigmoid(xo + jnp.einsum("bhd,hde->bhe", h, r_o))
+        m_new = jnp.maximum(ft + m, it)
+        i_s = jnp.exp(it - m_new)
+        f_s = jnp.exp(ft + m - m_new)
+        c = f_s * c + i_s * zt
+        n = f_s * n + i_s
+        h = ot * c / jnp.maximum(n, 1e-6)
+        return (h, c, n, m_new), h
+
+    xs = tuple(a.transpose(1, 0, 2, 3).astype(jnp.float32) for a in (x_z, x_i, x_f, x_o))
+    # unroll: gives XLA's AllReduceReassociate a window to merge the
+    # per-step dR reductions in the transpose (8 psums -> 1 per window)
+    T = x_z.shape[1]
+    unroll = 8 if T % 8 == 0 else 1
+    (h, c, n, m), hs = jax.lax.scan(step, (h0, c0, n0, m0), xs, unroll=unroll)
+    return hs.transpose(1, 0, 2, 3), (h, c, n, m)
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+
+def xlstm_dims(cfg: ArchConfig):
+    d_inner = 2 * cfg.d_model          # mLSTM projection factor 2
+    dh_m = d_inner // cfg.n_heads
+    dh_s = cfg.d_model // cfg.n_heads
+    return d_inner, dh_m, dh_s
+
+
+def mlstm_block_specs(cfg: ArchConfig, n: int) -> dict:
+    D = cfg.d_model
+    d_inner, dh, _ = xlstm_dims(cfg)
+    H = cfg.n_heads
+    L, ll = (n,), (None,)
+    dt = jnp.dtype(cfg.param_dtype)
+    return {
+        "ln": ParamSpec(L + (D,), ll + (None,), dt, init_scale=0.0),
+        "w_up": ParamSpec(L + (D, 2 * d_inner), ll + ("fsdp", "tp"), dt),
+        "conv_w": ParamSpec(L + (4, d_inner), ll + (None, "tp"), dt),
+        "conv_b": ParamSpec(L + (d_inner,), ll + ("tp",), dt, init_scale=0.0),
+        "wq": ParamSpec(L + (d_inner, d_inner), ll + ("fsdp", "tp"), dt),
+        "wk": ParamSpec(L + (d_inner, d_inner), ll + ("fsdp", "tp"), dt),
+        "wv": ParamSpec(L + (d_inner, d_inner), ll + ("fsdp", "tp"), dt),
+        "w_gates": ParamSpec(L + (d_inner, 2 * H), ll + ("fsdp", None), dt),
+        "b_gates": ParamSpec(L + (2 * H,), ll + (None,), dt, init_scale=0.0),
+        "out_ln": ParamSpec(L + (d_inner,), ll + (None,), dt, init_scale=0.0),
+        "w_down": ParamSpec(L + (d_inner, D), ll + ("tp", "fsdp"), dt),
+    }
+
+
+def slstm_block_specs(cfg: ArchConfig, n: int) -> dict:
+    D = cfg.d_model
+    H = cfg.n_heads
+    dh = D // H
+    f = max(int(np.ceil(4 * D / 3 / 64) * 64), 64)   # 4/3 GLU, lane-aligned
+    L, ll = (n,), (None,)
+    dt = jnp.dtype(cfg.param_dtype)
+    return {
+        "ln": ParamSpec(L + (D,), ll + (None,), dt, init_scale=0.0),
+        "conv_w": ParamSpec(L + (4, D), ll + (None, None), dt),
+        "conv_b": ParamSpec(L + (D,), ll + (None,), dt, init_scale=0.0),
+        "w_in": ParamSpec(L + (D, 4 * D), ll + ("fsdp", "tp"), dt),
+        "b_in": ParamSpec(L + (4 * D,), ll + (None,), dt, init_scale=0.0),
+        "r_z": ParamSpec(L + (H, dh, dh), ll + (None, None, None), dt),
+        "r_i": ParamSpec(L + (H, dh, dh), ll + (None, None, None), dt),
+        "r_f": ParamSpec(L + (H, dh, dh), ll + (None, None, None), dt),
+        "r_o": ParamSpec(L + (H, dh, dh), ll + (None, None, None), dt),
+        "out_ln": ParamSpec(L + (D,), ll + (None,), dt, init_scale=0.0),
+        "w_up1": ParamSpec(L + (D, f), ll + ("fsdp", "tp"), dt),
+        "w_up2": ParamSpec(L + (D, f), ll + ("fsdp", "tp"), dt),
+        "w_down": ParamSpec(L + (f, D), ll + ("tp", "fsdp"), dt),
+    }
+
+
+def mlstm_block_fwd(cfg, rules, x, bp, *, chunk: int = 128, conv_state=None,
+                    cell_state=None, decode: bool = False):
+    """x: (B,T,D) (T=1 with states for decode).  Returns (x', states)."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    d_inner, dh, _ = xlstm_dims(cfg)
+    H = cfg.n_heads
+    B, T = x.shape[:2]
+    h = rms_norm(x, bp["ln"], cfg.norm_eps)
+    up = jnp.einsum("btd,dk->btk", h, bp["w_up"].astype(cdt))
+    a, z = jnp.split(up, 2, axis=-1)
+    c, conv_state = _causal_conv(a, bp["conv_w"].astype(cdt), bp["conv_b"].astype(cdt), conv_state)
+    c = jax.nn.silu(c)
+    q = jnp.einsum("btk,kj->btj", c, bp["wq"].astype(cdt)).reshape(B, T, H, dh)
+    k = jnp.einsum("btk,kj->btj", c, bp["wk"].astype(cdt)).reshape(B, T, H, dh)
+    v = jnp.einsum("btk,kj->btj", a, bp["wv"].astype(cdt)).reshape(B, T, H, dh)
+    gates = jnp.einsum("btk,kj->btj", a, bp["w_gates"].astype(cdt)) + bp["b_gates"].astype(cdt)
+    i_pre, f_pre = jnp.split(gates, 2, axis=-1)          # (B,T,H)
+
+    if decode:
+        cell_state, y = mlstm_decode_step(
+            cell_state, q[:, 0], k[:, 0], v[:, 0], i_pre[:, 0], f_pre[:, 0]
+        )
+        y = y[:, None]
+    else:
+        y, cell_state = mlstm_chunked(q, k, v, i_pre, f_pre, chunk=chunk,
+                                      return_state=True)
+    y = y.reshape(B, T, d_inner)
+    y = rms_norm(y, bp["out_ln"], cfg.norm_eps) * jax.nn.silu(z)
+    out = jnp.einsum("btk,kd->btd", y, bp["w_down"].astype(cdt))
+    out = constrain(x + out, rules, "dp", "sp", None)
+    return out, (conv_state, cell_state)
+
+
+def slstm_block_fwd(cfg, rules, x, bp, *, conv_state=None, cell_state=None,
+                    decode: bool = False):
+    cdt = jnp.dtype(cfg.compute_dtype)
+    D = cfg.d_model
+    H = cfg.n_heads
+    dh = D // H
+    B, T = x.shape[:2]
+    h = rms_norm(x, bp["ln"], cfg.norm_eps)
+    c, conv_state = _causal_conv(h, bp["conv_w"].astype(cdt), bp["conv_b"].astype(cdt), conv_state)
+    c = jax.nn.silu(c)
+    pre = jnp.einsum("btd,dk->btk", c, bp["w_in"].astype(cdt)) + bp["b_in"].astype(cdt)
+    xz, xi, xf, xo = [p.reshape(B, T, H, dh) for p in jnp.split(pre, 4, axis=-1)]
+
+    if cell_state is None:
+        h0 = jnp.zeros((B, H, dh), jnp.float32)
+        c0 = jnp.zeros((B, H, dh), jnp.float32)
+        n0 = jnp.zeros((B, H, dh), jnp.float32)
+        m0 = jnp.full((B, H, dh), -1e30, jnp.float32)
+    else:
+        h0, c0, n0, m0 = cell_state
+    rz, ri, rf, ro = (bp[k_].astype(jnp.float32) for k_ in ("r_z", "r_i", "r_f", "r_o"))
+    hs, cell_state = slstm_scan(xz, xi, xf, xo, rz, ri, rf, ro, h0, c0, n0, m0)
+    y = hs.reshape(B, T, D).astype(cdt)
+    y = rms_norm(y, bp["out_ln"], cfg.norm_eps)
+    g = jnp.einsum("btd,df->btf", y, bp["w_up1"].astype(cdt))
+    u = jnp.einsum("btd,df->btf", y, bp["w_up2"].astype(cdt))
+    out = jnp.einsum("btf,fd->btd", jax.nn.gelu(g) * u, bp["w_down"].astype(cdt))
+    out = constrain(x + out, rules, "dp", "sp", None)
+    return out, (conv_state, cell_state)

@@ -1,0 +1,203 @@
+"""xLSTM-LM assembly [arXiv:2405.04517]: ``slstm_every - 1`` mLSTM blocks
+followed by one sLSTM block, repeated (7:1 ratio for xlstm-1.3b).
+Attention-free: decoding is O(1)-state, which is what qualifies this arch
+for the 500k-token long-context shape.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from .common import (
+    ParamSpec, ShardRules, constrain, cross_entropy_loss, init_tree, rms_norm,
+)
+from .xlstm import (
+    mlstm_block_fwd, mlstm_block_specs, slstm_block_fwd, slstm_block_specs,
+    xlstm_dims,
+)
+
+
+def _layout(cfg: ArchConfig) -> tuple[int, int, int]:
+    """(n_segments, mlstm_per_segment, n_slstm)."""
+    k = cfg.slstm_every
+    assert cfg.n_layers % k == 0, "n_layers must divide slstm_every"
+    segs = cfg.n_layers // k
+    return segs, k - 1, segs
+
+
+def param_specs(cfg: ArchConfig) -> dict:
+    segs, per, n_s = _layout(cfg)
+    D = cfg.d_model
+    dt = jnp.dtype(cfg.param_dtype)
+    return {
+        "embed": ParamSpec((cfg.vocab, D), ("tp", "fsdp"), dt),
+        "ln_f": ParamSpec((D,), (None,), dt, init_scale=0.0),
+        "unembed": ParamSpec((D, cfg.vocab), ("fsdp", "tp"), dt),
+        "mlstm": mlstm_block_specs(cfg, segs * per),
+        "slstm": slstm_block_specs(cfg, n_s),
+    }
+
+
+def init(cfg: ArchConfig, key) -> dict:
+    return init_tree(key, param_specs(cfg))
+
+
+def _embed(cfg, params, tokens):
+    cdt = jnp.dtype(cfg.compute_dtype)
+    return jnp.take(params["embed"].astype(cdt), tokens, axis=0)
+
+
+def forward(cfg, mesh, rules, params, tokens, *, remat=True, collect=False):
+    x = _embed(cfg, params, tokens)
+    x = constrain(x, rules, "dp", "sp", None)
+    segs, per, _ = _layout(cfg)
+    m_states, s_states = [], []
+    for si in range(segs):
+        if per:
+            seg_bp = jax.tree.map(
+                lambda p: p[si * per:(si + 1) * per], params["mlstm"]
+            )
+
+            def body(x, bp):
+                x, st = mlstm_block_fwd(cfg, rules, x, bp)
+                return x, (st if collect else None)
+
+            from .common import remat_wrap
+            body = remat_wrap(body, remat)
+            x, st = jax.lax.scan(body, x, seg_bp)
+            m_states.append(st)
+        sbp = jax.tree.map(lambda p: p[si], params["slstm"])
+        x, sst = slstm_block_fwd(cfg, rules, x, sbp)
+        s_states.append(sst if collect else None)
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    if collect:
+        mst = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *m_states) \
+            if m_states else None
+        sst = jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *s_states)
+        return x, (mst, sst)
+    return x, None
+
+
+def loss_fn(cfg, mesh, rules, params, batch, *, remat=True):
+    tokens = batch["tokens"]
+    inp, labels = tokens[:, :-1], tokens[:, 1:]
+    hidden, _ = forward(cfg, mesh, rules, params, inp, remat=remat)
+    cdt = jnp.dtype(cfg.compute_dtype)
+    logits = jnp.einsum("bsd,dv->bsv", hidden, params["unembed"].astype(cdt))
+    logits = constrain(logits, rules, "dp", None, "tp")
+    loss = cross_entropy_loss(logits, labels)
+    return loss, {"ce_loss": loss, "lb_loss": jnp.float32(0.0),
+                  "drop_frac": jnp.float32(0.0)}
+
+
+# ---------------------------------------------------------------------------
+# Serving (stateful, cache = recurrent states; no KV)
+# ---------------------------------------------------------------------------
+
+
+def make_cache_specs(cfg: ArchConfig, batch: int, max_len: int):
+    """max_len is irrelevant for a recurrence — state is O(1) in seq."""
+    segs, per, n_s = _layout(cfg)
+    d_inner, dh_m, dh_s = xlstm_dims(cfg)
+    H = cfg.n_heads
+    nm = segs * per
+    f32 = jnp.float32
+    cdt = jnp.dtype(cfg.compute_dtype)
+    return {
+        "m_conv": jax.ShapeDtypeStruct((nm, batch, 3, d_inner), cdt),
+        "m_C": jax.ShapeDtypeStruct((nm, batch, H, dh_m, dh_m), f32),
+        "m_n": jax.ShapeDtypeStruct((nm, batch, H, dh_m), f32),
+        "m_m": jax.ShapeDtypeStruct((nm, batch, H), f32),
+        "s_conv": jax.ShapeDtypeStruct((n_s, batch, 3, cfg.d_model), cdt),
+        "s_h": jax.ShapeDtypeStruct((n_s, batch, H, dh_s), f32),
+        "s_c": jax.ShapeDtypeStruct((n_s, batch, H, dh_s), f32),
+        "s_n": jax.ShapeDtypeStruct((n_s, batch, H, dh_s), f32),
+        "s_m": jax.ShapeDtypeStruct((n_s, batch, H, dh_s), f32),
+    }
+
+
+def cache_pspec(cfg: ArchConfig, dec) -> dict:
+    from jax.sharding import PartitionSpec as P
+    b = dec.batch_axes or None
+    tp = "model" if "model" in dec.mesh.axis_names else None
+    return {
+        "m_conv": P(None, b, None, tp),
+        "m_C": P(None, b, None, None, tp),
+        "m_n": P(None, b, None, None),
+        "m_m": P(None, b, None),
+        "s_conv": P(None, b, None, None),
+        "s_h": P(None, b, None, None),
+        "s_c": P(None, b, None, None),
+        "s_n": P(None, b, None, None),
+        "s_m": P(None, b, None, None),
+    }
+
+
+def _pack_cache(mst, sst):
+    return {
+        "m_conv": mst[0], "m_C": mst[1][0], "m_n": mst[1][1], "m_m": mst[1][2],
+        "s_conv": sst[0], "s_h": sst[1][0], "s_c": sst[1][1],
+        "s_n": sst[1][2], "s_m": sst[1][3],
+    }
+
+
+def prefill(cfg, mesh, rules, params, tokens, img_embeds=None, *, max_len=None):
+    from .attention import DecodeSharding
+    hidden, (mst, sst) = forward(
+        cfg, mesh, rules, params, tokens, remat=False, collect=True
+    )
+    cache = _pack_cache(mst, sst)
+    dec = DecodeSharding.choose(mesh, tokens.shape[0])
+    specs = cache_pspec(cfg, dec)
+    from .common import constrain_spec
+    cache = {n: constrain_spec(c, mesh, specs[n]) for n, c in cache.items()}
+    cdt = jnp.dtype(cfg.compute_dtype)
+    logits = jnp.einsum("bd,dv->bv", hidden[:, -1], params["unembed"].astype(cdt))
+    return cache, logits
+
+
+def decode_step(cfg, mesh, rules, params, cache, tokens, cur_index):
+    x = _embed(cfg, params, tokens[:, None])
+    segs, per, _ = _layout(cfg)
+    mc, sc = [], []
+    for si in range(segs):
+        if per:
+            sl = slice(si * per, (si + 1) * per)
+            seg_bp = jax.tree.map(lambda p: p[sl], params["mlstm"])
+
+            def body(x, xs):
+                bp, conv, C, n, m = xs
+                x, (conv, cell) = mlstm_block_fwd(
+                    cfg, rules, x, bp, conv_state=conv, cell_state=(C, n, m),
+                    decode=True,
+                )
+                return x, (conv, cell[0], cell[1], cell[2])
+
+            x, st = jax.lax.scan(
+                body, x,
+                (seg_bp, cache["m_conv"][sl], cache["m_C"][sl],
+                 cache["m_n"][sl], cache["m_m"][sl]),
+            )
+            mc.append(st)
+        sbp = jax.tree.map(lambda p: p[si], params["slstm"])
+        x, (conv, cell) = slstm_block_fwd(
+            cfg, rules, x, sbp,
+            conv_state=cache["s_conv"][si],
+            cell_state=(cache["s_h"][si], cache["s_c"][si],
+                        cache["s_n"][si], cache["s_m"][si]),
+            decode=True,
+        )
+        sc.append((conv,) + cell)
+    x = rms_norm(x[:, 0], params["ln_f"], cfg.norm_eps)
+    cdt = jnp.dtype(cfg.compute_dtype)
+    logits = jnp.einsum("bd,dv->bv", x, params["unembed"].astype(cdt))
+    mcat = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *mc)
+    scat = [jnp.stack([s[i] for s in sc]) for i in range(5)]
+    new_cache = {
+        "m_conv": mcat[0], "m_C": mcat[1], "m_n": mcat[2], "m_m": mcat[3],
+        "s_conv": scat[0], "s_h": scat[1], "s_c": scat[2],
+        "s_n": scat[3], "s_m": scat[4],
+    }
+    return logits, new_cache

@@ -1,0 +1,252 @@
+"""Zamba2 hybrid assembly [arXiv:2411.15242]: a stack of Mamba2 layers with
+a single *shared* transformer block (attention + MLP) applied every
+``attn_every`` layers, taking concat(hidden, original embedding) as input
+(Zamba's global skip), projected back to d_model.
+
+Simplifications vs the released checkpoints (noted in DESIGN.md): the
+per-invocation LoRA deltas on the shared block are omitted; the shared
+block's attention operates at d_model (after the concat projection) rather
+than 2*d_model.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from .attention import DecodeSharding, chunked_attention, decode_attention, rope
+from .common import (
+    ParamSpec, ShardRules, constrain, cross_entropy_loss, init_tree, rms_norm,
+)
+from .ssm import (
+    mamba_block_decode, mamba_block_fwd, mamba_block_specs, mamba_dims,
+    mamba_state_specs,
+)
+
+
+def _segments(cfg: ArchConfig) -> list[int]:
+    """Layer counts between shared-block invocations."""
+    k = cfg.attn_every
+    segs, rem = [], cfg.n_layers
+    while rem > 0:
+        segs.append(min(k, rem))
+        rem -= k
+    return segs
+
+
+def n_shared_invocations(cfg: ArchConfig) -> int:
+    return len(_segments(cfg))
+
+
+def param_specs(cfg: ArchConfig) -> dict:
+    D, dh, H, Hk = cfg.d_model, cfg.head_dim, cfg.n_heads, cfg.n_kv
+    dt = jnp.dtype(cfg.param_dtype)
+    shared = {
+        "proj_in": ParamSpec((2 * D, D), ("fsdp", None), dt),
+        "ln1": ParamSpec((D,), (None,), dt, init_scale=0.0),
+        "wq": ParamSpec((D, H * dh), ("fsdp", "tp"), dt),
+        "wk": ParamSpec((D, Hk * dh), ("fsdp", "tp"), dt),
+        "wv": ParamSpec((D, Hk * dh), ("fsdp", "tp"), dt),
+        "wo": ParamSpec((H * dh, D), ("tp", "fsdp"), dt),
+        "ln2": ParamSpec((D,), (None,), dt, init_scale=0.0),
+        "wg": ParamSpec((D, cfg.d_ff), ("fsdp", "tp"), dt),
+        "wu": ParamSpec((D, cfg.d_ff), ("fsdp", "tp"), dt),
+        "wd": ParamSpec((cfg.d_ff, D), ("tp", "fsdp"), dt),
+    }
+    return {
+        "embed": ParamSpec((cfg.vocab, D), ("tp", "fsdp"), dt),
+        "ln_f": ParamSpec((D,), (None,), dt, init_scale=0.0),
+        "unembed": ParamSpec((D, cfg.vocab), ("fsdp", "tp"), dt),
+        "mamba": mamba_block_specs(cfg, cfg.n_layers),
+        "shared": shared,
+    }
+
+
+def init(cfg: ArchConfig, key) -> dict:
+    return init_tree(key, param_specs(cfg))
+
+
+# ---------------------------------------------------------------------------
+
+
+def _shared_fwd(cfg, mesh, rules, x, x0, sp, *, collect_kv: bool):
+    """Shared transformer block. x/x0: (B,S,D). Returns (x', (k,v)|None)."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    B, S, D = x.shape
+    dh, H, Hk = cfg.head_dim, cfg.n_heads, cfg.n_kv
+    u = jnp.concatenate([rms_norm(x, sp["ln1"], cfg.norm_eps), x0], axis=-1)
+    u = jnp.einsum("bsd,dk->bsk", u, sp["proj_in"].astype(cdt))
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    q = jnp.einsum("bsd,dk->bsk", u, sp["wq"].astype(cdt)).reshape(B, S, H, dh)
+    k = jnp.einsum("bsd,dk->bsk", u, sp["wk"].astype(cdt)).reshape(B, S, Hk, dh)
+    v = jnp.einsum("bsd,dk->bsk", u, sp["wv"].astype(cdt)).reshape(B, S, Hk, dh)
+    q = rope(q, positions, cfg.rope_theta)
+    kr = rope(k, positions, cfg.rope_theta)
+    attn = chunked_attention(
+        q, kr, v, causal=True,
+        q_chunk=min(256, S), kv_chunk=min(256, S),
+    )
+    o = jnp.einsum("bsk,kd->bsd", attn.reshape(B, S, -1), sp["wo"].astype(cdt))
+    x = constrain(x + o, rules, "dp", "sp", None)
+    h = rms_norm(x, sp["ln2"], cfg.norm_eps)
+    g = jnp.einsum("bsd,df->bsf", h, sp["wg"].astype(cdt))
+    uu = jnp.einsum("bsd,df->bsf", h, sp["wu"].astype(cdt))
+    f = jnp.einsum("bsf,fd->bsd", jax.nn.silu(g) * uu, sp["wd"].astype(cdt))
+    x = constrain(x + f, rules, "dp", "sp", None)
+    return x, ((kr, v) if collect_kv else None)
+
+
+def _shared_decode(cfg, mesh, rules, x, x0, sp, kc, vc, cur_index, dec):
+    cdt = jnp.dtype(cfg.compute_dtype)
+    B, D = x.shape
+    dh, H, Hk = cfg.head_dim, cfg.n_heads, cfg.n_kv
+    u = jnp.concatenate([rms_norm(x, sp["ln1"], cfg.norm_eps), x0], axis=-1)
+    u = jnp.einsum("bd,dk->bk", u, sp["proj_in"].astype(cdt))
+    q = jnp.einsum("bd,dk->bk", u, sp["wq"].astype(cdt)).reshape(B, H, dh)
+    k = jnp.einsum("bd,dk->bk", u, sp["wk"].astype(cdt)).reshape(B, Hk, dh)
+    v = jnp.einsum("bd,dk->bk", u, sp["wv"].astype(cdt)).reshape(B, Hk, dh)
+    pos = jnp.full((B, 1), cur_index, jnp.int32)
+    q = rope(q[:, None], pos, cfg.rope_theta)[:, 0].reshape(B, Hk, H // Hk, dh)
+    k = rope(k[:, None], pos, cfg.rope_theta)[:, 0]
+    attn, kc, vc = decode_attention(q, kc, vc, k, v, cur_index, sharding=dec)
+    o = jnp.einsum("bk,kd->bd", attn.reshape(B, H * dh), sp["wo"].astype(cdt))
+    x = x + o
+    h = rms_norm(x, sp["ln2"], cfg.norm_eps)
+    g = jnp.einsum("bd,df->bf", h, sp["wg"].astype(cdt))
+    uu = jnp.einsum("bd,df->bf", h, sp["wu"].astype(cdt))
+    f = jnp.einsum("bf,fd->bd", jax.nn.silu(g) * uu, sp["wd"].astype(cdt))
+    return x + f, kc, vc
+
+
+def _embed(cfg, params, tokens):
+    cdt = jnp.dtype(cfg.compute_dtype)
+    return jnp.take(params["embed"].astype(cdt), tokens, axis=0)
+
+
+def forward(cfg, mesh, rules, params, tokens, *, remat=True, collect=False):
+    """Returns (hidden, shared_kv list, mamba final states or None)."""
+    x = _embed(cfg, params, tokens)
+    x0 = x
+    x = constrain(x, rules, "dp", "sp", None)
+    segs = _segments(cfg)
+    kvs, states = [], []
+    off = 0
+    for n in segs:
+        x, kv = _shared_fwd(cfg, mesh, rules, x, x0, params["shared"], collect_kv=collect)
+        kvs.append(kv)
+        seg_bp = jax.tree.map(lambda p: p[off:off + n], params["mamba"])
+
+        def body(x, bp):
+            if collect:
+                x, st = mamba_block_fwd(cfg, rules, x, bp, return_state=True)
+                return x, st
+            return mamba_block_fwd(cfg, rules, x, bp), None
+
+        from .common import remat_wrap
+        body = remat_wrap(body, remat)
+        x, st = jax.lax.scan(body, x, seg_bp)
+        states.append(st)
+        off += n
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    if collect:
+        ssm = jnp.concatenate([s[0] for s in states], axis=0)
+        conv = jnp.concatenate([s[1] for s in states], axis=0)
+        k = jnp.stack([kv[0] for kv in kvs])
+        v = jnp.stack([kv[1] for kv in kvs])
+        return x, {"k": k, "v": v, "ssm": ssm, "conv": conv}
+    return x, None
+
+
+def loss_fn(cfg, mesh, rules, params, batch, *, remat=True):
+    tokens = batch["tokens"]
+    inp, labels = tokens[:, :-1], tokens[:, 1:]
+    hidden, _ = forward(cfg, mesh, rules, params, inp, remat=remat)
+    cdt = jnp.dtype(cfg.compute_dtype)
+    logits = jnp.einsum("bsd,dv->bsv", hidden, params["unembed"].astype(cdt))
+    logits = constrain(logits, rules, "dp", None, "tp")
+    loss = cross_entropy_loss(logits, labels)
+    return loss, {"ce_loss": loss, "lb_loss": jnp.float32(0.0),
+                  "drop_frac": jnp.float32(0.0)}
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+
+def make_cache_specs(cfg: ArchConfig, batch: int, max_len: int):
+    ns = n_shared_invocations(cfg)
+    ms = mamba_state_specs(cfg, cfg.n_layers, batch)
+    kv = jax.ShapeDtypeStruct(
+        (ns, batch, max_len, cfg.n_kv, cfg.head_dim), jnp.dtype(cfg.compute_dtype)
+    )
+    return {"k": kv, "v": kv, "ssm": ms["ssm"], "conv": ms["conv"]}
+
+
+def cache_pspec(cfg: ArchConfig, dec: DecodeSharding):
+    from jax.sharding import PartitionSpec as P
+    b = dec.batch_axes or None
+    s = dec.seq_axes or None
+    return {
+        "k": P(None, b, s, None, None),
+        "v": P(None, b, s, None, None),
+        "ssm": P(None, b, None, None, None),
+        "conv": P(None, b, None, None),
+    }
+
+
+def prefill(cfg, mesh, rules, params, tokens, img_embeds=None, *, max_len=None):
+    hidden, cache = forward(cfg, mesh, rules, params, tokens, remat=False, collect=True)
+    dec = DecodeSharding.choose(mesh, tokens.shape[0])
+
+    def pad(c):
+        if max_len and max_len > c.shape[2]:
+            pw = [(0, 0)] * c.ndim
+            pw[2] = (0, max_len - c.shape[2])
+            c = jnp.pad(c, pw)
+        return c
+
+    cache["k"], cache["v"] = pad(cache["k"]), pad(cache["v"])
+    specs = cache_pspec(cfg, dec)
+    from .common import constrain_spec
+    cache = {n: constrain_spec(c, mesh, specs[n]) for n, c in cache.items()}
+    cdt = jnp.dtype(cfg.compute_dtype)
+    logits = jnp.einsum("bd,dv->bv", hidden[:, -1], params["unembed"].astype(cdt))
+    return cache, logits
+
+
+def decode_step(cfg, mesh, rules, params, cache, tokens, cur_index):
+    x = _embed(cfg, params, tokens[:, None])[:, 0]
+    x0 = x
+    dec = DecodeSharding.choose(mesh, tokens.shape[0])
+    segs = _segments(cfg)
+    k_out, v_out, ssm_out, conv_out = [], [], [], []
+    off = 0
+    for si, n in enumerate(segs):
+        x, kc, vc = _shared_decode(
+            cfg, mesh, rules, x, x0, params["shared"],
+            cache["k"][si], cache["v"][si], cur_index, dec,
+        )
+        k_out.append(kc); v_out.append(vc)
+        seg_bp = jax.tree.map(lambda p: p[off:off + n], params["mamba"])
+        seg_ssm = cache["ssm"][off:off + n]
+        seg_conv = cache["conv"][off:off + n]
+
+        def body(x, xs):
+            bp, s_ssm, s_conv = xs
+            x, s_ssm, s_conv = mamba_block_decode(cfg, rules, x, bp, s_ssm, s_conv)
+            return x, (s_ssm, s_conv)
+
+        x, (new_ssm, new_conv) = jax.lax.scan(body, x, (seg_bp, seg_ssm, seg_conv))
+        ssm_out.append(new_ssm); conv_out.append(new_conv)
+        off += n
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    cdt = jnp.dtype(cfg.compute_dtype)
+    logits = jnp.einsum("bd,dv->bv", x, params["unembed"].astype(cdt))
+    new_cache = {
+        "k": jnp.stack(k_out), "v": jnp.stack(v_out),
+        "ssm": jnp.concatenate(ssm_out, axis=0),
+        "conv": jnp.concatenate(conv_out, axis=0),
+    }
+    return logits, new_cache

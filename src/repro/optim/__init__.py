@@ -1,0 +1,11 @@
+from .flat import FlatLayout, flat_adam_update, flatten, make_layout, unflatten
+from .rules import (
+    OptConfig, apply_update, clip_by_global_norm, global_norm, init_state,
+    state_pspecs,
+)
+
+__all__ = [
+    "FlatLayout", "flat_adam_update", "flatten", "make_layout", "unflatten",
+    "OptConfig", "apply_update", "clip_by_global_norm", "global_norm",
+    "init_state", "state_pspecs",
+]

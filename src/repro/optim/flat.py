@@ -1,0 +1,78 @@
+"""Flattened-parameter buffers (paper §3.3).
+
+"These store the gradients of all variables into one (flattened) array for
+faster inter-GPU communication": a single contiguous fp32 buffer means the
+gradient all-reduce is ONE collective instead of one per parameter, and the
+optimizer update is one fused elementwise pass (see kernels/flat_adam for
+the Pallas version).  The buffer is padded to a multiple of ``align`` so it
+shards evenly over any mesh axis (ZeRO over fsdp).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class FlatLayout:
+    treedef: Any
+    shapes: tuple[tuple[int, ...], ...]
+    dtypes: tuple[Any, ...]
+    offsets: tuple[int, ...]
+    sizes: tuple[int, ...]
+    total: int                      # padded length
+
+    @property
+    def unpadded(self) -> int:
+        return self.offsets[-1] + self.sizes[-1] if self.sizes else 0
+
+
+def make_layout(tree, align: int = 512) -> FlatLayout:
+    leaves, treedef = jax.tree.flatten(tree)
+    shapes = tuple(tuple(l.shape) for l in leaves)
+    dtypes = tuple(l.dtype for l in leaves)
+    sizes = tuple(int(np.prod(s, dtype=np.int64)) for s in shapes)
+    offsets, off = [], 0
+    for s in sizes:
+        offsets.append(off)
+        off += s
+    total = int(np.ceil(off / align) * align) if off else align
+    return FlatLayout(treedef, shapes, dtypes, tuple(offsets), sizes, total)
+
+
+def flatten(layout: FlatLayout, tree, dtype=jnp.float32) -> jnp.ndarray:
+    leaves = jax.tree.flatten(tree)[0]
+    parts = [l.astype(dtype).reshape(-1) for l in leaves]
+    pad = layout.total - layout.unpadded
+    if pad:
+        parts.append(jnp.zeros((pad,), dtype))
+    return jnp.concatenate(parts) if parts else jnp.zeros((layout.total,), dtype)
+
+
+def unflatten(layout: FlatLayout, buf: jnp.ndarray):
+    leaves = []
+    for off, size, shape, dt in zip(
+        layout.offsets, layout.sizes, layout.shapes, layout.dtypes
+    ):
+        leaves.append(jax.lax.dynamic_slice_in_dim(buf, off, size).reshape(shape).astype(dt))
+    return jax.tree.unflatten(layout.treedef, leaves)
+
+
+# ---------------------------------------------------------------------------
+# Flat Adam (reference; the Pallas kernel in kernels/flat_adam fuses this)
+# ---------------------------------------------------------------------------
+
+
+def flat_adam_update(p, g, m, v, step, *, lr, beta1=0.9, beta2=0.95, eps=1e-8):
+    """One fused elementwise pass over the flat buffers (all fp32 1-D)."""
+    m = beta1 * m + (1 - beta1) * g
+    v = beta2 * v + (1 - beta2) * g * g
+    t = step.astype(jnp.float32)
+    mhat = m / (1 - beta1 ** t)
+    vhat = v / (1 - beta2 ** t)
+    p = p - lr * mhat / (jnp.sqrt(vhat) + eps)
+    return p, m, v

@@ -1,0 +1,11 @@
+from .analysis import (
+    HBM_BW, ICI_BW, PEAK_FLOPS,
+    CollectiveStats, collective_summary, model_flops, parse_collectives,
+    roofline_terms, summarize_cell,
+)
+
+__all__ = [
+    "HBM_BW", "ICI_BW", "PEAK_FLOPS",
+    "CollectiveStats", "collective_summary", "model_flops",
+    "parse_collectives", "roofline_terms", "summarize_cell",
+]

@@ -1,0 +1,452 @@
+"""Trip-count-aware static cost analysis over compiled HLO text.
+
+``compiled.cost_analysis()`` counts each ``while`` body ONCE, so any model
+built on ``lax.scan`` (layers, microbatches, attention chunks) is
+undercounted by the trip count.  XLA records the statically-known trip
+count on each while op (``backend_config={"known_trip_count":{"n":...}}``),
+so exact accounting is recoverable from the artifact itself:
+
+    total(op) = op_cost x prod(trip counts of enclosing whiles)
+
+This module parses the optimized HLO module text, builds the computation
+call graph (while bodies, fusions, calls, conditionals), and accumulates:
+
+* FLOPs        — exact for ``dot`` (2 x prod(result) x prod(contracting)),
+                 1/elem for elementwise arithmetic, recursed into fusions;
+* bytes        — operand + result bytes per memory-touching op (fusion
+                 interiors excluded, matching HloCostAnalysis semantics);
+* collectives  — ring wire volume per participant, times multiplicity.
+
+Validated against ``compiled.cost_analysis()`` on fully-unrolled probes
+(tests/test_roofline.py) where both must agree.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1,
+    "pred": 1, "c64": 8, "c128": 16, "token": 0, "s4": 1, "u4": 1,
+}
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*(?:\([^)]*\))?.*\{\s*$")
+_INSTR = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\(?.*?\)?)\s+([\w\-]+)\((.*)$"
+)
+_SHAPE = re.compile(r"([a-z]\d*[a-z0-9]*)\[([0-9,]*)\]")
+_TRIP = re.compile(r'known_trip_count[^\d]*(\d+)')
+_CALLS = re.compile(r"(?:calls|to_apply|body)=%?([\w.\-]+)")
+_COND_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_LHS_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_GROUPS_IOTA = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_EXPL = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+
+# ops that move no data / are free
+_FREE = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota",
+}
+# transcendental-ish elementwise (count a few flops per element)
+_TRANSCENDENTAL = {
+    "exponential", "log", "tanh", "rsqrt", "sqrt", "power", "logistic",
+    "sine", "cosine", "erf", "exponential-minus-one", "log-plus-one", "atan2",
+}
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "negate", "compare", "select", "and", "or", "not", "xor", "clamp",
+    "floor", "ceil", "round-nearest-afz", "round-nearest-even", "sign",
+    "shift-left", "shift-right-logical", "shift-right-arithmetic", "remainder",
+}
+_COLLECTIVES = {
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "all-reduce-start", "all-gather-start",
+    "collective-permute-start", "all-to-all-start", "reduce-scatter-start",
+}
+
+
+def _shape_elems_bytes(type_str: str) -> tuple[int, int]:
+    elems = bytes_ = 0
+    for dt, dims in _SHAPE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        bytes_ += n * _DTYPE_BYTES[dt]
+    return elems, bytes_
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    op: str
+    rest: str          # operands + attributes (single line)
+    elems: int
+    bytes: int
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: list
+
+
+@dataclasses.dataclass
+class CollectiveRecord:
+    op: str
+    result_bytes: int
+    group_size: int
+    wire_bytes_once: int
+    multiplicity: float
+    count: int = 1
+    is_f32: bool = False
+
+    @property
+    def wire_bytes(self) -> float:
+        return self.wire_bytes_once * self.multiplicity * self.count
+
+    @property
+    def wire_bytes_bf16(self) -> float:
+        """TPU-normalised: f32 tensors at matmul boundaries would be bf16."""
+        return self.wire_bytes * (0.5 if self.is_f32 else 1.0)
+
+
+def parse_module(text: str) -> tuple[dict, str]:
+    """Returns ({name: Computation}, entry_name)."""
+    comps: dict[str, Computation] = {}
+    entry = None
+    cur: Computation | None = None
+    hdr_start = re.compile(r"^(ENTRY\s+)?%[\w.\-]+\s*\(")
+    for line in text.splitlines():
+        if cur is None:
+            if line.rstrip().endswith("{") and hdr_start.match(line):
+                m = _COMP_HDR.match(line.strip())
+                if m:
+                    cur = Computation(m.group(1), [])
+                    if line.lstrip().startswith("ENTRY"):
+                        entry = cur.name
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _INSTR.match(line)
+        if m:
+            name, type_str, op, rest = m.groups()
+            elems, b = _shape_elems_bytes(type_str)
+            cur.instrs.append(Instr(name, type_str, op, rest, elems, b))
+    if cur is not None:
+        comps[cur.name] = cur
+    if entry is None:
+        # fall back: last computation
+        entry = list(comps)[-1]
+    return comps, entry
+
+
+def _wire_bytes(op: str, result_bytes: int, g: int) -> int:
+    op = op.replace("-start", "")
+    if g <= 1:
+        return 0
+    if op == "all-gather":
+        return int(result_bytes * (g - 1) / g)
+    if op == "reduce-scatter":
+        return int(result_bytes * (g - 1))
+    if op == "all-reduce":
+        return int(2 * result_bytes * (g - 1) / g)
+    if op == "all-to-all":
+        return int(result_bytes * (g - 1) / g)
+    if op == "collective-permute":
+        return result_bytes
+    return 0
+
+
+def _group_size(rest: str) -> int:
+    m = _GROUPS_IOTA.search(rest)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_EXPL.search(rest)
+    if m:
+        return len(m.group(1).split(","))
+    return 1
+
+
+class HloCost:
+    """Trip-count-aware cost walk.
+
+    Two TPU-normalisations of CPU-backend lowering artifacts (documented in
+    EXPERIMENTS.md §Roofline methodology):
+
+    * ``rs_pattern``: XLA:CPU lacks the ReduceScatterCreator pass, so a TP
+      partial-sum lowers as all-reduce + partition-offset dynamic-slice.
+      On TPU this is a reduce-scatter at half the wire bytes; all-reduces
+      whose only consumer is a dynamic-slice are charged as RS.
+    * ``bf16_wire``: XLA:CPU legalizes bf16 dots to f32 and elides the
+      casts, so every matmul-adjacent collective rides f32 (2x the TPU
+      wire).  ``collective_bf16_bytes`` reports f32 collectives at bf16.
+    """
+
+    def __init__(self, text: str, rs_pattern: bool = True):
+        self.comps, self.entry = parse_module(text)
+        self.symbols: dict[str, dict[str, Instr]] = {
+            c.name: {i.name: i for i in c.instrs} for c in self.comps.values()
+        }
+        self.flops = 0.0
+        self.bytes = 0.0
+        self.collectives: dict[tuple, CollectiveRecord] = {}
+        self._rs_names: dict[str, set] = {}
+        if rs_pattern:
+            self._find_rs_patterns()
+        self._walk(self.entry, 1.0, set())
+
+    def _find_rs_patterns(self):
+        """Per computation: names of all-reduce ops whose only consumer is a
+        dynamic-slice (the CPU lowering of reduce-scatter)."""
+        for comp in self.comps.values():
+            ar = {i.name for i in comp.instrs
+                  if i.op in ("all-reduce", "all-reduce-start")}
+            if not ar:
+                continue
+            consumers: dict[str, list] = {a: [] for a in ar}
+            for ins in comp.instrs:
+                ops_str = ins.rest.split(")")[0]
+                for tok in ops_str.split(","):
+                    tok = tok.strip().lstrip("%")
+                    if tok in consumers:
+                        consumers[tok].append(ins.op)
+            self._rs_names[comp.name] = {
+                a for a, cons in consumers.items()
+                if cons and all(c in ("dynamic-slice", "all-reduce-done")
+                                for c in cons)
+            }
+
+    # ------------------------------------------------------------------
+    def _dot_flops(self, comp: str, ins: Instr) -> float:
+        # first operand name
+        ops = ins.rest.split(")")[0]
+        first = ops.split(",")[0].strip().lstrip("%")
+        lhs = self.symbols[comp].get(first)
+        contract = 1
+        m = _LHS_CONTRACT.search(ins.rest)
+        if lhs is not None and m and m.group(1):
+            dims_m = _SHAPE.search(lhs.type_str)
+            if dims_m:
+                lhs_dims = [int(d) for d in dims_m.group(2).split(",") if d]
+                for idx in m.group(1).split(","):
+                    i = int(idx)
+                    if i < len(lhs_dims):
+                        contract *= lhs_dims[i]
+        return 2.0 * ins.elems * contract
+
+    def _walk(self, comp_name: str, mult: float, stack: set):
+        if comp_name not in self.comps or comp_name in stack:
+            return
+        comp = self.comps[comp_name]
+        stack = stack | {comp_name}
+        for ins in comp.instrs:
+            op = ins.op
+            if op in _FREE:
+                continue
+            if op in _COLLECTIVES:
+                if op.endswith("-done"):
+                    continue
+                g = _group_size(ins.rest)
+                opname = op.replace("-start", "")
+                if opname == "all-reduce" and \
+                        ins.name in self._rs_names.get(comp.name, ()):
+                    opname = "reduce-scatter(AR+slice)"
+                    wb = _wire_bytes("all-reduce", ins.bytes, g) // 2
+                else:
+                    wb = _wire_bytes(op, ins.bytes, g)
+                f32 = ins.type_str.lstrip("(").startswith("f32")
+                key = (opname, ins.bytes, g, mult)
+                rec = self.collectives.get(key)
+                if rec:
+                    rec.count += 1
+                else:
+                    self.collectives[key] = CollectiveRecord(
+                        opname, ins.bytes, g, wb, mult, is_f32=f32
+                    )
+                self.bytes += 2 * ins.bytes * mult
+                continue
+            if op == "while":
+                n = 1
+                m = _TRIP.search(ins.rest)
+                if m:
+                    n = int(m.group(1))
+                mcalls = re.findall(r"(?:body|condition)=%?([\w.\-]+)", ins.rest)
+                for callee in mcalls:
+                    self._walk(callee, mult * n, stack)
+                continue
+            if op == "conditional":
+                m = _COND_BRANCHES.search(ins.rest)
+                if m:
+                    for callee in m.group(1).split(","):
+                        self._walk(callee.strip().lstrip("%"), mult, stack)
+                continue
+            if op in ("fusion", "call", "map", "reduce", "reduce-window",
+                      "scatter", "sort", "custom-call", "async-start"):
+                # memory: result + effective operand bytes.  An operand that
+                # the fusion body only *slices* (dynamic-slice/gather: the
+                # per-layer weight slice of a scan-stacked parameter) is
+                # charged at the sliced size, not the full buffer.
+                callees = _CALLS.findall(ins.rest)
+                if op == "fusion" and callees:
+                    eff = self._fusion_operand_bytes(comp.name, ins, callees[0])
+                else:
+                    eff = self._operand_bytes(comp.name, ins)
+                self.bytes += (ins.bytes + eff) * mult
+                # flops: recurse into called computations (fusion interior)
+                for callee in _CALLS.findall(ins.rest):
+                    self._walk_flops_only(callee, mult, stack, scale=ins.elems
+                                          if op in ("reduce", "map", "reduce-window")
+                                          else 1)
+                continue
+            # indexing ops read/write only the sliced region, not the operand
+            if op in ("dynamic-slice", "slice", "gather"):
+                self.bytes += 2 * ins.bytes * mult
+                continue
+            if op in ("dynamic-update-slice",):
+                upd = self._nth_operand_bytes(comp.name, ins, 1)
+                self.bytes += 2 * upd * mult
+                continue
+            # plain op
+            self.bytes += (ins.bytes + self._operand_bytes(comp.name, ins)) * mult
+            if op == "dot":
+                self.flops += self._dot_flops(comp.name, ins) * mult
+            elif op == "convolution":
+                self.flops += 2.0 * ins.elems * mult  # lower bound
+            elif op in _TRANSCENDENTAL:
+                self.flops += 4.0 * ins.elems * mult
+            elif op in _ELEMENTWISE or op in ("convert", "reduce-precision"):
+                self.flops += 1.0 * ins.elems * mult
+
+    def _walk_flops_only(self, comp_name: str, mult: float, stack: set,
+                         scale: float = 1):
+        """Accumulate flops (not bytes) of a called computation."""
+        if comp_name not in self.comps or comp_name in stack:
+            return
+        comp = self.comps[comp_name]
+        stack = stack | {comp_name}
+        for ins in comp.instrs:
+            op = ins.op
+            if op in _FREE or op in _COLLECTIVES:
+                continue
+            if op == "dot":
+                self.flops += self._dot_flops(comp.name, ins) * mult
+            elif op in _TRANSCENDENTAL:
+                self.flops += 4.0 * ins.elems * mult
+            elif op in _ELEMENTWISE or op == "convert":
+                self.flops += 1.0 * ins.elems * mult
+            for callee in _CALLS.findall(ins.rest):
+                self._walk_flops_only(callee, mult, stack)
+
+    def _param_effective_bytes(self, callee: str) -> dict[int, int] | None:
+        """For a fusion computation: parameter index -> effective bytes for
+        params consumed ONLY by slice-like ops (else absent)."""
+        if callee not in self.comps:
+            return None
+        cache = getattr(self, "_eff_cache", None)
+        if cache is None:
+            cache = self._eff_cache = {}
+        if callee in cache:
+            return cache[callee]
+        comp = self.comps[callee]
+        params: dict[str, int] = {}      # name -> index
+        for ins in comp.instrs:
+            if ins.op == "parameter":
+                head = ins.rest.split(")")[0]
+                params[ins.name] = int(head) if head.isdigit() else len(params)
+        eff: dict[int, int] = {}
+        sliceish = {"dynamic-slice", "slice", "gather"}
+        for pname, pidx in params.items():
+            consumers = []
+            ok = True
+            for ins in comp.instrs:
+                if ins.op == "parameter":
+                    continue
+                ops_str = ins.rest.split(")")[0]
+                names = [t.strip().lstrip("%") for t in ops_str.split(",")]
+                if pname in names:
+                    if ins.op in sliceish and names[0] == pname:
+                        consumers.append(ins.bytes)
+                    elif ins.op == "dynamic-update-slice" and names[0] == pname:
+                        upd = self.symbols[callee].get(names[1] if len(names) > 1 else "")
+                        consumers.append(upd.bytes if upd else ins.bytes)
+                    else:
+                        ok = False
+                        break
+            if ok and consumers:
+                eff[pidx] = sum(consumers)
+        cache[callee] = eff
+        return eff
+
+    def _fusion_operand_bytes(self, comp: str, ins: Instr, callee: str) -> int:
+        eff = self._param_effective_bytes(callee)
+        ops_str = ins.rest.split(")")[0]
+        total = 0
+        for i, tok in enumerate(t.strip().lstrip("%") for t in ops_str.split(",")):
+            sym = self.symbols[comp].get(tok)
+            if sym is None:
+                continue
+            if eff is not None and i in eff:
+                total += min(eff[i], sym.bytes)
+            else:
+                total += sym.bytes
+        return total
+
+    def _nth_operand_bytes(self, comp: str, ins: Instr, n: int) -> int:
+        ops_str = ins.rest.split(")")[0]
+        toks = [t.strip().lstrip("%") for t in ops_str.split(",")]
+        if n < len(toks):
+            sym = self.symbols[comp].get(toks[n])
+            if sym is not None:
+                return sym.bytes
+        return ins.bytes
+
+    def _operand_bytes(self, comp: str, ins: Instr) -> int:
+        # operands: leading %name list before the closing paren
+        ops_str = ins.rest.split(")")[0]
+        total = 0
+        for tok in ops_str.split(","):
+            tok = tok.strip().lstrip("%")
+            sym = self.symbols[comp].get(tok)
+            if sym is not None:
+                total += sym.bytes
+        return total
+
+    # ------------------------------------------------------------------
+    def collective_summary(self) -> dict:
+        total = sum(r.wire_bytes for r in self.collectives.values())
+        total_bf16 = sum(r.wire_bytes_bf16 for r in self.collectives.values())
+        by_op: dict[str, float] = {}
+        for r in self.collectives.values():
+            by_op[r.op] = by_op.get(r.op, 0.0) + r.wire_bytes
+        return {
+            "total_wire_bytes": total,
+            "total_wire_bytes_bf16norm": total_bf16,
+            "by_op": by_op,
+            "n_collective_sites": len(self.collectives),
+        }
+
+    def top_collectives(self, k: int = 10) -> list[dict]:
+        recs = sorted(self.collectives.values(), key=lambda r: -r.wire_bytes)
+        return [
+            {
+                "op": r.op, "result_bytes": r.result_bytes,
+                "group_size": r.group_size, "multiplicity": r.multiplicity,
+                "count": r.count, "wire_bytes": r.wire_bytes,
+            }
+            for r in recs[:k]
+        ]
+
+
+def analyze(text: str) -> HloCost:
+    return HloCost(text)

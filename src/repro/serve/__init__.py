@@ -1,0 +1,4 @@
+from .loop import ServeConfig, generate
+from .step import jit_decode_step, jit_prefill
+
+__all__ = ["ServeConfig", "generate", "jit_decode_step", "jit_prefill"]

@@ -1,0 +1,58 @@
+"""Batched serving loop: prefill a batch of prompts, then decode greedily
+(or with temperature), streaming tokens out per step."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import registry
+from repro.models.common import ShardRules
+from repro.serve.step import jit_decode_step, jit_prefill
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_new_tokens: int = 16
+    temperature: float = 0.0       # 0 => greedy
+    seed: int = 0
+
+
+def generate(
+    cfg: ArchConfig,
+    mesh,
+    rules: ShardRules,
+    params,
+    prompts: np.ndarray,           # (B, S) int32
+    extra=None,                    # vlm patches / audio frames
+    serve: ServeConfig = ServeConfig(),
+) -> np.ndarray:
+    """Returns (B, max_new_tokens) int32 generated tokens."""
+    B, S = prompts.shape
+    n_ctx = S + (cfg.frontend_tokens if cfg.family == "vlm" else 0)
+    max_len = n_ctx + serve.max_new_tokens
+    shape = ShapeConfig("serve", "prefill", S, B)
+    prefill_fn, _ = jit_prefill(cfg, mesh, rules, shape, max_len=max_len)
+    cache, logits = prefill_fn(params, jnp.asarray(prompts), extra)
+
+    dshape = ShapeConfig("serve", "decode", max_len, B)
+    decode_fn, _ = jit_decode_step(cfg, mesh, rules, dshape)
+
+    key = jax.random.PRNGKey(serve.seed)
+    out = []
+    cur = n_ctx
+    for t in range(serve.max_new_tokens):
+        if serve.temperature > 0:
+            key, sub = jax.random.split(key)
+            tok = jax.random.categorical(sub, logits / serve.temperature, axis=-1)
+        else:
+            tok = jnp.argmax(logits, axis=-1)
+        tok = tok.astype(jnp.int32)
+        out.append(np.asarray(tok))
+        logits, cache = decode_fn(params, cache, tok, jnp.int32(cur))
+        cur += 1
+    return np.stack(out, axis=1)

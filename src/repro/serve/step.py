@@ -1,0 +1,62 @@
+"""Serving step builders: prefill and decode as separately-jitted programs.
+
+``serve_step`` for the dry-run shapes means: decode shapes lower
+``decode_step`` (one new token against a seq_len cache), prefill shapes
+lower ``prefill``.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import registry
+from repro.models.common import ShardRules
+from repro.train.step import shardings_for
+
+
+def jit_prefill(cfg: ArchConfig, mesh: Mesh, rules: ShardRules,
+                shape: ShapeConfig, *, max_len: int | None = None):
+    mod = registry.get_module(cfg)
+
+    def fn(params, tokens, extra):
+        return mod.prefill(cfg, mesh, rules, params, tokens, extra,
+                           max_len=max_len)
+
+    params_sds = registry.abstract_params(cfg)
+    p_sh = shardings_for(mesh, registry.param_pspecs(cfg, rules))
+    in_sds, in_ps = registry.prefill_inputs(cfg, shape, rules)
+    tok_sds = in_sds["tokens"]
+    tok_sh = NamedSharding(mesh, in_ps["tokens"])
+    extra_key = [k for k in in_sds if k != "tokens"]
+    if extra_key:
+        e_sds = in_sds[extra_key[0]]
+        e_sh = NamedSharding(mesh, in_ps[extra_key[0]])
+    else:
+        e_sds, e_sh = None, None
+    jitted = jax.jit(fn, in_shardings=(p_sh, tok_sh, e_sh))
+    return jitted, (params_sds, tok_sds, e_sds)
+
+
+def jit_decode_step(cfg: ArchConfig, mesh: Mesh, rules: ShardRules,
+                    shape: ShapeConfig, *, donate: bool = True):
+    mod = registry.get_module(cfg)
+
+    def fn(params, cache, tokens, cur_index):
+        return mod.decode_step(cfg, mesh, rules, params, cache, tokens, cur_index)
+
+    params_sds = registry.abstract_params(cfg)
+    p_sh = shardings_for(mesh, registry.param_pspecs(cfg, rules))
+    cache_sds, cache_ps, tok_sds, tok_ps = registry.decode_inputs(cfg, shape, mesh)
+    cache_sh = shardings_for(mesh, cache_ps)
+    idx_sds = jax.ShapeDtypeStruct((), jnp.int32)
+    jitted = jax.jit(
+        fn,
+        in_shardings=(p_sh, cache_sh, NamedSharding(mesh, tok_ps), None),
+        donate_argnums=(1,) if donate else (),
+    )
+    return jitted, (params_sds, cache_sds, tok_sds, idx_sds)

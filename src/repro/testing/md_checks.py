@@ -1,0 +1,174 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+"""Multi-device semantics checks, run in a subprocess by the test suite
+(the main pytest process must keep seeing 1 CPU device).
+
+Usage: python -m repro.testing.md_checks <check_name | all>
+Exits non-zero on failure.
+"""
+import sys
+
+import numpy as np
+
+
+def check_scatter_reduce():
+    import jax.numpy as jnp
+    import repro.core as synk
+
+    ctx = synk.fork()
+    assert ctx.n_data == 8, ctx.n_data
+
+    def loss_fn(x, y, w):
+        return jnp.mean((x @ w - y) ** 2)
+
+    f = synk.function(loss_fn, [synk.Scatter(), synk.Scatter(), synk.Broadcast()],
+                      synk.Reduce("mean"))
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(64, 8)).astype(np.float32)
+    y = rng.normal(size=(64,)).astype(np.float32)
+    w = rng.normal(size=(8,)).astype(np.float32)
+    want = np.mean((x @ w - y) ** 2)
+    np.testing.assert_allclose(f(x, y, w), want, rtol=1e-5)
+    # paper §5.1 invariant: sliced == unsliced
+    np.testing.assert_allclose(f(x, y, w, num_slices=4), want, rtol=1e-5)
+    # sum/max/min/concat
+    for op, ref in [("sum", np.sum), ("max", np.max), ("min", np.min)]:
+        g = synk.function(lambda x: getattr(jnp, op)(x), [synk.Scatter()],
+                          synk.Reduce("mean" if False else op))
+        got = g(x)
+        if op == "sum":
+            np.testing.assert_allclose(got, ref(x), rtol=1e-5)
+        else:
+            np.testing.assert_allclose(got, ref(x), rtol=1e-6)
+    c = synk.function(lambda x: x * 3.0, [synk.Scatter()], synk.Reduce("concat"))
+    np.testing.assert_allclose(np.asarray(c(x)), x * 3, rtol=1e-6)
+    pw = synk.function(lambda x: jnp.sum(x), [synk.Scatter()], synk.Reduce(None))
+    assert np.asarray(pw(x)).shape == (8,)
+    np.testing.assert_allclose(np.asarray(pw(x)).sum(), x.sum(), rtol=1e-5)
+
+
+def check_indexing():
+    import jax.numpy as jnp
+    import repro.core as synk
+
+    synk.fork()
+    rng = np.random.default_rng(1)
+    x = rng.normal(size=(64, 4)).astype(np.float32)
+
+    f = synk.function(lambda x: jnp.mean(x), [synk.Scatter()], synk.Reduce("mean"))
+    dx = synk.data(x)
+    idx = rng.permutation(64)[:32]
+    np.testing.assert_allclose(f(dx, batch=idx), x[idx].mean(), rtol=1e-5)
+
+    # device-resident (paper §4.2 + §5.2): local indices against local shards
+    ds = synk.scatter_data(x)
+    local_idx = np.concatenate([rng.permutation(8)[:4] for _ in range(8)])
+    got = f(ds, batch=local_idx)
+    shards = x.reshape(8, 8, 4)
+    want = np.mean([shards[i][local_idx[i * 4:(i + 1) * 4]] for i in range(8)])
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+def check_collectives():
+    import repro.core as synk
+
+    synk.fork()
+    rng = np.random.default_rng(2)
+    w = rng.normal(size=(6,)).astype(np.float32)
+    params = synk.distribute({"w": w})
+    params = synk.set_value(params, 3, {"w": w * 9})
+    red = synk.all_reduce(params, "avg")
+    expect = (w * 7 + w * 9) / 8
+    for r in (0, 3, 7):
+        np.testing.assert_allclose(synk.get_value(red, r)["w"], expect, rtol=1e-5)
+    bc = synk.broadcast(params, root=3)
+    np.testing.assert_allclose(synk.get_value(bc, 5)["w"], w * 9, rtol=1e-6)
+    np.testing.assert_allclose(synk.as_replicated(bc)["w"], w * 9, rtol=1e-6)
+    sc = synk.scatter_shared({"d": np.arange(16.0, dtype=np.float32)})
+    np.testing.assert_allclose(
+        synk.get_value(sc, 2)["d"], np.array([4.0, 5.0]), rtol=0)
+    s = synk.all_reduce(params, "sum")
+    np.testing.assert_allclose(synk.get_value(s, 0)["w"], w * 7 + w * 9, rtol=1e-5)
+
+
+def check_sgd_parity():
+    """Paper Appendix A: multi-GPU SGD with all-reduce(avg) must equal the
+    serial single-device program."""
+    import jax
+    import jax.numpy as jnp
+    import repro.core as synk
+
+    synk.fork()
+    rng = np.random.default_rng(3)
+    X = rng.normal(size=(64, 8)).astype(np.float32)
+    Y = (X @ rng.normal(size=(8,)) + 0.1).astype(np.float32)
+    w0 = rng.normal(size=(8,)).astype(np.float32)
+    lr = 0.05
+
+    def grad_fn(x, y, w):
+        return jax.grad(lambda w: jnp.mean((x @ w - y) ** 2))(w)
+
+    # serial reference
+    w_ref = w0.copy()
+    for _ in range(5):
+        g = np.asarray(grad_fn(jnp.asarray(X), jnp.asarray(Y), jnp.asarray(w_ref)))
+        w_ref = w_ref - lr * g
+
+    # synk program: local grads per worker, all-reduce(avg), local update
+    f = synk.function(grad_fn, [synk.Scatter(), synk.Scatter(), synk.Broadcast()],
+                      synk.Reduce("mean"))
+    w = w0.copy()
+    for _ in range(5):
+        g = np.asarray(f(X, Y, w))
+        w = w - lr * g
+    np.testing.assert_allclose(w, w_ref, rtol=1e-5)
+
+
+def check_elastic():
+    """Checkpoint written under dp=8 restores under dp=4 (elastic)."""
+    import tempfile
+
+    import jax
+    from repro.checkpoint import CheckpointManager
+    from repro.configs import get_smoke_config
+    from repro.configs.base import ShapeConfig
+    from repro.launch.mesh import _mk
+    from repro.models.common import ShardRules
+    from repro.optim import OptConfig
+    from repro.train import LoopConfig, TrainSettings, train
+
+    cfg = get_smoke_config("smollm-360m")
+    shape = ShapeConfig("t", "train", 16, 8)
+    opt = OptConfig(kind="adam", lr=1e-2)
+    with tempfile.TemporaryDirectory() as d:
+        mesh8 = _mk((8, 1), ("data", "model"))
+        r8 = ShardRules.for_mesh(mesh8)
+        res = train(cfg, shape, mesh8, r8, opt, TrainSettings(),
+                    LoopConfig(steps=4, ckpt_every=4, ckpt_dir=d, log_every=0))
+        mesh4 = _mk((4, 2), ("data", "model"))
+        r4 = ShardRules.for_mesh(mesh4)
+        res2 = train(cfg, shape, mesh4, r4, opt, TrainSettings(),
+                     LoopConfig(steps=6, ckpt_every=6, ckpt_dir=d, log_every=0))
+        assert np.isfinite(res2["final_loss"])
+        assert res2["final_loss"] < res["final_loss"] + 1.0
+
+
+CHECKS = {
+    "scatter_reduce": check_scatter_reduce,
+    "indexing": check_indexing,
+    "collectives": check_collectives,
+    "sgd_parity": check_sgd_parity,
+    "elastic": check_elastic,
+}
+
+
+def main():
+    name = sys.argv[1] if len(sys.argv) > 1 else "all"
+    names = list(CHECKS) if name == "all" else [name]
+    for n in names:
+        CHECKS[n]()
+        print(f"[md_checks] {n} OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+from .loop import LoopConfig, init_sharded, train
+from .step import TrainSettings, build_train_step, jit_train_step, shardings_for
+
+__all__ = [
+    "LoopConfig", "init_sharded", "train",
+    "TrainSettings", "build_train_step", "jit_train_step", "shardings_for",
+]

@@ -1,0 +1,110 @@
+"""Training loop with fault tolerance: checkpoint/restart, deterministic
+data replay, and straggler-tolerant dispatch.
+
+Under SPMD there is no per-worker straggler logic inside a step (the
+compiler schedules every chip identically); the straggler surface is the
+*host* side — input staging and checkpoint writes.  Both are overlapped:
+batches for step t+1 are staged while step t runs (dispatch is async in
+jax), and checkpoint saves run on a background thread.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.data import make_batch_fn
+from repro.models import registry
+from repro.models.common import ShardRules
+from repro.optim import OptConfig, init_state
+from repro.train.step import TrainSettings, jit_train_step, shardings_for
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    steps: int = 100
+    ckpt_every: int = 50
+    ckpt_dir: str | None = None
+    keep_k: int = 3
+    log_every: int = 10
+    seed: int = 0
+
+
+def init_sharded(cfg: ArchConfig, mesh, rules: ShardRules, opt: OptConfig, seed: int):
+    mod = registry.get_module(cfg)
+    p_sh = shardings_for(mesh, registry.param_pspecs(cfg, rules))
+    params = jax.jit(
+        lambda k: mod.init(cfg, k), out_shardings=p_sh
+    )(jax.random.PRNGKey(seed))
+    from repro.optim import state_pspecs
+    o_sh = shardings_for(mesh, state_pspecs(opt, registry.param_pspecs(cfg, rules)))
+    opt_state = jax.jit(lambda p: init_state(opt, p), out_shardings=o_sh)(params)
+    return params, opt_state
+
+
+def train(
+    cfg: ArchConfig,
+    shape: ShapeConfig,
+    mesh,
+    rules: ShardRules,
+    opt: OptConfig,
+    settings: TrainSettings = TrainSettings(),
+    loop: LoopConfig = LoopConfig(),
+    *,
+    resume: bool = True,
+    on_step: Callable[[int, dict], None] | None = None,
+) -> dict:
+    """Runs the loop; returns final metrics summary."""
+    step_fn, (params_sds, opt_sds, _), in_sh = jit_train_step(
+        cfg, mesh, rules, opt, shape, settings
+    )
+    batch_fn = make_batch_fn(cfg, shape, loop.seed)
+    b_sh = in_sh[2]
+
+    mgr = CheckpointManager(loop.ckpt_dir, loop.keep_k) if loop.ckpt_dir else None
+    start = 0
+    if mgr and resume and mgr.latest_step() is not None:
+        def reshard(tree):
+            # elastic restore: host arrays -> current mesh shardings
+            return tree
+        start, state = mgr.restore({"params": params_sds, "opt": opt_sds})
+        params = jax.tree.map(
+            lambda a, s: jax.device_put(a, s), state["params"], in_sh[0])
+        opt_state = jax.tree.map(
+            lambda a, s: jax.device_put(a, s), state["opt"], in_sh[1])
+        print(f"[train] resumed from step {start}")
+    else:
+        params, opt_state = init_sharded(cfg, mesh, rules, opt, loop.seed)
+
+    losses, t0 = [], time.perf_counter()
+    metrics = {}
+    for step in range(start, loop.steps):
+        host_batch = batch_fn(step)
+        batch = {
+            k: jax.device_put(v, b_sh[k]) for k, v in host_batch.items()
+        }
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if loop.log_every and (step + 1) % loop.log_every == 0:
+            loss = float(metrics["loss"])
+            losses.append(loss)
+            dt = time.perf_counter() - t0
+            print(f"[train] step {step + 1:5d} loss {loss:.4f} ({dt:.1f}s)")
+        if mgr and loop.ckpt_every and (step + 1) % loop.ckpt_every == 0:
+            mgr.save(step + 1, {"params": params, "opt": opt_state},
+                     blocking=False)
+        if on_step:
+            on_step(step, metrics)
+    if mgr:
+        mgr.save(loop.steps, {"params": params, "opt": opt_state}, blocking=True)
+        mgr.wait()
+    return {
+        "final_loss": float(metrics["loss"]) if metrics else float("nan"),
+        "losses": losses,
+        "params": params,
+        "opt_state": opt_state,
+    }

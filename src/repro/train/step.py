@@ -1,0 +1,145 @@
+"""Train-step builder: loss -> grads -> update, with the paper's §5.1
+input slicing (gradient accumulation), remat, ZeRO/FSDP or paper-faithful
+replicated parameters, and donated buffers.
+
+Two modes map to the paper:
+* ``faithful=True``  — parameters replicated across the data axes (the
+  paper's per-GPU copies); the gradient combine lowers to one all-reduce,
+  exactly the Appendix-A program.
+* ``faithful=False`` — beyond-paper: FSDP parameter/optimizer sharding
+  (reduce-scatter + all-gather), sequence parallelism, donation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import registry
+from repro.models.common import ShardRules
+from repro.optim import OptConfig, apply_update, init_state, state_pspecs
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainSettings:
+    num_slices: int = 1          # paper §5.1 automated input slicing
+    remat: Any = True            # False | True | "dots" (see common.remat_wrap)
+    faithful: bool = False       # paper-faithful replicated-DP mode
+    accum_dtype: str = "float32" # microbatch gradient accumulator dtype
+
+
+def _split_batch(batch: dict, k: int) -> dict:
+    def sp(x):
+        b = x.shape[0]
+        if b % k:
+            raise ValueError(f"num_slices={k} must divide global batch {b}")
+        return x.reshape((k, b // k) + x.shape[1:])
+
+    return {n: sp(v) for n, v in batch.items()}
+
+
+def build_train_step(
+    cfg: ArchConfig,
+    mesh: Mesh,
+    rules: ShardRules,
+    opt: OptConfig,
+    settings: TrainSettings = TrainSettings(),
+) -> Callable:
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics)."""
+    mod = registry.get_module(cfg)
+
+    def loss_for_grad(params, microbatch):
+        loss, metrics = mod.loss_fn(
+            cfg, mesh, rules, params, microbatch, remat=settings.remat
+        )
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_for_grad, has_aux=True)
+
+    def compute_grads(params, batch):
+        k = settings.num_slices
+        if k == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+            return loss, metrics, grads
+
+        slices = _split_batch(batch, k)
+        adt = jnp.dtype(settings.accum_dtype)
+
+        def body(carry, mb):
+            loss_acc, m_acc, g_acc = carry
+            (loss, metrics), grads = grad_fn(params, mb)
+            g_acc = jax.tree.map(
+                lambda a, g: a + g.astype(adt) / k, g_acc, grads
+            )
+            m_acc = jax.tree.map(lambda a, m: a + m / k, m_acc, metrics)
+            return (loss_acc + loss / k, m_acc, g_acc), None
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, adt), params)
+        probe = jax.eval_shape(
+            lambda p, b: grad_fn(p, b)[0][1], params,
+            jax.tree.map(lambda x: x[0], slices),
+        )
+        m0 = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), probe)
+        (loss, metrics, grads), _ = jax.lax.scan(
+            body, (jnp.float32(0.0), m0, g0), slices
+        )
+        grads = jax.tree.map(lambda g, p: g.astype(p.dtype), grads, params)
+        return loss, metrics, grads
+
+    def train_step(params, opt_state, batch):
+        loss, metrics, grads = compute_grads(params, batch)
+        params, opt_state, opt_metrics = apply_update(opt, params, grads, opt_state)
+        return params, opt_state, {"loss": loss, **metrics, **opt_metrics}
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# Jitted assembly with shardings (the object the dry-run lowers)
+# ---------------------------------------------------------------------------
+
+
+def shardings_for(mesh: Mesh, pspecs):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), pspecs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def jit_train_step(
+    cfg: ArchConfig,
+    mesh: Mesh,
+    rules: ShardRules,
+    opt: OptConfig,
+    shape: ShapeConfig,
+    settings: TrainSettings = TrainSettings(),
+    *,
+    donate: bool = True,
+):
+    """Returns (jitted fn, (params_sds, opt_sds, batch_sds), in_shardings)."""
+    step = build_train_step(cfg, mesh, rules, opt, settings)
+
+    params_sds = registry.abstract_params(cfg)
+    p_pspecs = registry.param_pspecs(cfg, rules)
+    opt_sds = jax.eval_shape(partial(init_state, opt), params_sds)
+    o_pspecs = state_pspecs(opt, p_pspecs)
+    batch_sds, b_pspecs = registry.train_inputs(cfg, shape, rules)
+
+    in_sh = (
+        shardings_for(mesh, p_pspecs),
+        shardings_for(mesh, o_pspecs),
+        shardings_for(mesh, b_pspecs),
+    )
+    out_sh = (in_sh[0], in_sh[1], None)
+    jitted = jax.jit(
+        step,
+        in_shardings=in_sh,
+        out_shardings=out_sh,
+        donate_argnums=(0, 1) if donate else (),
+    )
+    return jitted, (params_sds, opt_sds, batch_sds), in_sh

@@ -1,0 +1,23 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests see 1 real CPU device;
+multi-device semantics tests spawn subprocesses with
+``--xla_force_host_platform_device_count`` (see tests/md/)."""
+import jax
+import pytest
+
+from repro.launch.mesh import single_device_mesh
+from repro.models.common import ShardRules
+
+
+@pytest.fixture(scope="session")
+def mesh():
+    return single_device_mesh()
+
+
+@pytest.fixture(scope="session")
+def rules(mesh):
+    return ShardRules.for_mesh(mesh)
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,86 @@
+"""SynkData host objects (paper §4.1) + slicing machinery on one device."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro.core as synk
+from repro.core.slicing import sliced_call
+from repro.core.specs import Reduce
+
+
+def test_synkdata_overallocation_growth():
+    x = np.arange(12.0, dtype=np.float32).reshape(6, 2)
+    d = synk.data(x, oversize=2.0)
+    assert d.capacity >= 12 // 2
+    assert d.shape == (6, 2)
+    buf_before = d._buffer
+    d.set_length(9)                   # grow within capacity: no realloc
+    assert d._buffer is buf_before
+    assert d.shape == (9, 2)
+    d.set_length(4)                   # shrink: view only
+    np.testing.assert_array_equal(d.array, x[:4])
+    d.set_length(d.capacity + 5)      # beyond capacity: realloc, data kept
+    np.testing.assert_array_equal(d.array[:4], x[:4])
+    d.free()
+    assert len(d) == 0
+
+
+def test_synkdata_numpy_interface():
+    x = np.arange(10.0, dtype=np.float32)
+    d = synk.data(x)
+    d[3] = 99.0
+    assert d[3] == 99.0
+    assert np.asarray(d).shape == (10,)
+    np.testing.assert_array_equal(d.excerpt([1, 3]), np.array([1.0, 99.0]))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.sampled_from([8, 16, 32]),
+    k=st.sampled_from([1, 2, 4, 8]),
+    op=st.sampled_from(["mean", "sum", "max", "min"]),
+)
+def test_slicing_aggregation_equivalence(b, k, op):
+    """Paper §5.1 invariant: slicing must not change results."""
+    rng = np.random.default_rng(b * 100 + k)
+    x = jnp.asarray(rng.normal(size=(b, 4)).astype(np.float32))
+
+    fn = {
+        "mean": lambda x: jnp.mean(x),
+        "sum": lambda x: jnp.sum(x),
+        "max": lambda x: jnp.max(x),
+        "min": lambda x: jnp.min(x),
+    }[op]
+    direct = fn(x)
+    sliced = sliced_call(fn, [x], [True], Reduce(op), k)
+    np.testing.assert_allclose(np.asarray(sliced), np.asarray(direct),
+                               rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(b=st.sampled_from([8, 24]), k=st.sampled_from([2, 4]))
+def test_slicing_concat_and_last(b, k):
+    rng = np.random.default_rng(b + k)
+    x = jnp.asarray(rng.normal(size=(b, 3)).astype(np.float32))
+    out = sliced_call(lambda x: x * 2.0, [x], [True], Reduce("concat"), k)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x) * 2, rtol=1e-6)
+    last = sliced_call(lambda x: jnp.sum(x, 0), [x], [True], Reduce("last"), k)
+    np.testing.assert_allclose(
+        np.asarray(last), np.asarray(x[-(b // k):].sum(0)), rtol=1e-5)
+
+
+def test_slicing_indivisible_raises():
+    x = jnp.ones((10, 2))
+    with pytest.raises(ValueError, match="num_slices"):
+        sliced_call(lambda x: jnp.mean(x), [x], [True], Reduce("mean"), 3)
+
+
+def test_slicing_broadcast_args_use_original_values():
+    """Paper: 'all slices are computed using the original values'."""
+    x = jnp.arange(8.0).reshape(8, 1)
+    w = jnp.float32(3.0)
+    out = sliced_call(lambda x, w: jnp.sum(x) * w, [x, w], [True, False],
+                      Reduce("sum"), 4)
+    np.testing.assert_allclose(float(out), float(jnp.sum(x) * 3.0), rtol=1e-6)

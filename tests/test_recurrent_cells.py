@@ -1,0 +1,95 @@
+"""SSD (Mamba2) and mLSTM chunked forms vs step-recurrence oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.ssm import ssd_chunked, ssd_decode_step, ssd_reference
+from repro.models.xlstm import (
+    mlstm_chunked, mlstm_decode_step, mlstm_reference, slstm_scan,
+)
+
+
+def _ssd_inputs(B, T, H, P, G, N, seed=0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(B, T, H, P)).astype(np.float32))
+    dt = jnp.asarray(rng.uniform(0.01, 0.2, size=(B, T, H)).astype(np.float32))
+    A = jnp.asarray(-rng.uniform(0.5, 2.0, size=(H,)).astype(np.float32))
+    Bm = jnp.asarray(rng.normal(size=(B, T, G, N)).astype(np.float32))
+    Cm = jnp.asarray(rng.normal(size=(B, T, G, N)).astype(np.float32))
+    return x, dt, A, Bm, Cm
+
+
+@settings(max_examples=12, deadline=None)
+@given(chunk=st.sampled_from([4, 8, 16, 32]), G=st.sampled_from([1, 2]))
+def test_ssd_chunked_vs_recurrence(chunk, G):
+    x, dt, A, Bm, Cm = _ssd_inputs(2, 32, 4, 8, G, 8, seed=chunk)
+    ref = ssd_reference(x, dt, A, Bm, Cm)
+    y = ssd_chunked(x, dt, A, Bm, Cm, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                               atol=2e-4, rtol=2e-4)
+
+
+def test_ssd_final_state_continues_decode():
+    """prefill state -> decode steps must equal one long scan."""
+    x, dt, A, Bm, Cm = _ssd_inputs(1, 24, 2, 4, 1, 4)
+    ref = ssd_reference(x, dt, A, Bm, Cm)
+    y, S = ssd_chunked(x[:, :16], dt[:, :16], A, Bm[:, :16], Cm[:, :16],
+                       chunk=8, return_state=True)
+    for t in range(16, 24):
+        S, yt = ssd_decode_step(S, x[:, t], dt[:, t], A, Bm[:, t], Cm[:, t])
+        np.testing.assert_allclose(np.asarray(yt), np.asarray(ref[:, t]),
+                                   atol=2e-4, rtol=2e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(chunk=st.sampled_from([4, 8, 16, 64]))
+def test_mlstm_chunked_vs_recurrence(chunk):
+    rng = np.random.default_rng(chunk)
+    B, T, H, Dh = 2, 64, 3, 16
+    q = jnp.asarray(rng.normal(size=(B, T, H, Dh)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(B, T, H, Dh)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(B, T, H, Dh)).astype(np.float32))
+    i_pre = jnp.asarray(rng.normal(size=(B, T, H)).astype(np.float32) * 2)
+    f_pre = jnp.asarray(rng.normal(size=(B, T, H)).astype(np.float32) * 2 + 1)
+    ref = mlstm_reference(q, k, v, i_pre, f_pre)
+    y = mlstm_chunked(q, k, v, i_pre, f_pre, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                               atol=3e-4, rtol=3e-3)
+
+
+def test_mlstm_state_continues_decode():
+    rng = np.random.default_rng(9)
+    B, T, H, Dh = 1, 24, 2, 8
+    mk = lambda *s: jnp.asarray(rng.normal(size=s).astype(np.float32))
+    q, k, v = mk(B, T, H, Dh), mk(B, T, H, Dh), mk(B, T, H, Dh)
+    i_pre, f_pre = mk(B, T, H), mk(B, T, H) + 1
+    ref = mlstm_reference(q, k, v, i_pre, f_pre)
+    y, st = mlstm_chunked(q[:, :16], k[:, :16], v[:, :16],
+                          i_pre[:, :16], f_pre[:, :16], chunk=8,
+                          return_state=True)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref[:, :16]),
+                               atol=3e-4, rtol=3e-3)
+    for t in range(16, 24):
+        st, yt = mlstm_decode_step(st, q[:, t], k[:, t], v[:, t],
+                                   i_pre[:, t], f_pre[:, t])
+        np.testing.assert_allclose(np.asarray(yt), np.asarray(ref[:, t]),
+                                   atol=3e-4, rtol=3e-3)
+
+
+def test_slstm_scan_state_continuity():
+    rng = np.random.default_rng(3)
+    B, T, H, Dh = 2, 12, 2, 4
+    mk = lambda *s: jnp.asarray(rng.normal(size=s).astype(np.float32))
+    xs = [mk(B, T, H, Dh) for _ in range(4)]
+    rs = [mk(H, Dh, Dh) * 0.1 for _ in range(4)]
+    z = jnp.zeros((B, H, Dh), jnp.float32)
+    m0 = jnp.full((B, H, Dh), -1e30, jnp.float32)
+    full, _ = slstm_scan(*xs, *rs, z, z, z, m0)
+    h1, st = slstm_scan(*[x[:, :6] for x in xs], *rs, z, z, z, m0)
+    h2, _ = slstm_scan(*[x[:, 6:] for x in xs], *rs, *st)
+    np.testing.assert_allclose(
+        np.asarray(jnp.concatenate([h1, h2], axis=1)), np.asarray(full),
+        atol=1e-5, rtol=1e-5)
+    assert np.all(np.isfinite(np.asarray(full)))
