@@ -5,27 +5,77 @@ Prints ``name,us_per_call,derived`` CSV rows:
   table1_profile   — paper Table 1 (loop decomposition w/ blocking)
   roofline_report  — §Roofline terms per dry-run cell (this repo's tables)
   kernel_bench     — Pallas kernel micro-benchmarks
+  overlap          — bucketed flat-gradient engine + dispatch overhead
+                     (subprocess on a forced 8-device host mesh; also
+                     writes BENCH_overlap.json to the repo root)
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
+import subprocess
 import sys
 import traceback
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def emit(name: str, us: float, derived: str = "") -> None:
     print(f"{name},{us:.1f},{derived}", flush=True)
 
 
+def run_overlap(emit, smoke: bool = True,
+                out_json: str | None = None) -> bool:
+    """Run overlap_bench in a subprocess (it needs XLA_FLAGS set before jax
+    initializes) and surface headline numbers as CSV rows."""
+    out_json = out_json or os.path.join(REPO, "BENCH_overlap.json")
+    cmd = [sys.executable, os.path.join(REPO, "benchmarks", "overlap_bench.py"),
+           "--json", out_json]
+    if smoke:
+        cmd.append("--smoke")
+    env = dict(os.environ)
+    flags = env.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        env["XLA_FLAGS"] = (
+            flags + " --xla_force_host_platform_device_count=8").strip()
+    r = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                       timeout=1800)
+    if r.returncode != 0:
+        print(r.stdout[-2000:], file=sys.stderr)
+        print(r.stderr[-2000:], file=sys.stderr)
+        return False
+    with open(out_json) as fh:
+        rep = json.load(fh)
+    for name in ("monolithic_flat", "bucketed_flat", "zero_flat", "legacy_gspmd"):
+        row = rep["step_ms"].get(name)
+        if row:
+            emit(f"overlap/{name}", row["step_ms"] * 1e3,
+                 f"buckets={row['num_buckets']}")
+    d = rep["dispatch"]
+    emit("overlap/dispatch_cold", d["cold_ms"] * 1e3, "build+compile")
+    emit("overlap/dispatch_cached", d["cached_us"], "steady-state")
+    emit("overlap/dispatch_presharded", d["presharded_us"], "device_put skipped")
+    return True
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list: fig23,table1,roofline,kernels")
+                    help="comma list: fig23,table1,roofline,kernels,overlap")
+    ap.add_argument("--full-overlap", action="store_true",
+                    help="overlap bench at full (non-smoke) sizes")
     args = ap.parse_args()
-    want = set((args.only or "fig23,table1,roofline,kernels").split(","))
+    want = set((args.only or "fig23,table1,roofline,kernels,overlap").split(","))
 
     print("name,us_per_call,derived")
     ok = True
+    if "overlap" in want:
+        try:
+            ok = run_overlap(emit, smoke=not args.full_overlap) and ok
+        except Exception:
+            ok = False
+            traceback.print_exc()
     if "roofline" in want:
         from benchmarks import roofline_report
         roofline_report.main(emit)

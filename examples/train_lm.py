@@ -35,6 +35,14 @@ def main():
                     help="use the full published config (needs accelerators)")
     ap.add_argument("--params-100m", action="store_true",
                     help="~100M-param config of the same family")
+    engine = ap.add_mutually_exclusive_group()
+    engine.add_argument("--faithful", action="store_true",
+                        help="paper Appendix-A program: data-parallel mesh over "
+                             "all devices, bucketed flat all-reduce + fused Adam")
+    engine.add_argument("--zero", action="store_true",
+                        help="ZeRO flat engine: reduce-scatter + sharded flat Adam")
+    ap.add_argument("--bucket-mb", type=float, default=4.0,
+                    help="flat-gradient bucket size (MiB)")
     args = ap.parse_args()
 
     if args.full:
@@ -48,13 +56,23 @@ def main():
     else:
         cfg = get_smoke_config(args.arch)
 
-    mesh = single_device_mesh()
-    rules = ShardRules.for_mesh(mesh)
+    if args.faithful or args.zero:
+        from repro.launch.mesh import local_mesh
+        mesh = local_mesh(model=1)       # pure DP over every local device
+        rules = ShardRules.for_mesh(mesh, faithful=args.faithful)
+        settings = TrainSettings(
+            num_slices=args.slices, faithful=args.faithful,
+            flat_engine="zero" if args.zero else "auto",
+        )
+    else:
+        mesh = single_device_mesh()
+        rules = ShardRules.for_mesh(mesh)
+        settings = TrainSettings(num_slices=args.slices)
     shape = ShapeConfig("train", "train", args.seq, args.batch)
     res = train(
         cfg, shape, mesh, rules,
-        OptConfig(kind="adam", lr=args.lr),
-        TrainSettings(num_slices=args.slices),
+        OptConfig(kind="adam", lr=args.lr, bucket_mb=args.bucket_mb),
+        settings,
         LoopConfig(steps=args.steps, ckpt_every=max(args.steps // 2, 1),
                    ckpt_dir=args.ckpt_dir, log_every=max(args.steps // 10, 1)),
     )

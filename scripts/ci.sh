@@ -1,0 +1,28 @@
+#!/usr/bin/env bash
+# Tier-1 CI: test suite on a forced 8-device host mesh + the overlap
+# benchmark in smoke mode (writes BENCH_overlap.json to the repo root).
+#
+#   scripts/ci.sh             # full run
+#   scripts/ci.sh -k buckets  # extra args forwarded to pytest
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 suite (8 forced host devices) =="
+XLA_FLAGS="--xla_force_host_platform_device_count=8" python -m pytest -x -q "$@"
+
+echo "== overlap bench (smoke) =="
+python benchmarks/overlap_bench.py --smoke --json BENCH_overlap.json >/dev/null
+python - <<'EOF'
+import json
+rep = json.load(open("BENCH_overlap.json"))
+s = rep["step_ms"]
+for k in ("monolithic_flat", "bucketed_flat", "zero_flat", "legacy_gspmd"):
+    if k in s:
+        print(f"  {k:16s} {s[k]['step_ms']:8.2f} ms/step  buckets={s[k]['num_buckets']}")
+d = rep["dispatch"]
+print(f"  dispatch: cold {d['cold_ms']:.1f} ms, cached {d['cached_us']:.0f} us, "
+      f"presharded {d['presharded_us']:.0f} us")
+EOF
+echo "CI OK — BENCH_overlap.json written"

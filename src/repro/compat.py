@@ -1,0 +1,116 @@
+"""Version-tolerance shims over the JAX API surface this repo uses.
+
+The repo targets the modern JAX API (``jax.shard_map``, ``jax.sharding.
+AxisType``, ``jax.make_mesh(..., axis_types=...)``, ``jax.lax.pvary``); the
+installed JAX may predate any of these.  Every call site imports the symbol
+from here instead of guessing, so the whole version policy lives in one
+module:
+
+* ``AxisType``       — ``jax.sharding.AxisType`` or an equivalent stub enum.
+* ``make_mesh``      — forwards ``axis_types=`` only when supported.
+* ``shard_map``      — ``jax.shard_map`` or ``jax.experimental.shard_map``;
+                       normalizes the replication-check kwarg (``check_vma``
+                       on new JAX, ``check_rep`` on old).
+* ``pvary``          — identity on JAX versions without varying-manual-axes
+                       tracking (there, carries need no explicit pvary).
+* ``psum_scatter``   — re-export (present in every supported version; named
+                       here so collective call sites read uniformly).
+"""
+from __future__ import annotations
+
+import enum
+import inspect
+from typing import Any
+
+import jax
+
+# ---------------------------------------------------------------------------
+# AxisType
+# ---------------------------------------------------------------------------
+
+try:  # JAX >= 0.5-era explicit-sharding API
+    from jax.sharding import AxisType  # type: ignore[attr-defined]
+except ImportError:  # older JAX: only Auto semantics exist
+    class AxisType(enum.Enum):  # type: ignore[no-redef]
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+
+# ---------------------------------------------------------------------------
+# make_mesh
+# ---------------------------------------------------------------------------
+
+_MAKE_MESH_TAKES_AXIS_TYPES = "axis_types" in inspect.signature(jax.make_mesh).parameters
+
+
+def make_mesh(shape, axes, *, axis_types=None, devices=None):
+    """``jax.make_mesh`` dropping ``axis_types`` when unsupported (old JAX
+    treats every axis as Auto, which is exactly what the dropped argument
+    would have requested)."""
+    kwargs: dict[str, Any] = {}
+    if devices is not None:
+        kwargs["devices"] = devices
+    if _MAKE_MESH_TAKES_AXIS_TYPES and axis_types is not None:
+        kwargs["axis_types"] = axis_types
+    return jax.make_mesh(tuple(shape), tuple(axes), **kwargs)
+
+
+# ---------------------------------------------------------------------------
+# shard_map
+# ---------------------------------------------------------------------------
+
+if hasattr(jax, "shard_map"):
+    _shard_map = jax.shard_map
+    _CHECK_KW = (
+        "check_vma"
+        if "check_vma" in inspect.signature(jax.shard_map).parameters
+        else "check_rep"
+    )
+else:  # JAX <= 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map  # type: ignore
+
+    _CHECK_KW = "check_rep"
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """Uniform entry point: new-JAX ``check_vma`` semantics, mapped onto
+    ``check_rep`` for old JAX (both disable replication/varying-axes
+    checking when False, which is how this repo always calls it)."""
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        **{_CHECK_KW: check_vma},
+    )
+
+
+# ---------------------------------------------------------------------------
+# pvary
+# ---------------------------------------------------------------------------
+
+if hasattr(jax.lax, "pvary"):
+    pvary = jax.lax.pvary
+else:
+    def pvary(x, axis_name):  # noqa: ARG001 - signature parity
+        """No varying-manual-axes tracking on this JAX: identity."""
+        return x
+
+
+psum_scatter = jax.lax.psum_scatter
+
+
+# ---------------------------------------------------------------------------
+# optimization_barrier
+# ---------------------------------------------------------------------------
+# Old JAX has no differentiation rule for optimization_barrier; wrap it in a
+# custom_jvp that barriers the primal and passes tangents through (the
+# barrier is a scheduling hint, not a math op, so this is exact).
+
+@jax.custom_jvp
+def optimization_barrier(x):
+    return jax.lax.optimization_barrier(x)
+
+
+@optimization_barrier.defjvp
+def _optimization_barrier_jvp(primals, tangents):
+    (x,), (t,) = primals, tangents
+    return optimization_barrier(x), t

@@ -16,7 +16,9 @@ from typing import Sequence
 
 import jax
 import numpy as np
-from jax.sharding import AxisType, Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import compat
 
 _CURRENT: "SynkContext | None" = None
 
@@ -58,9 +60,9 @@ class SynkContext:
 
 def make_mesh(shape: Sequence[int], axes: Sequence[str]) -> Mesh:
     """``jax.make_mesh`` with explicit Auto axis types (GSPMD propagation)."""
-    return jax.make_mesh(
+    return compat.make_mesh(
         tuple(shape), tuple(axes),
-        axis_types=(AxisType.Auto,) * len(axes),
+        axis_types=(compat.AxisType.Auto,) * len(axes),
     )
 
 

@@ -10,8 +10,10 @@ Two storage tiers, mirroring the paper:
 * :class:`DeviceDataset` — device-resident datasets sharded along the
   leading axis across the data-parallel workers (paper §4.2 "scatter"),
   for programs whose inputs are re-used across many function calls.
-  Indexing happens *on device, per worker, against the local shard*
-  (paper §5.2's on-GPU input indexing).
+  ``batch=`` indices are **global** rows of the pre-scatter array; each
+  worker gathers on device from its local shard (paper §5.2's on-GPU
+  input indexing), routing rows between workers when an index chunk
+  crosses shard boundaries.
 """
 from __future__ import annotations
 
@@ -104,8 +106,10 @@ class DeviceDataset:
     """Dataset scattered across device memories (paper §4.2).
 
     ``array`` is a global jax.Array sharded along axis 0 over the data
-    axes.  ``local_length`` is the per-worker shard length; device-side
-    indexing (``batch=``) is interpreted against the local shard.
+    axes.  ``local_length`` is the per-worker shard length.  Device-side
+    indexing (``batch=``) takes **global** row ids in ``[0, len(self))``;
+    workers rebase them to shard-local positions (and route rows across
+    workers when a chunk references another worker's shard).
     """
 
     def __init__(self, array: jax.Array, n_shards: int):

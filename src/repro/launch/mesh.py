@@ -8,11 +8,13 @@ import and then calls it.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+from repro.compat import AxisType, make_mesh
 
 
 def _mk(shape, axes) -> Mesh:
-    return jax.make_mesh(
+    return make_mesh(
         tuple(shape), tuple(axes), axis_types=(AxisType.Auto,) * len(axes)
     )
 

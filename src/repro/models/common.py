@@ -24,6 +24,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat
+
 # ---------------------------------------------------------------------------
 # Sharding rules
 # ---------------------------------------------------------------------------
@@ -88,11 +90,38 @@ class ShardRules:
                    sp=tp is not None, mesh=mesh)
 
 
+_MANUAL_MODE = False  # inside a per-worker shard_map program: constraints off
+
+
+class manual_mode:
+    """Trace-time switch disabling sharding constraints.
+
+    The flat-gradient train step runs the model as an explicit per-worker
+    program inside ``shard_map``; there the mesh axes are manual and
+    ``with_sharding_constraint`` over them is meaningless (and rejected by
+    some JAX versions).  Model code stays unchanged — ``constrain``/
+    ``constrain_spec``/``wuse`` become identity while a ``manual_mode()``
+    block is active during tracing."""
+
+    def __enter__(self):
+        global _MANUAL_MODE
+        self._prev = _MANUAL_MODE
+        _MANUAL_MODE = True
+        return self
+
+    def __exit__(self, *exc):
+        global _MANUAL_MODE
+        _MANUAL_MODE = self._prev
+        return False
+
+
 def constrain(x, rules: ShardRules, *logical: str | None):
     """``with_sharding_constraint`` by logical axes.
 
     Dims that don't divide their mesh axes fall back to replicated on that
     dim (deterministic — no silent exception swallowing)."""
+    if _MANUAL_MODE:
+        return x
     resolved = []
     for i, l in enumerate(logical):
         axes = rules.axis(l)
@@ -107,6 +136,8 @@ def constrain(x, rules: ShardRules, *logical: str | None):
 
 def constrain_spec(x, mesh, spec: P):
     """with_sharding_constraint with an explicit PartitionSpec + mesh."""
+    if _MANUAL_MODE:
+        return x
     if mesh is not None:
         return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
     return jax.lax.with_sharding_constraint(x, spec)
@@ -123,7 +154,7 @@ def wuse(w, rules: ShardRules, *logical: str | None, dtype=None):
         # the barrier stops the backend from eliding/hoisting the cast above
         # the FSDP all-gather (XLA:CPU legalizes bf16 dots to f32 and would
         # otherwise gather fp32 weights — 2x wire)
-        w = jax.lax.optimization_barrier(w.astype(dtype))
+        w = compat.optimization_barrier(w.astype(dtype))
     return constrain(w, rules, *logical)
 
 

@@ -53,12 +53,18 @@ def flatten(layout: FlatLayout, tree, dtype=jnp.float32) -> jnp.ndarray:
     return jnp.concatenate(parts) if parts else jnp.zeros((layout.total,), dtype)
 
 
-def unflatten(layout: FlatLayout, buf: jnp.ndarray):
+def unflatten(layout: FlatLayout, buf: jnp.ndarray, dtype=None):
+    """Rebuild the tree from a flat buffer.  ``dtype`` overrides the
+    per-leaf cast (e.g. keep fp32 optimizer state flat alongside bf16
+    parameters sharing one layout)."""
     leaves = []
     for off, size, shape, dt in zip(
         layout.offsets, layout.sizes, layout.shapes, layout.dtypes
     ):
-        leaves.append(jax.lax.dynamic_slice_in_dim(buf, off, size).reshape(shape).astype(dt))
+        leaves.append(
+            jax.lax.dynamic_slice_in_dim(buf, off, size)
+            .reshape(shape).astype(dt if dtype is None else dtype)
+        )
     return jax.tree.unflatten(layout.treedef, leaves)
 
 

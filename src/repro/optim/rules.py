@@ -30,6 +30,9 @@ class OptConfig:
     # f32 temporaries of the elementwise update chain to one layer's worth
     # (the jnp mirror of the fused kernels/flat_adam pass; see §Perf)
     chunked: bool = False
+    # flat-gradient bucket size (MiB) for the bucketed collective engine
+    # (optim/buckets.py); parameter-boundary-aligned greedy partition
+    bucket_mb: float = 4.0
 
     def __post_init__(self):
         if self.kind not in KINDS:

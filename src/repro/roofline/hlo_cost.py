@@ -168,6 +168,39 @@ def _wire_bytes(op: str, result_bytes: int, g: int) -> int:
     return 0
 
 
+_OPERAND_NAME = re.compile(r"%([\w.\-]+)")
+
+
+def _operand_names(rest: str) -> list[str]:
+    """Operand names of an instruction whose ``rest`` begins right after the
+    op's opening paren.  Walks to the matching close paren (operand types may
+    be printed inline and contain commas/brackets; tuple types contain
+    balanced parens) and extracts the ``%name`` tokens inside.  HLO printed
+    without ``%`` sigils (some dump modes) falls back to the last bare token
+    of each top-level comma segment."""
+    depth = 1
+    end = len(rest)
+    for i, ch in enumerate(rest):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    ops = rest[:end]
+    names = _OPERAND_NAME.findall(ops)
+    if names or "%" in ops or not ops.strip():
+        return names
+    # sigil-free format: 'add(a, b)' or 'add(f32[2] a, f32[2] b)'
+    out = []
+    for seg in ops.split(","):
+        toks = seg.strip().split()
+        if toks:
+            out.append(toks[-1])
+    return out
+
+
 def _group_size(rest: str) -> int:
     m = _GROUPS_IOTA.search(rest)
     if m:
@@ -216,9 +249,7 @@ class HloCost:
                 continue
             consumers: dict[str, list] = {a: [] for a in ar}
             for ins in comp.instrs:
-                ops_str = ins.rest.split(")")[0]
-                for tok in ops_str.split(","):
-                    tok = tok.strip().lstrip("%")
+                for tok in _operand_names(ins.rest):
                     if tok in consumers:
                         consumers[tok].append(ins.op)
             self._rs_names[comp.name] = {
@@ -229,10 +260,8 @@ class HloCost:
 
     # ------------------------------------------------------------------
     def _dot_flops(self, comp: str, ins: Instr) -> float:
-        # first operand name
-        ops = ins.rest.split(")")[0]
-        first = ops.split(",")[0].strip().lstrip("%")
-        lhs = self.symbols[comp].get(first)
+        names = _operand_names(ins.rest)
+        lhs = self.symbols[comp].get(names[0]) if names else None
         contract = 1
         m = _LHS_CONTRACT.search(ins.rest)
         if lhs is not None and m and m.group(1):
@@ -372,8 +401,7 @@ class HloCost:
             for ins in comp.instrs:
                 if ins.op == "parameter":
                     continue
-                ops_str = ins.rest.split(")")[0]
-                names = [t.strip().lstrip("%") for t in ops_str.split(",")]
+                names = _operand_names(ins.rest)
                 if pname in names:
                     if ins.op in sliceish and names[0] == pname:
                         consumers.append(ins.bytes)
@@ -390,9 +418,8 @@ class HloCost:
 
     def _fusion_operand_bytes(self, comp: str, ins: Instr, callee: str) -> int:
         eff = self._param_effective_bytes(callee)
-        ops_str = ins.rest.split(")")[0]
         total = 0
-        for i, tok in enumerate(t.strip().lstrip("%") for t in ops_str.split(",")):
+        for i, tok in enumerate(_operand_names(ins.rest)):
             sym = self.symbols[comp].get(tok)
             if sym is None:
                 continue
@@ -403,8 +430,7 @@ class HloCost:
         return total
 
     def _nth_operand_bytes(self, comp: str, ins: Instr, n: int) -> int:
-        ops_str = ins.rest.split(")")[0]
-        toks = [t.strip().lstrip("%") for t in ops_str.split(",")]
+        toks = _operand_names(ins.rest)
         if n < len(toks):
             sym = self.symbols[comp].get(toks[n])
             if sym is not None:
@@ -412,11 +438,8 @@ class HloCost:
         return ins.bytes
 
     def _operand_bytes(self, comp: str, ins: Instr) -> int:
-        # operands: leading %name list before the closing paren
-        ops_str = ins.rest.split(")")[0]
         total = 0
-        for tok in ops_str.split(","):
-            tok = tok.strip().lstrip("%")
+        for tok in _operand_names(ins.rest):
             sym = self.symbols[comp].get(tok)
             if sym is not None:
                 total += sym.bytes

@@ -60,13 +60,141 @@ def check_indexing():
     idx = rng.permutation(64)[:32]
     np.testing.assert_allclose(f(dx, batch=idx), x[idx].mean(), rtol=1e-5)
 
-    # device-resident (paper §4.2 + §5.2): local indices against local shards
+    # device-resident (paper §4.2 + §5.2): GLOBAL row ids.  Aligned case:
+    # each worker's index chunk references its own shard (fast local take).
     ds = synk.scatter_data(x)
-    local_idx = np.concatenate([rng.permutation(8)[:4] for _ in range(8)])
-    got = f(ds, batch=local_idx)
-    shards = x.reshape(8, 8, 4)
-    want = np.mean([shards[i][local_idx[i * 4:(i + 1) * 4]] for i in range(8)])
-    np.testing.assert_allclose(got, want, rtol=1e-5)
+    aligned = np.concatenate(
+        [i * 8 + rng.permutation(8)[:4] for i in range(8)])
+    got = f(ds, batch=aligned)
+    np.testing.assert_allclose(got, x[aligned].mean(), rtol=1e-5)
+
+
+def check_indexing_global():
+    """Regression: global ``batch=`` ids that cross shard boundaries must
+    read the right rows (the old code applied them to local shards
+    verbatim, silently reading wrong rows for anything past worker 0)."""
+    import jax.numpy as jnp
+    import repro.core as synk
+
+    ctx = synk.fork()
+    assert ctx.n_data == 8
+    rng = np.random.default_rng(7)
+    x = rng.normal(size=(64, 4)).astype(np.float32)
+    ds = synk.scatter_data(x)
+
+    f = synk.function(lambda x: jnp.mean(x), [synk.Scatter()], synk.Reduce("mean"))
+    # fully shuffled global indices: every chunk crosses shards
+    idx = rng.permutation(64)[:32]
+    np.testing.assert_allclose(f(ds, batch=idx), x[idx].mean(), rtol=1e-5)
+    # repeated + reversed indices
+    idx2 = np.asarray([63, 0, 0, 17, 40, 8, 55, 62] * 2)
+    np.testing.assert_allclose(f(ds, batch=idx2), x[idx2].mean(), rtol=1e-5)
+
+    # concat output: rows come back in request order, sliced to the
+    # (pad-requiring) original length
+    g = synk.function(lambda x: x * 1.0, [synk.Scatter()], synk.Reduce("concat"))
+    idx3 = rng.permutation(64)[:12]            # 12 % 8 != 0 -> padded
+    out = np.asarray(g(ds, batch=idx3))
+    assert out.shape == (12, 4), out.shape
+    np.testing.assert_allclose(out, x[idx3], rtol=1e-6)
+
+    # pad > len(idx) edge case: 2 indices over 8 workers
+    idx4 = np.asarray([5, 60])
+    out = np.asarray(g(ds, batch=idx4))
+    assert out.shape == (2, 4), out.shape
+    np.testing.assert_allclose(out, x[idx4], rtol=1e-6)
+
+    # gspmd backend: same global semantics
+    h = synk.function(lambda x: jnp.mean(x), [synk.Scatter()],
+                      synk.Reduce("mean"), backend="gspmd")
+    np.testing.assert_allclose(h(ds, batch=idx), x[idx].mean(), rtol=1e-5)
+
+
+def check_bucketed_reduce():
+    """Bucketed flat all-reduce == monolithic (bit-for-bit, fp32), and the
+    reduce-scatter/all-gather pair round-trips exactly."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro import compat
+    from repro.optim.buckets import (
+        bucketed_all_gather, bucketed_all_reduce, bucketed_reduce_scatter,
+        make_buckets,
+    )
+    from repro.optim.flat import flatten, make_layout
+
+    mesh = jax.make_mesh((8,), ("data",))
+    rng = np.random.default_rng(3)
+    tree = {
+        "w": rng.normal(size=(129, 31)).astype(np.float32),
+        "b": rng.normal(size=(977,)).astype(np.float32),
+        "k": rng.normal(size=(3, 3, 3)).astype(np.float32),
+    }
+    layout = make_layout(tree)
+    buckets = make_buckets(layout, bucket_bytes=2048, n_shards=8)
+    assert buckets.num_buckets > 1
+
+    def worker(seed):
+        g = flatten(layout, tree) * (1.0 + seed[0])
+        mono = jax.lax.pmean(g, "data")
+        buck = bucketed_all_reduce(g, buckets, "data", op="mean")
+        rs = bucketed_reduce_scatter(g, buckets, "data", op="mean")
+        ag = bucketed_all_gather(rs, buckets, "data")
+        return mono, buck, ag
+
+    fn = jax.jit(compat.shard_map(
+        worker, mesh=mesh, in_specs=P("data"), out_specs=(P(), P(), P()),
+        check_vma=False,
+    ))
+    mono, buck, ag = fn(np.arange(8.0, dtype=np.float32))
+    assert bool(jnp.all(mono == buck)), "bucketed != monolithic (bitwise)"
+    np.testing.assert_allclose(np.asarray(ag), np.asarray(mono), rtol=1e-6)
+
+
+def check_flat_parity():
+    """Faithful flat-engine training (bucketed all-reduce + fused flat
+    Adam) and the ZeRO flat path must both track the legacy GSPMD adam
+    step loss-for-loss."""
+    import jax
+    from repro.configs import get_smoke_config
+    from repro.configs.base import ShapeConfig
+    from repro.launch.mesh import _mk
+    from repro.models.common import ShardRules
+    from repro.optim import OptConfig
+    from repro.train.loop import init_sharded
+    from repro.train.step import TrainSettings, jit_train_step
+
+    cfg = get_smoke_config("smollm-360m")
+    mesh = _mk((8, 1), ("data", "model"))
+    shape = ShapeConfig("t", "train", 16, 8)
+    opt = OptConfig(kind="adam", lr=1e-3, bucket_mb=0.05)
+    rng = np.random.default_rng(11)
+    tokens = rng.integers(0, cfg.vocab, size=(16, 9)).astype(np.int32)
+
+    def run(settings, rules, steps=3):
+        stepf, _, in_sh = jit_train_step(
+            cfg, mesh, rules, opt, shape, settings, donate=False)
+        params, opt_state = init_sharded(cfg, mesh, rules, opt, 0, settings)
+        batch = {"tokens": jax.device_put(tokens, in_sh[2]["tokens"])}
+        losses = []
+        for _ in range(steps):
+            params, opt_state, m = stepf(params, opt_state, batch)
+            losses.append(float(m["loss"]))
+        return stepf._flat_engine, losses
+
+    rules_f = ShardRules.for_mesh(mesh, faithful=True)
+    mode_flat, flat = run(TrainSettings(faithful=True), rules_f)
+    assert mode_flat == "faithful", mode_flat
+    mode_leg, legacy = run(
+        TrainSettings(faithful=True, flat_engine="off"), rules_f)
+    assert mode_leg is None
+    np.testing.assert_allclose(flat, legacy, rtol=2e-3)
+
+    mode_z, zero = run(TrainSettings(flat_engine="zero"),
+                       ShardRules.for_mesh(mesh))
+    assert mode_z == "zero", mode_z
+    np.testing.assert_allclose(zero, flat, rtol=2e-3)
 
 
 def check_collectives():
@@ -156,9 +284,12 @@ def check_elastic():
 CHECKS = {
     "scatter_reduce": check_scatter_reduce,
     "indexing": check_indexing,
+    "indexing_global": check_indexing_global,
     "collectives": check_collectives,
     "sgd_parity": check_sgd_parity,
     "elastic": check_elastic,
+    "bucketed_reduce": check_bucketed_reduce,
+    "flat_parity": check_flat_parity,
 }
 
 

@@ -21,8 +21,10 @@ from repro.configs.base import ArchConfig, ShapeConfig
 from repro.data import make_batch_fn
 from repro.models import registry
 from repro.models.common import ShardRules
-from repro.optim import OptConfig, init_state
-from repro.train.step import TrainSettings, jit_train_step, shardings_for
+from repro.optim import OptConfig
+from repro.train.step import (
+    TrainSettings, jit_train_step, opt_state_template, shardings_for,
+)
 
 
 @dataclasses.dataclass
@@ -35,15 +37,16 @@ class LoopConfig:
     seed: int = 0
 
 
-def init_sharded(cfg: ArchConfig, mesh, rules: ShardRules, opt: OptConfig, seed: int):
+def init_sharded(cfg: ArchConfig, mesh, rules: ShardRules, opt: OptConfig,
+                 seed: int, settings: TrainSettings = TrainSettings()):
     mod = registry.get_module(cfg)
     p_sh = shardings_for(mesh, registry.param_pspecs(cfg, rules))
     params = jax.jit(
         lambda k: mod.init(cfg, k), out_shardings=p_sh
     )(jax.random.PRNGKey(seed))
-    from repro.optim import state_pspecs
-    o_sh = shardings_for(mesh, state_pspecs(opt, registry.param_pspecs(cfg, rules)))
-    opt_state = jax.jit(lambda p: init_state(opt, p), out_shardings=o_sh)(params)
+    opt_init, o_pspecs = opt_state_template(cfg, mesh, rules, opt, settings)
+    o_sh = shardings_for(mesh, o_pspecs)
+    opt_state = jax.jit(opt_init, out_shardings=o_sh)(params)
     return params, opt_state
 
 
@@ -79,7 +82,7 @@ def train(
             lambda a, s: jax.device_put(a, s), state["opt"], in_sh[1])
         print(f"[train] resumed from step {start}")
     else:
-        params, opt_state = init_sharded(cfg, mesh, rules, opt, loop.seed)
+        params, opt_state = init_sharded(cfg, mesh, rules, opt, loop.seed, settings)
 
     losses, t0 = [], time.perf_counter()
     metrics = {}

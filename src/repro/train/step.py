@@ -2,12 +2,25 @@
 input slicing (gradient accumulation), remat, ZeRO/FSDP or paper-faithful
 replicated parameters, and donated buffers.
 
-Two modes map to the paper:
-* ``faithful=True``  — parameters replicated across the data axes (the
-  paper's per-GPU copies); the gradient combine lowers to one all-reduce,
-  exactly the Appendix-A program.
-* ``faithful=False`` — beyond-paper: FSDP parameter/optimizer sharding
-  (reduce-scatter + all-gather), sequence parallelism, donation.
+Two families of lowering:
+
+* **Flat-gradient engine** (optim/buckets.py; engages on pure data-parallel
+  meshes for adam/adamw) — the model runs as an explicit per-worker program
+  under ``shard_map``; gradients are flattened into ONE fp32 buffer (paper
+  §3.3) and reduced per ~4 MiB parameter-aligned bucket so the scheduler
+  can overlap bucket collectives with remaining backward compute:
+
+  - ``faithful=True``  — the paper's Appendix-A program: per-bucket
+    all-reduce(mean), fused flat-Adam (Pallas kernel on TPU) on the
+    replicated flat buffers.
+  - ``flat_engine="zero"`` (with ``faithful=False``) — per-bucket
+    reduce-scatter, sharded flat-Adam on the owned 1/N shard (ZeRO
+    optimizer-state sharding: ``m``/``v`` are flat scattered buffers),
+    per-bucket all-gather of updated parameters.
+
+* **GSPMD path** (everything else: tensor/expert parallel meshes, MoE,
+  non-adam rules) — ``jax.jit`` with sharded inputs; XLA places the
+  collectives.
 """
 from __future__ import annotations
 
@@ -17,12 +30,27 @@ from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.configs.base import ArchConfig, ShapeConfig
 from repro.models import registry
+from repro.models import common as common_mod
 from repro.models.common import ShardRules
 from repro.optim import OptConfig, apply_update, init_state, state_pspecs
+from repro.optim.buckets import (
+    BucketLayout,
+    bucketed_all_gather,
+    bucketed_all_reduce,
+    bucketed_reduce_scatter,
+    flat_adam_apply,
+    make_buckets,
+    scatter_flat,
+)
+from repro.optim.flat import FlatLayout, flatten, make_layout, unflatten
+
+_DATA_AXIS_CANDIDATES = ("pod", "data")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -31,6 +59,72 @@ class TrainSettings:
     remat: Any = True            # False | True | "dots" (see common.remat_wrap)
     faithful: bool = False       # paper-faithful replicated-DP mode
     accum_dtype: str = "float32" # microbatch gradient accumulator dtype
+    # Flat-gradient bucket engine:
+    #   "auto" — faithful mode lowers to the bucketed flat program whenever
+    #            the mesh is pure-DP and the rule is adam/adamw;
+    #            non-faithful mode keeps the GSPMD per-parameter path.
+    #   "zero" — non-faithful mode ALSO goes flat: bucketed reduce-scatter,
+    #            sharded flat-Adam state, bucketed all-gather (ZeRO).
+    #   "off"  — never use the flat engine.
+    flat_engine: str = "auto"
+    # None: Pallas flat_adam kernel on TPU, jnp reference elsewhere.
+    flat_kernel: bool | None = None
+
+
+def data_axes_of(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in _DATA_AXIS_CANDIDATES)
+
+
+def flat_engine_mode(
+    cfg: ArchConfig, mesh: Mesh, opt: OptConfig, settings: TrainSettings,
+) -> str | None:
+    """Which flat-engine program this (cfg, mesh, opt, settings) lowers to:
+    ``"faithful"`` | ``"zero"`` | ``None`` (GSPMD path).
+
+    ``flat_engine="auto"`` degrades silently (faithful mode uses the flat
+    program whenever it can, everything else falls back to GSPMD), but an
+    EXPLICIT ``flat_engine="zero"`` request raises when it cannot engage —
+    silently handing back unsharded optimizer state would defeat the
+    memory plan the caller asked for.
+    """
+    if settings.flat_engine not in ("auto", "zero", "off"):
+        raise ValueError(f"flat_engine {settings.flat_engine!r}")
+    if settings.flat_engine == "off":
+        return None
+    want_zero = settings.flat_engine == "zero"
+
+    def unavailable(reason: str):
+        if want_zero:
+            raise ValueError(f"flat_engine='zero' unavailable: {reason}")
+        return None
+
+    if opt.kind not in ("adam", "adamw"):
+        return unavailable(f"requires adam/adamw, got {opt.kind!r}")
+    daxes = data_axes_of(mesh)
+    if not daxes:
+        return unavailable("mesh has no data-parallel axes")
+    # pure data-parallel only: with a live model axis the per-parameter
+    # shardings carry tensor-parallel structure a flat buffer would destroy
+    if any(mesh.shape[a] > 1 for a in mesh.axis_names if a not in daxes):
+        return unavailable("mesh has a live model axis")
+    # MoE loss paths shard_map internally (models/moe.py) and cannot nest
+    if cfg.family == "moe":
+        return unavailable("MoE loss paths shard_map internally")
+    if settings.faithful:
+        if want_zero:
+            raise ValueError(
+                "flat_engine='zero' conflicts with faithful=True "
+                "(faithful replicates optimizer state by definition)"
+            )
+        return "faithful"
+    if want_zero:
+        if len(daxes) != 1:
+            # reduce-scatter over exactly one named axis (multi-axis
+            # scatter ordering is version-dependent)
+            return unavailable(
+                f"needs exactly one data axis, mesh has {daxes}")
+        return "zero"
+    return None
 
 
 def _split_batch(batch: dict, k: int) -> dict:
@@ -43,14 +137,8 @@ def _split_batch(batch: dict, k: int) -> dict:
     return {n: sp(v) for n, v in batch.items()}
 
 
-def build_train_step(
-    cfg: ArchConfig,
-    mesh: Mesh,
-    rules: ShardRules,
-    opt: OptConfig,
-    settings: TrainSettings = TrainSettings(),
-) -> Callable:
-    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics)."""
+def _make_compute_grads(cfg, mesh, rules, settings):
+    """Shared loss+grad (with §5.1 slicing) used by both lowerings."""
     mod = registry.get_module(cfg)
 
     def loss_for_grad(params, microbatch):
@@ -91,12 +179,180 @@ def build_train_step(
         grads = jax.tree.map(lambda g, p: g.astype(p.dtype), grads, params)
         return loss, metrics, grads
 
+    return compute_grads
+
+
+def build_train_step(
+    cfg: ArchConfig,
+    mesh: Mesh,
+    rules: ShardRules,
+    opt: OptConfig,
+    settings: TrainSettings = TrainSettings(),
+) -> Callable:
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    The returned callable carries introspection attributes:
+    ``_flat_engine`` (None | "faithful" | "zero"), and when flat,
+    ``_flat_layout`` / ``_flat_buckets``.
+    """
+    mode = flat_engine_mode(cfg, mesh, opt, settings)
+    if mode is not None:
+        return _build_flat_train_step(cfg, mesh, rules, opt, settings, mode)
+
+    compute_grads = _make_compute_grads(cfg, mesh, rules, settings)
+
     def train_step(params, opt_state, batch):
         loss, metrics, grads = compute_grads(params, batch)
         params, opt_state, opt_metrics = apply_update(opt, params, grads, opt_state)
         return params, opt_state, {"loss": loss, **metrics, **opt_metrics}
 
+    train_step._flat_engine = None
     return train_step
+
+
+# ---------------------------------------------------------------------------
+# Flat-gradient engine (paper §3.3 + bucketed collectives)
+# ---------------------------------------------------------------------------
+
+
+def flat_layout_for(cfg: ArchConfig) -> FlatLayout:
+    return make_layout(registry.abstract_params(cfg))
+
+
+def buckets_for(
+    cfg: ArchConfig, mesh: Mesh, opt: OptConfig, *, n_shards: int = 1,
+) -> BucketLayout:
+    layout = flat_layout_for(cfg)
+    return make_buckets(
+        layout, bucket_bytes=int(opt.bucket_mb * (1 << 20)), n_shards=n_shards,
+    )
+
+
+def _build_flat_train_step(cfg, mesh, rules, opt, settings, mode: str):
+    compute_grads = _make_compute_grads(cfg, mesh, rules, settings)
+    daxes = data_axes_of(mesh)
+    n_data = int(np.prod([mesh.shape[a] for a in daxes], dtype=np.int64))
+    layout = flat_layout_for(cfg)
+    buckets = make_buckets(
+        layout,
+        bucket_bytes=int(opt.bucket_mb * (1 << 20)),
+        n_shards=n_data if mode == "zero" else 1,
+    )
+    wd = opt.weight_decay if opt.kind == "adamw" else 0.0
+
+    def _clip(gflat_sq_sum, g):
+        norm = jnp.sqrt(gflat_sq_sum)
+        scale = jnp.minimum(1.0, opt.grad_clip / jnp.maximum(norm, 1e-12))
+        return g * scale, norm
+
+    def worker(params, opt_state, batch):
+        with common_mod.manual_mode():
+            loss, metrics, grads = compute_grads(params, batch)
+        loss = jax.lax.pmean(loss, daxes)
+        metrics = jax.tree.map(lambda x: jax.lax.pmean(x, daxes), metrics)
+        gflat = flatten(layout, grads)
+        step = opt_state["step"] + 1
+        adam_kw = dict(
+            lr=opt.lr, beta1=opt.beta1, beta2=opt.beta2, eps=opt.eps,
+            weight_decay=wd, use_kernel=settings.flat_kernel,
+        )
+
+        if mode == "faithful":
+            # Appendix A, bucketed: every worker ends with the full mean
+            # gradient; update replicated flat p/m/v buffers in one pass.
+            gflat = bucketed_all_reduce(gflat, buckets, daxes, op="mean")
+            if opt.grad_clip:
+                gflat, gnorm = _clip(jnp.sum(jnp.square(gflat)), gflat)
+                metrics = {**metrics, "grad_norm": gnorm}
+            pflat = flatten(layout, params)
+            mflat = flatten(layout, opt_state["m"])
+            vflat = flatten(layout, opt_state["v"])
+            pflat, mflat, vflat = flat_adam_apply(
+                pflat, gflat, mflat, vflat, step, **adam_kw
+            )
+            new_params = unflatten(layout, pflat)
+            new_state = {
+                "step": step,
+                "m": unflatten(layout, mflat, dtype=jnp.float32),
+                "v": unflatten(layout, vflat, dtype=jnp.float32),
+            }
+            return new_params, new_state, {"loss": loss, **metrics}
+
+        # ZeRO: own 1/N of every bucket; m/v live scattered (flat, sharded)
+        g_loc = bucketed_reduce_scatter(gflat, buckets, daxes[0], op="mean")
+        if opt.grad_clip:
+            g_loc, gnorm = _clip(
+                jax.lax.psum(jnp.sum(jnp.square(g_loc)), daxes), g_loc
+            )
+            metrics = {**metrics, "grad_norm": gnorm}
+        widx = jax.lax.axis_index(daxes[0])
+        p_loc = scatter_flat(flatten(layout, params), buckets, widx)
+        p_loc, m_loc, v_loc = flat_adam_apply(
+            p_loc, g_loc, opt_state["m"], opt_state["v"], step, **adam_kw
+        )
+        new_params = unflatten(
+            layout, bucketed_all_gather(p_loc, buckets, daxes[0])
+        )
+        new_state = {"step": step, "m": m_loc, "v": v_loc}
+        return new_params, new_state, {"loss": loss, **metrics}
+
+    if mode == "faithful":
+        opt_in = P()
+        opt_out = P()
+    else:
+        opt_in = {"step": P(), "m": P(daxes), "v": P(daxes)}
+        opt_out = {"step": P(), "m": P(daxes), "v": P(daxes)}
+
+    mapped = compat.shard_map(
+        worker,
+        mesh=mesh,
+        in_specs=(P(), opt_in, P(daxes)),
+        out_specs=(P(), opt_out, P()),
+        check_vma=False,
+    )
+
+    def train_step(params, opt_state, batch):
+        return mapped(params, opt_state, batch)
+
+    train_step._flat_engine = mode
+    train_step._flat_layout = layout
+    train_step._flat_buckets = buckets
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# Optimizer-state construction (mode-aware: ZeRO flat state is scattered)
+# ---------------------------------------------------------------------------
+
+
+def opt_state_template(
+    cfg: ArchConfig,
+    mesh: Mesh,
+    rules: ShardRules,
+    opt: OptConfig,
+    settings: TrainSettings = TrainSettings(),
+):
+    """Returns ``(init_fn(params) -> opt_state, state_pspecs_tree)``
+    consistent with what :func:`build_train_step` will expect."""
+    mode = flat_engine_mode(cfg, mesh, opt, settings)
+    if mode == "zero":
+        daxes = data_axes_of(mesh)
+        n_data = int(np.prod([mesh.shape[a] for a in daxes], dtype=np.int64))
+        buckets = buckets_for(cfg, mesh, opt, n_shards=n_data)
+        n = buckets.scattered_total
+
+        def init_fn(params):
+            del params
+            return {
+                "step": jnp.zeros((), jnp.int32),
+                "m": jnp.zeros((n,), jnp.float32),
+                "v": jnp.zeros((n,), jnp.float32),
+            }
+
+        pspecs = {"step": P(), "m": P(daxes), "v": P(daxes)}
+        return init_fn, pspecs
+    p_pspecs = registry.param_pspecs(cfg, rules)
+    return partial(init_state, opt), state_pspecs(opt, p_pspecs)
 
 
 # ---------------------------------------------------------------------------
@@ -126,8 +382,8 @@ def jit_train_step(
 
     params_sds = registry.abstract_params(cfg)
     p_pspecs = registry.param_pspecs(cfg, rules)
-    opt_sds = jax.eval_shape(partial(init_state, opt), params_sds)
-    o_pspecs = state_pspecs(opt, p_pspecs)
+    opt_init, o_pspecs = opt_state_template(cfg, mesh, rules, opt, settings)
+    opt_sds = jax.eval_shape(opt_init, params_sds)
     batch_sds, b_pspecs = registry.train_inputs(cfg, shape, rules)
 
     in_sh = (
@@ -142,4 +398,7 @@ def jit_train_step(
         out_shardings=out_sh,
         donate_argnums=(0, 1) if donate else (),
     )
+    jitted._flat_engine = getattr(step, "_flat_engine", None)
+    jitted._flat_layout = getattr(step, "_flat_layout", None)
+    jitted._flat_buckets = getattr(step, "_flat_buckets", None)
     return jitted, (params_sds, opt_sds, batch_sds), in_sh

@@ -1,0 +1,80 @@
+"""Minimal deterministic stand-in for the `hypothesis` package.
+
+The container image may not ship `hypothesis`; rather than skip the
+property tests, conftest installs this module under the name
+``hypothesis`` when the real package is missing.  It covers exactly the
+surface the test suite uses — ``@given`` with keyword strategies,
+``@settings(max_examples=, deadline=)``, and the ``sampled_from`` /
+``integers`` / ``lists`` strategies — drawing a fixed number of examples
+from a per-test seeded RNG so runs are reproducible.  No shrinking, no
+database, no health checks.
+"""
+from __future__ import annotations
+
+import inspect
+import random
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+
+def sampled_from(elements) -> _Strategy:
+    elements = list(elements)
+    return _Strategy(lambda rng: rng.choice(elements))
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def lists(elements: _Strategy, min_size: int = 0, max_size: int = 10) -> _Strategy:
+    return _Strategy(
+        lambda rng: [
+            elements._draw(rng) for _ in range(rng.randint(min_size, max_size))
+        ]
+    )
+
+
+class strategies:
+    sampled_from = staticmethod(sampled_from)
+    integers = staticmethod(integers)
+    lists = staticmethod(lists)
+
+
+def settings(max_examples: int = 10, deadline=None, **_ignored):
+    def deco(fn):
+        fn._mini_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(**strats):
+    def deco(fn):
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_mini_max_examples", None) or getattr(
+                fn, "_mini_max_examples", 10
+            )
+            rng = random.Random(f"minihypothesis::{fn.__module__}.{fn.__qualname__}")
+            for _ in range(n):
+                drawn = {k: s._draw(rng) for k, s in strats.items()}
+                fn(*args, **kwargs, **drawn)
+
+        # Copy identity WITHOUT functools.wraps: __wrapped__ would make
+        # pytest introspect the original signature and treat the strategy
+        # parameters as fixtures.  Any non-strategy params of fn stay
+        # visible so real fixtures still work.
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        remaining = [
+            p for name, p in inspect.signature(fn).parameters.items()
+            if name not in strats
+        ]
+        wrapper.__signature__ = inspect.Signature(remaining)
+        return wrapper
+
+    return deco

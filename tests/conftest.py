@@ -1,8 +1,17 @@
 """Shared fixtures.  NOTE: no XLA_FLAGS here — tests see 1 real CPU device;
 multi-device semantics tests spawn subprocesses with
 ``--xla_force_host_platform_device_count`` (see tests/md/)."""
+import sys
+
 import jax
 import pytest
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:  # image without hypothesis: install the mini stand-in
+    import _minihypothesis
+
+    sys.modules["hypothesis"] = _minihypothesis
 
 from repro.launch.mesh import single_device_mesh
 from repro.models.common import ShardRules

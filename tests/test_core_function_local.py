@@ -1,4 +1,9 @@
-"""Single-device semantics of synk.function (fast paths + regressions)."""
+"""Local semantics of synk.function (fast paths + regressions).
+
+Written against however many local devices exist (1 in the default
+pytest run; scripts/ci.sh re-runs the suite under 8 forced host devices),
+so sizes scale with ``ctx.n_data``.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -34,7 +39,8 @@ def test_pytree_arguments():
 
 
 def test_pytree_outputs_prefix_spec():
-    synk.fork()
+    ctx = synk.fork()
+    n = ctx.n_data
 
     def step(x, params):
         new = jax.tree.map(lambda p: p + 1.0, params)
@@ -42,11 +48,11 @@ def test_pytree_outputs_prefix_spec():
 
     f = synk.function(step, [synk.Scatter(), synk.Broadcast()],
                       (synk.Reduce("sum"), synk.Reduce(None)))
-    x = np.ones((4, 2), np.float32)
+    x = np.ones((8 * n, 2), np.float32)
     params = {"w": np.zeros(3, np.float32), "b": np.float32(1.0)}
     s, new = f(x, params)
-    np.testing.assert_allclose(s, 8.0)
-    np.testing.assert_allclose(np.asarray(new["w"]), np.ones((1, 3)))
+    np.testing.assert_allclose(s, 16.0 * n)
+    np.testing.assert_allclose(np.asarray(new["w"]), np.ones((n, 3)))
 
 
 def test_wrong_arity_raises():
@@ -56,11 +62,15 @@ def test_wrong_arity_raises():
         f(np.ones(4), np.ones(4))
 
 
-def test_indivisible_scatter_raises():
-    synk.fork()  # 1 device: everything divides; simulate via bad n check
+def test_indivisible_scatter():
+    ctx = synk.fork()
     f = synk.function(lambda x: jnp.mean(x), [synk.Scatter()], synk.Reduce("mean"))
-    out = f(np.ones((3, 2), np.float32))
-    np.testing.assert_allclose(out, 1.0)
+    if ctx.n_data == 1:  # 1 device: everything divides
+        out = f(np.ones((3, 2), np.float32))
+        np.testing.assert_allclose(out, 1.0)
+    else:
+        with pytest.raises(ValueError, match="divide"):
+            f(np.ones((ctx.n_data + 1, 2), np.float32))
 
 
 def test_bad_specs_raise():
@@ -73,7 +83,8 @@ def test_bad_specs_raise():
 
 
 def test_call_caching():
-    synk.fork()
+    ctx = synk.fork()
+    n = ctx.n_data
     calls = []
 
     def fn(x):
@@ -81,8 +92,30 @@ def test_call_caching():
         return jnp.sum(x)
 
     f = synk.function(fn, [synk.Scatter()], synk.Reduce("sum"))
-    f(np.ones((4, 2), np.float32))
-    f(np.full((4, 2), 2.0, np.float32))          # same shapes: cached
+    f(np.ones((4 * n, 2), np.float32))
+    f(np.full((4 * n, 2), 2.0, np.float32))      # same shapes: cached
     n_after_same = len(calls)
-    f(np.ones((8, 2), np.float32))               # new shape: retrace
+    assert f.stats["builds"] == 1 and f.stats["calls"] == 2
+    f(np.ones((8 * n, 2), np.float32))           # new shape: retrace
     assert len(calls) > n_after_same
+    assert f.stats["builds"] == 2
+
+
+def test_device_put_skipped_for_resident_arrays():
+    ctx = synk.fork()
+    f = synk.function(lambda x: jnp.sum(x), [synk.Scatter()], synk.Reduce("sum"))
+    x = np.ones((4 * ctx.n_data, 2), np.float32)
+    f(x)
+    xs = jax.device_put(x, ctx.sharding(ctx.data_spec(None)))
+    before = f.stats["device_put_skips"]
+    np.testing.assert_allclose(f(xs), x.sum())
+    assert f.stats["device_put_skips"] == before + 1
+
+
+def test_donate_scattered_inputs():
+    ctx = synk.fork()
+    f = synk.function(lambda x: jnp.sum(x), [synk.Scatter()],
+                      synk.Reduce("sum"), donate=True)
+    x = np.ones((4 * ctx.n_data, 2), np.float32)
+    np.testing.assert_allclose(f(x), x.sum())
+    np.testing.assert_allclose(f(x + 1), (x + 1).sum())  # fresh staging each call

@@ -40,3 +40,21 @@ def test_sgd_parity_with_serial_program():
 def test_elastic_restore():
     """Checkpoint from a dp=8 mesh restores and trains on a dp=4xtp=2 mesh."""
     run_check("elastic")
+
+
+def test_global_indexing():
+    """Regression: device-resident batch= ids are GLOBAL rows; shuffled
+    indices crossing shard boundaries must read the right rows, concat
+    outputs slice back to the request length (incl. pad > len(idx))."""
+    run_check("indexing_global")
+
+
+def test_bucketed_reduce_matches_monolithic():
+    """Bucketed flat all-reduce == monolithic pmean bit-for-bit (fp32)."""
+    run_check("bucketed_reduce")
+
+
+def test_flat_engine_parity():
+    """Faithful flat engine and ZeRO flat engine track the legacy GSPMD
+    adam step loss-for-loss over several steps on dp=8."""
+    run_check("flat_parity")
