@@ -70,7 +70,7 @@ def bench_step(smoke: bool, iters: int) -> dict:
     cfg = get_smoke_config("smollm-360m")
     B, S = (16, 8) if smoke else (64, 32)
     mesh = _mk((jax.device_count(), 1), ("data", "model"))
-    shape = ShapeConfig("bench", "train", B, S)
+    shape = ShapeConfig("bench", "train", S, B)   # (seq_len, global_batch)
     rng = np.random.default_rng(0)
     tokens = rng.integers(0, cfg.vocab, size=(B, S + 1)).astype(np.int32)
 

@@ -8,6 +8,9 @@ Prints ``name,us_per_call,derived`` CSV rows:
   overlap          — bucketed flat-gradient engine + dispatch overhead
                      (subprocess on a forced 8-device host mesh; also
                      writes BENCH_overlap.json to the repo root)
+  serve            — continuous-batching serve engine vs the static-batch
+                     loop on a Poisson arrival trace (subprocess, 8-device
+                     host mesh; writes BENCH_serve.json to the repo root)
 """
 from __future__ import annotations
 
@@ -59,20 +62,64 @@ def run_overlap(emit, smoke: bool = True,
     return True
 
 
+def run_serve(emit, smoke: bool = True, out_json: str | None = None) -> bool:
+    """Run serve_bench in a subprocess (XLA_FLAGS before jax init) and
+    surface the headline rows as CSV."""
+    out_json = out_json or os.path.join(REPO, "BENCH_serve.json")
+    cmd = [sys.executable, os.path.join(REPO, "benchmarks", "serve_bench.py"),
+           "--json", out_json]
+    if smoke:
+        cmd.append("--smoke")
+    env = dict(os.environ)
+    flags = env.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        env["XLA_FLAGS"] = (
+            flags + " --xla_force_host_platform_device_count=8").strip()
+    r = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                       timeout=1800)
+    if r.returncode != 0:
+        print(r.stdout[-2000:], file=sys.stderr)
+        print(r.stderr[-2000:], file=sys.stderr)
+        return False
+    with open(out_json) as fh:
+        rep = json.load(fh)
+    for name, row in rep["modes"].items():
+        emit(f"serve/{name}", 1e6 / row["tokens_per_s"],
+             f"p99={row['p99_ms_per_token']:.0f}ms/tok")
+    h = rep["headline"]
+    emit("serve/speedup_vs_static", h["speedup_vs_static"] * 100,
+         "continuous/static tokens-per-s x100")
+    # full acceptance: >= 2x tokens/s at equal-or-better p99 per-token
+    # latency, with zero executable builds after warmup
+    ok = (h["speedup_vs_static"] >= 2.0
+          and h["p99_ratio_vs_static"] <= 1.0
+          and h["steady_builds_delta"] == 0)
+    if not ok:
+        print(f"serve bench FAILED acceptance: {h}", file=sys.stderr)
+    return ok
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list: fig23,table1,roofline,kernels,overlap")
+                    help="comma list: fig23,table1,roofline,kernels,overlap,serve")
     ap.add_argument("--full-overlap", action="store_true",
                     help="overlap bench at full (non-smoke) sizes")
     args = ap.parse_args()
-    want = set((args.only or "fig23,table1,roofline,kernels,overlap").split(","))
+    want = set(
+        (args.only or "fig23,table1,roofline,kernels,overlap,serve").split(","))
 
     print("name,us_per_call,derived")
     ok = True
     if "overlap" in want:
         try:
             ok = run_overlap(emit, smoke=not args.full_overlap) and ok
+        except Exception:
+            ok = False
+            traceback.print_exc()
+    if "serve" in want:
+        try:
+            ok = run_serve(emit, smoke=not args.full_overlap) and ok
         except Exception:
             ok = False
             traceback.print_exc()

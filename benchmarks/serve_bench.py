@@ -1,0 +1,271 @@
+"""Serve benchmark: continuous batching vs the static-batch loop, fused
+vs host sampling, on a Poisson arrival trace.  Writes BENCH_serve.json.
+
+Runs on a forced 8-device host mesh (env var must be set before jax
+initializes, so run as a script — ``benchmarks/run.py`` spawns it).
+
+    python benchmarks/serve_bench.py --smoke --json BENCH_serve.json
+
+Workload: requests with heterogeneous prompt lengths and a heavy-tailed
+token-budget distribution (most requests short, every 8th long) arriving
+on a Poisson clock fast enough to keep the system load-saturated.  This is
+the regime continuous batching targets: a static batch runs every lane to
+the batch's *max* budget (dead slots decode padding) and a whole batch
+head-of-line-blocks behind its straggler, while the slotted engine admits
+from the queue the step a lane frees.
+
+Modes:
+    static_batch      legacy loop: batches of ``max_slots`` in arrival
+                      order, prefill+decode executables built ONCE and
+                      reused (a *stronger* baseline than ``generate()``,
+                      which re-traces every call), host-side sampling.
+    continuous_fused  the serve engine: slotted cache, fused sampling,
+                      AOT-cached dispatch.  The headline.
+    continuous_host   engine with ``fused_sampling=False``: full logits
+                      round-trip + host sampling per step (ablates the
+                      fused sampler).
+
+Each engine mode runs the trace twice: a warmup pass (arrivals collapsed
+to t=0) that compiles every executable the trace needs, then the timed
+pass.  ``steady_builds_delta`` must be 0 — the AOT dispatch cache may not
+miss in steady state (scripts/ci.sh fails otherwise).
+
+Metrics per mode: useful tokens/s (every request's budgeted tokens /
+wall), and p50/p99 per-token latency ((last-token-time - arrival) /
+tokens, over requests).
+"""
+from __future__ import annotations
+
+import os
+
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = (
+        _flags + " --xla_force_host_platform_device_count=8").strip()
+
+import argparse     # noqa: E402
+import dataclasses  # noqa: E402
+import json         # noqa: E402
+import sys          # noqa: E402
+import time         # noqa: E402
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax          # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+
+@dataclasses.dataclass
+class _Req:
+    rid: int
+    arrival: float          # seconds from trace start
+    prompt: np.ndarray
+    budget: int             # tokens to generate
+
+
+def make_trace(n_requests: int, vocab: int, *, seed: int = 0,
+               rate: float = 60.0, long_every: int = 8,
+               long_budget: int = 64) -> list[_Req]:
+    """Poisson arrivals; short budgets with a deterministic heavy tail
+    (every ``long_every``-th request wants ``long_budget`` tokens)."""
+    rng = np.random.default_rng(seed)
+    t = 0.0
+    out = []
+    for i in range(n_requests):
+        t += rng.exponential(1.0 / rate)
+        plen = int(rng.integers(4, 25))
+        budget = long_budget if i % long_every == long_every - 1 \
+            else int(rng.integers(2, 6))
+        out.append(_Req(i, t, rng.integers(0, vocab, plen).astype(np.int32), budget))
+    return out
+
+
+def _percentiles(lat_ms: list[float]) -> dict:
+    a = np.asarray(lat_ms)
+    return {"p50_ms_per_token": float(np.percentile(a, 50)),
+            "p99_ms_per_token": float(np.percentile(a, 99))}
+
+
+def _summary(wall: float, tokens: int, lat_ms: list[float], **extra) -> dict:
+    return {"tokens_per_s": tokens / wall, "useful_tokens": tokens,
+            "wall_s": wall, **_percentiles(lat_ms), **extra}
+
+
+# ---------------------------------------------------------------------------
+# Static-batch baseline
+# ---------------------------------------------------------------------------
+
+
+def run_static(cfg, mesh, rules, params, trace: list[_Req], *,
+               batch: int, temperature: float = 0.0) -> dict:
+    """Fixed batches in arrival order; every lane decodes to the batch-max
+    budget; host sampling.  Executables are built once and reused (already
+    generous to the baseline — ``generate()`` re-traces per call)."""
+    from repro.configs.base import ShapeConfig
+    from repro.serve.step import jit_decode_step, jit_prefill
+
+    s_pad = max(r.prompt.size for r in trace)
+    max_new = max(r.budget for r in trace)
+    max_len = s_pad + max_new
+    prefill_fn, _ = jit_prefill(
+        cfg, mesh, rules, ShapeConfig("bench", "prefill", s_pad, batch),
+        max_len=max_len)
+    decode_fn, _ = jit_decode_step(
+        cfg, mesh, rules, ShapeConfig("bench", "decode", max_len, batch),
+        donate=True)
+
+    def one_batch(group: list[_Req], budget: int):
+        """Returns per-step wall times of each produced token row."""
+        prompts = np.zeros((batch, s_pad), np.int32)
+        for j, r in enumerate(group):
+            prompts[j, : r.prompt.size] = r.prompt
+        cache, logits = prefill_fn(params, jnp.asarray(prompts), None)
+        times = []
+        for t in range(budget):
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)  # host round-trip
+            np.asarray(tok)
+            times.append(time.perf_counter())
+            logits, cache = decode_fn(params, cache, tok, jnp.int32(s_pad + t))
+        return times
+
+    # warmup: compile both executables
+    one_batch(trace[:batch], 1)
+
+    lat_ms, tokens = [], 0
+    t0 = time.perf_counter()
+    for i in range(0, len(trace), batch):
+        group = trace[i : i + batch]
+        # head-of-line: the batch launches once its last member has arrived
+        wait = t0 + group[-1].arrival - time.perf_counter()
+        if wait > 0:
+            time.sleep(wait)
+        budget = max(r.budget for r in group)
+        times = one_batch(group, budget)
+        for r in group:
+            done = times[r.budget - 1]
+            lat_ms.append((done - (t0 + r.arrival)) / r.budget * 1e3)
+            tokens += r.budget
+    wall = time.perf_counter() - t0
+    return _summary(wall, tokens, lat_ms, batches=len(range(0, len(trace), batch)),
+                    steps=sum(max(r.budget for r in trace[i:i + batch])
+                              for i in range(0, len(trace), batch)))
+
+
+# ---------------------------------------------------------------------------
+# Continuous engine
+# ---------------------------------------------------------------------------
+
+
+def run_continuous(cfg, mesh, rules, params, trace: list[_Req], *,
+                   max_slots: int, max_len: int, fused: bool,
+                   temperature: float = 0.0) -> dict:
+    from repro.serve import EngineConfig, ServeEngine
+
+    engine = ServeEngine(
+        cfg, mesh, rules, params,
+        EngineConfig(max_slots=max_slots, max_len=max_len,
+                     fused_sampling=fused),
+    )
+
+    def play(timed: bool):
+        i = 0
+        t0 = time.perf_counter()
+        while i < len(trace) or engine.has_work():
+            now = time.perf_counter() - t0
+            while i < len(trace) and (not timed or trace[i].arrival <= now):
+                r = trace[i]
+                engine.submit(r.prompt, max_new_tokens=r.budget,
+                              temperature=temperature, rid=r.rid + (0 if timed else 10**6))
+                i += 1
+            if not engine.step() and timed and i < len(trace):
+                time.sleep(max(0.0, t0 + trace[i].arrival - time.perf_counter()))
+        return t0, time.perf_counter() - t0
+
+    play(timed=False)                       # warmup: compiles every bucket
+    builds_warm = engine.stats["builds"]
+    t0, wall = play(timed=True)
+    builds_delta = engine.stats["builds"] - builds_warm
+
+    lat_ms, tokens = [], 0
+    for r in trace:
+        c = engine.completions[r.rid]
+        lat_ms.append((c.token_times[-1] - (t0 + r.arrival)) / len(c.tokens) * 1e3)
+        tokens += len(c.tokens)
+    return _summary(wall, tokens, lat_ms, steady_builds_delta=builds_delta,
+                    stats=engine.stats)
+
+
+# ---------------------------------------------------------------------------
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true", help="CI sizes")
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args(argv)
+
+    from repro.configs import get_smoke_config
+    from repro.launch.mesh import local_mesh
+    from repro.models import registry
+    from repro.models.common import ShardRules
+
+    # smoke model with the REAL vocab: serving moves (slots, V) logits per
+    # step, so a toy vocab would hide exactly the cost the fused sampler
+    # removes (the host logits round-trip)
+    cfg = dataclasses.replace(
+        get_smoke_config("smollm-360m"), vocab=49_152)
+    mesh = local_mesh()
+    rules = ShardRules.for_mesh(mesh)
+    params = registry.get_module(cfg).init(cfg, jax.random.PRNGKey(0))
+
+    n_requests = args.requests or (24 if args.smoke else 64)
+    max_slots, long_budget = 8, 64
+    trace = make_trace(n_requests, cfg.vocab, long_budget=long_budget)
+    max_len = max(r.prompt.size for r in trace) + long_budget
+
+    report = {
+        "meta": {
+            "bench": "serve",
+            "devices": jax.device_count(),
+            "backend": jax.default_backend(),
+            "jax": jax.__version__,
+            "smoke": bool(args.smoke),
+            "config": cfg.name,
+            "trace": {
+                "n_requests": n_requests, "max_slots": max_slots,
+                "max_len": max_len, "long_budget": long_budget,
+                "useful_tokens": sum(r.budget for r in trace),
+            },
+        },
+        "modes": {},
+    }
+    report["modes"]["static_batch"] = run_static(
+        cfg, mesh, rules, params, trace, batch=max_slots)
+    report["modes"]["continuous_fused"] = run_continuous(
+        cfg, mesh, rules, params, trace, max_slots=max_slots,
+        max_len=max_len, fused=True)
+    report["modes"]["continuous_host"] = run_continuous(
+        cfg, mesh, rules, params, trace, max_slots=max_slots,
+        max_len=max_len, fused=False)
+
+    st, cf = report["modes"]["static_batch"], report["modes"]["continuous_fused"]
+    report["headline"] = {
+        "speedup_vs_static": cf["tokens_per_s"] / st["tokens_per_s"],
+        "p99_ratio_vs_static": cf["p99_ms_per_token"] / st["p99_ms_per_token"],
+        "fused_speedup_vs_host": (
+            cf["tokens_per_s"]
+            / report["modes"]["continuous_host"]["tokens_per_s"]),
+        "steady_builds_delta": cf["steady_builds_delta"],
+    }
+    text = json.dumps(report, indent=2)
+    print(text)
+    if args.json:
+        with open(args.json, "w") as fh:
+            fh.write(text + "\n")
+    return report
+
+
+if __name__ == "__main__":
+    main()

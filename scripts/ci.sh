@@ -1,6 +1,9 @@
 #!/usr/bin/env bash
-# Tier-1 CI: test suite on a forced 8-device host mesh + the overlap
-# benchmark in smoke mode (writes BENCH_overlap.json to the repo root).
+# Tier-1 CI: test suite on a forced 8-device host mesh + the overlap and
+# serve benchmarks in smoke mode (write BENCH_overlap.json /
+# BENCH_serve.json to the repo root).  The serve bench gates on its
+# dispatch counters: steady-state decode must show ZERO new executable
+# builds after warmup (the AOT cache must not silently start missing).
 #
 #   scripts/ci.sh             # full run
 #   scripts/ci.sh -k buckets  # extra args forwarded to pytest
@@ -25,4 +28,22 @@ d = rep["dispatch"]
 print(f"  dispatch: cold {d['cold_ms']:.1f} ms, cached {d['cached_us']:.0f} us, "
       f"presharded {d['presharded_us']:.0f} us")
 EOF
-echo "CI OK — BENCH_overlap.json written"
+
+echo "== serve bench (smoke, 8 forced host devices) =="
+python benchmarks/serve_bench.py --smoke --json BENCH_serve.json >/dev/null
+python - <<'EOF'
+import json, sys
+rep = json.load(open("BENCH_serve.json"))
+for name, row in rep["modes"].items():
+    print(f"  {name:16s} {row['tokens_per_s']:7.1f} tok/s  "
+          f"p50 {row['p50_ms_per_token']:7.1f} ms/tok  "
+          f"p99 {row['p99_ms_per_token']:7.1f} ms/tok")
+h = rep["headline"]
+print(f"  speedup_vs_static {h['speedup_vs_static']:.2f}x  "
+      f"p99_ratio {h['p99_ratio_vs_static']:.2f}  "
+      f"steady_builds_delta {h['steady_builds_delta']}")
+if h["steady_builds_delta"] != 0:
+    sys.exit("FAIL: serve decode built executables after warmup "
+             "(AOT dispatch cache regression)")
+EOF
+echo "CI OK — BENCH_overlap.json + BENCH_serve.json written"

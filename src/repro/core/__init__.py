@@ -13,6 +13,7 @@ Public API (mirrors the paper's, Appendix A):
     out = f(dx, dy, batch=idxs)             # §5.2 input indexing
     params = synk.all_reduce(params, "avg") # NCCL-style collective
 """
+from .aot import AotCache
 from .context import SynkContext, current, fork, make_mesh, reset
 from .specs import Broadcast, Reduce, Scatter
 from .function import SynkFunction, function
@@ -32,6 +33,7 @@ from .collectives import (
 )
 
 __all__ = [
+    "AotCache",
     "SynkContext", "current", "fork", "make_mesh", "reset",
     "Broadcast", "Reduce", "Scatter",
     "SynkFunction", "function",

@@ -1,0 +1,55 @@
+"""AOT executable cache shared by the train and serve dispatch paths.
+
+``SynkFunction`` (core/function.py) caches one ``.lower().compile()``'d
+executable per call signature so steady-state dispatch is a dict probe.
+The serve engine needs exactly the same machinery for its prefill/decode
+executables — keyed on (config, bucketed prompt length, slot count)
+instead of argument signatures — so the cache lives here as a small
+reusable class instead of inline in ``SynkFunction.__call__``.
+
+The cache is deliberately dumb: a dict from a hashable key to whatever
+``build()`` returned, plus hit/miss counters.  Callers own key hygiene
+(include every static option that changes the lowered program) and
+eviction (none — executables are meant to live for the process; an
+unbounded signature space is a caller bug, surfaced by ``builds``
+growing without bound).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Iterator
+
+
+class AotCache:
+    """Keyed store of AOT-compiled executables with hit/miss counters.
+
+    ``stats["builds"]`` counts cache misses (one trace+compile each);
+    ``stats["cache_hits"]`` counts steady-state dispatches.  A warmed-up
+    caller must show a flat ``builds`` counter — CI asserts this for the
+    serve engine (scripts/ci.sh) and the overlap bench tracks it for
+    ``SynkFunction``.
+    """
+
+    def __init__(self, name: str = "aot"):
+        self.name = name
+        self._entries: dict[Any, Any] = {}
+        self.stats = {"builds": 0, "cache_hits": 0}
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, key) -> bool:
+        return key in self._entries
+
+    def keys(self) -> Iterator[Any]:
+        return iter(self._entries)
+
+    def get(self, key, build: Callable[[], Any]):
+        """Return the cached entry for ``key``, building it on first use."""
+        entry = self._entries.get(key)
+        if entry is None:
+            self.stats["builds"] += 1
+            entry = build()
+            self._entries[key] = entry
+        else:
+            self.stats["cache_hits"] += 1
+        return entry

@@ -54,6 +54,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import compat
 from . import context as ctx_mod
+from .aot import AotCache
 from .data import DeviceDataset, SynkData, is_dataset, is_host_data
 from .slicing import _flatten_ops, sliced_call
 from .specs import Broadcast, Reduce, Scatter, canonicalize_in_spec, canonicalize_out_spec
@@ -101,12 +102,17 @@ class SynkFunction:
         self.backend = backend
         self.name = name or getattr(fn, "__name__", "synk_fn")
         self.donate = donate
-        self._cache: dict[Any, _CacheEntry] = {}
+        # AOT executables per call signature (shared cache class with the
+        # serve engine; its builds/cache_hits counters feed self.stats)
+        self.aot = AotCache(self.name)
         # shardings are signature-independent; precompute per (spec, ndim)
         self._sharding_cache: dict[tuple, NamedSharding] = {}
-        self.stats = {
-            "calls": 0, "builds": 0, "device_puts": 0, "device_put_skips": 0,
-        }
+        self._counters = {"calls": 0, "device_puts": 0, "device_put_skips": 0}
+
+    @property
+    def stats(self) -> dict:
+        """Dispatch counters (calls/builds/cache_hits/device_puts/...)."""
+        return {**self._counters, **self.aot.stats}
 
     # ------------------------------------------------------------------
     def __call__(self, *args, num_slices: int = 1, batch=None):
@@ -114,7 +120,7 @@ class SynkFunction:
             raise TypeError(
                 f"{self.name} takes {len(self.in_specs)} inputs, got {len(args)}"
             )
-        self.stats["calls"] += 1
+        self._counters["calls"] += 1
         ctx = self.ctx
         n = ctx.n_data
         dataset_arg = tuple(is_dataset(a) for a in args)
@@ -127,6 +133,8 @@ class SynkFunction:
             if idx_global.ndim != 1:
                 raise ValueError("batch= must be a 1-D index array")
             orig_len = idx_global.shape[0]
+            if orig_len == 0:
+                raise ValueError("batch= may not be empty")
             if orig_len % n != 0:
                 idx_global = _pad_indices(idx_global, n)
 
@@ -154,13 +162,8 @@ class SynkFunction:
             dataset_arg=dataset_arg, ds_local_len=tuple(ds_local_len),
         )
         key = self._signature(args, idx_global, plan)
-        entry = self._cache.get(key)
-
         staged, extra = self._stage_args(args, idx_global, plan)
-        if entry is None:
-            self.stats["builds"] += 1
-            entry = self._build_entry(plan, staged, extra)
-            self._cache[key] = entry
+        entry = self.aot.get(key, lambda: self._build_entry(plan, staged, extra))
         out = entry.exe(*staged, *extra)
         return self._postprocess(entry, out, orig_len)
 
@@ -213,9 +216,9 @@ class SynkFunction:
             )
         target = self._target_sharding(spec, arr.ndim)
         if getattr(arr, "sharding", None) == target:
-            self.stats["device_put_skips"] += 1
+            self._counters["device_put_skips"] += 1
             return arr
-        self.stats["device_puts"] += 1
+        self._counters["device_puts"] += 1
         return jax.device_put(arr, target)
 
     def _stage_args(self, args, idx_global, plan: _CallPlan):

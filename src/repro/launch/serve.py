@@ -1,10 +1,18 @@
-"""Serving launcher: prefill + batched decode with sequence-sharded caches.
+"""Serving launcher.
 
-    python -m repro.launch.serve --arch gemma2-27b --smoke --batch 4
+Continuous-batching engine under a Poisson request stream (the default):
+
+    python -m repro.launch.serve --arch smollm-360m --smoke \
+        --requests 16 --rate 20 --max-slots 8
+
+Legacy static batch (one fixed batch to completion):
+
+    python -m repro.launch.serve --arch gemma2-27b --smoke --engine static
 """
 from __future__ import annotations
 
 import argparse
+import time
 
 import jax
 import numpy as np
@@ -13,30 +21,10 @@ from repro.configs import ARCH_IDS, get_config, get_smoke_config
 from repro.launch.mesh import local_mesh, make_production_mesh, single_device_mesh
 from repro.models import registry
 from repro.models.common import ShardRules
-from repro.serve import ServeConfig, generate
+from repro.serve import EngineConfig, ServeConfig, ServeEngine, generate_static
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", choices=ARCH_IDS, required=True)
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--mesh", choices=("production", "local", "single"),
-                    default="single")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--new-tokens", type=int, default=16)
-    ap.add_argument("--temperature", type=float, default=0.0)
-    args = ap.parse_args()
-
-    mesh = {"production": make_production_mesh,
-            "local": local_mesh,
-            "single": single_device_mesh}[args.mesh]()
-    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
-    rules = ShardRules.for_mesh(mesh)
-    mod = registry.get_module(cfg)
-    params = mod.init(cfg, jax.random.PRNGKey(0))
-
-    rng = np.random.default_rng(0)
+def run_static(cfg, mesh, rules, params, args, rng):
     prompts = rng.integers(0, cfg.vocab,
                            (args.batch, args.prompt_len)).astype(np.int32)
     extra = None
@@ -46,11 +34,90 @@ def main():
     if cfg.family == "audio":
         extra = rng.normal(size=(args.batch, cfg.enc_seq,
                                  cfg.d_model)).astype(np.float32)
-    out = generate(cfg, mesh, rules, params, prompts, extra,
-                   ServeConfig(max_new_tokens=args.new_tokens,
-                               temperature=args.temperature))
+    out = generate_static(cfg, mesh, rules, params, prompts, extra,
+                          ServeConfig(max_new_tokens=args.new_tokens,
+                                      temperature=args.temperature))
     for i, row in enumerate(out):
         print(f"seq{i}: {row.tolist()}")
+
+
+def run_stream(cfg, mesh, rules, params, args, rng):
+    """Drive the continuous-batching engine with a Poisson arrival trace."""
+    engine = ServeEngine(
+        cfg, mesh, rules, params,
+        EngineConfig(
+            max_slots=args.max_slots,
+            max_len=args.prompt_len + args.new_tokens + 8,
+            seed=args.seed,
+        ),
+    )
+    arrivals = np.cumsum(rng.exponential(1.0 / args.rate, args.requests))
+    prompts = [
+        rng.integers(0, cfg.vocab, rng.integers(2, args.prompt_len + 1))
+        .astype(np.int32)
+        for _ in range(args.requests)
+    ]
+    budgets = rng.integers(1, args.new_tokens + 1, args.requests)
+
+    t0 = time.perf_counter()
+    i = 0
+    while i < len(prompts) or engine.has_work():
+        now = time.perf_counter() - t0
+        while i < len(prompts) and arrivals[i] <= now:
+            engine.submit(prompts[i], max_new_tokens=int(budgets[i]),
+                          temperature=args.temperature, rid=i)
+            i += 1
+        if not engine.step() and i < len(prompts):
+            time.sleep(max(0.0, t0 + arrivals[i] - time.perf_counter()))
+    wall = time.perf_counter() - t0
+
+    tokens = 0
+    for rid in range(len(prompts)):
+        c = engine.completions[rid]
+        tokens += len(c.tokens)
+        lat = (c.finish_time - c.submit_time) / len(c.tokens) * 1e3
+        print(f"req{rid}: plen={c.prompt_len} new={len(c.tokens)} "
+              f"{lat:.1f} ms/tok  {c.tokens}")
+    print(f"-- {tokens} tokens in {wall:.2f}s = {tokens / wall:.1f} tok/s")
+    print(f"-- stats: {engine.stats}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--mesh", choices=("production", "local", "single"),
+                    default="single")
+    ap.add_argument("--engine", choices=("continuous", "static"),
+                    default="continuous")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    # request-stream knobs (continuous engine)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--rate", type=float, default=20.0,
+                    help="Poisson arrival rate, requests/s")
+    ap.add_argument("--max-slots", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    mesh = {"production": make_production_mesh,
+            "local": local_mesh,
+            "single": single_device_mesh}[args.mesh]()
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    rules = ShardRules.for_mesh(mesh)
+    mod = registry.get_module(cfg)
+    params = mod.init(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(args.seed)
+
+    if args.engine == "continuous" and registry.supports_slot_serving(cfg):
+        run_stream(cfg, mesh, rules, params, args, rng)
+    else:
+        if args.engine == "continuous":
+            print(f"# family {cfg.family!r} has no slot-serving support; "
+                  "falling back to the static loop")
+        run_static(cfg, mesh, rules, params, args, rng)
 
 
 if __name__ == "__main__":

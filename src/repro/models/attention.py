@@ -214,7 +214,11 @@ def decode_attention(
     q:            (B, Hk, rep, D) — current-token queries (RoPE applied)
     k_cache/v_cache: (B, S, Hk, D) — sharded per ``sharding.cache_spec()``
     k_new/v_new:  (B, Hk, D) — current token's K/V, written at ``cur_index``
-    cur_index:    scalar int32 — number of tokens already in the cache
+    cur_index:    number of tokens already in the cache — scalar int32
+                  (all sequences aligned, the classic batched-decode path)
+                  or a ``(B,)`` vector (continuous batching: each slot is
+                  at its own position; writes and validity masks are
+                  per-row)
 
     Returns (out (B, Hk, rep, D), k_cache', v_cache').
     """
@@ -223,6 +227,7 @@ def decode_attention(
     S = k_cache.shape[1]
     n_seq = int(np.prod([mesh.shape[a] for a in saxes])) if saxes else 1
     s_loc = S // n_seq
+    vec_index = jnp.ndim(cur_index) == 1
 
     def shard_fn(q, kc, vc, kn, vn, idx):
         # local shapes: q (Bl, Hk, rep, D); kc/vc (Bl, s_loc, Hk, D)
@@ -231,28 +236,52 @@ def decode_attention(
         else:
             shard_id = jnp.int32(0)
         start = shard_id * s_loc
-        local_pos = jnp.clip(idx - start, 0, s_loc - 1)
-        in_range = (idx >= start) & (idx < start + s_loc)
+        pos = start + jnp.arange(s_loc)
 
-        def write(c, new):
-            upd = jax.lax.dynamic_update_slice_in_dim(
-                c, new[:, None].astype(c.dtype), local_pos, axis=1
-            )
-            return jnp.where(in_range, upd, c)
+        if vec_index:
+            # per-slot positions: per-row scatter writes + per-row valid
+            # masks.  The scatter touches only the Bl written rows — a
+            # one-hot select would rewrite the whole (Bl, s_loc, Hk, D)
+            # cache (the dominant decode tensor) every step.
+            rel = idx - start                              # (Bl,)
+            in_range = (rel >= 0) & (rel < s_loc)
+            rows = jnp.arange(rel.shape[0])
+            safe = jnp.clip(rel, 0, s_loc - 1)
+
+            def write(c, new):
+                keep = c[rows, safe]                       # (Bl, Hk, D)
+                val = jnp.where(
+                    in_range[:, None, None], new.astype(c.dtype), keep)
+                return c.at[rows, safe].set(val)
+
+            valid = pos[None, :] <= idx[:, None]           # (Bl, s_loc)
+            if window:
+                valid &= pos[None, :] > idx[:, None] - window
+            vmask = valid[:, None, None, :]
+        else:
+            local_pos = jnp.clip(idx - start, 0, s_loc - 1)
+            in_range = (idx >= start) & (idx < start + s_loc)
+
+            def write(c, new):
+                upd = jax.lax.dynamic_update_slice_in_dim(
+                    c, new[:, None].astype(c.dtype), local_pos, axis=1
+                )
+                return jnp.where(in_range, upd, c)
+
+            valid = pos <= idx
+            if window:
+                valid &= pos > idx - window
+            vmask = valid[None, None, None, :]
 
         kc = write(kc, kn)
         vc = write(vc, vn)
 
-        pos = start + jnp.arange(s_loc)
-        valid = pos <= idx
-        if window:
-            valid &= pos > idx - window
         s = jnp.einsum(
             "bhrd,bshd->bhrs", q.astype(jnp.float32), kc.astype(jnp.float32)
         ) * (q.shape[-1] ** -0.5)
         if softcap:
             s = softcap * jnp.tanh(s / softcap)
-        s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+        s = jnp.where(vmask, s, NEG_INF)
 
         m_loc = jnp.max(s, axis=-1)
         p = jnp.exp(s - m_loc[..., None])
@@ -278,7 +307,7 @@ def decode_attention(
         P(b, s_sp, None, None),          # v_cache
         P(b, None, None),                # k_new
         P(b, None, None),                # v_new
-        P(),                             # cur_index
+        P(b) if vec_index else P(),      # cur_index (vector is per-slot)
     )
     out_specs = (
         P(b, None, None, None),

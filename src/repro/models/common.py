@@ -214,6 +214,18 @@ def init_tree(key, tree):
 # ---------------------------------------------------------------------------
 
 
+def decode_positions(cur_index, batch: int):
+    """``(B, 1)`` int32 RoPE position row per sequence for a decode step.
+
+    ``cur_index`` is either a scalar (classic batched decode: every
+    sequence sits at the same position) or a ``(B,)`` vector (the serve
+    engine's slotted cache: each slot is at its own length).  Both
+    broadcast to one position column per row.
+    """
+    cur = jnp.asarray(cur_index, jnp.int32)
+    return jnp.broadcast_to(cur, (batch,))[:, None]
+
+
 def remat_wrap(body, remat):
     """Apply a rematerialisation policy to a scan body.
 

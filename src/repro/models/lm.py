@@ -24,6 +24,7 @@ from .common import (
     ShardRules,
     constrain,
     cross_entropy_loss,
+    decode_positions,
     init_tree,
     rms_norm,
     softcap,
@@ -211,7 +212,7 @@ def _block_decode(cfg, mesh, rules, x, bp, kc, vc, cur_index, *, window: int,
     if cfg.qk_norm:
         q = rms_norm(q, bp["qnorm"], cfg.norm_eps)
         k = rms_norm(k, bp["knorm"], cfg.norm_eps)
-    pos = jnp.full((B, 1), cur_index, jnp.int32)
+    pos = decode_positions(cur_index, B)
     q = rope(q[:, None], pos, cfg.rope_theta)[:, 0] * _q_scale(cfg)
     k = rope(k[:, None], pos, cfg.rope_theta)[:, 0]
     q = q.reshape(B, Hk, H // Hk, dh)
@@ -373,9 +374,37 @@ def prefill(cfg: ArchConfig, mesh: Mesh, rules: ShardRules, params, tokens,
     return cache, logits
 
 
+def prefill_slot(cfg: ArchConfig, mesh: Mesh, rules: ShardRules, params,
+                 cache, tokens, slot, plen):
+    """Prefill ONE prompt into lane ``slot`` of a slotted KV cache.
+
+    tokens: (1, S_bucket) int32 — the prompt, right-padded to its length
+    bucket; ``plen`` (traced scalar) is the real prompt length and ``slot``
+    (traced scalar) the lane index.  Causality makes the padding inert:
+    positions < plen never attend the padded tail, and the tail's garbage
+    KV is overwritten by decode steps before the sequence reaches it.
+
+    Returns (cache', logits (1, V) at position plen-1).
+    """
+    hidden, _, kv = forward(
+        cfg, mesh, rules, params, tokens, None, remat=False, collect_kv=True,
+    )
+    k, v = kv                                   # (L[,2], 1, S_bucket, Hk, dh)
+    lead = len(_leading(cfg))
+
+    def write(c, new):
+        start = (0,) * lead + (slot, 0, 0, 0)
+        return jax.lax.dynamic_update_slice(c, new.astype(c.dtype), start)
+
+    cache = {"k": write(cache["k"], k), "v": write(cache["v"], v)}
+    last = jax.lax.dynamic_index_in_dim(hidden, plen - 1, 1, keepdims=False)
+    return cache, unembed(cfg, rules, params, last)
+
+
 def decode_step(cfg: ArchConfig, mesh: Mesh, rules: ShardRules, params, cache,
                 tokens, cur_index):
-    """tokens: (B,) int32; cur_index: scalar — tokens already in cache.
+    """tokens: (B,) int32; cur_index: tokens already in cache — a scalar
+    (aligned batch) or a (B,) vector (slotted cache, per-lane positions).
 
     Returns (logits (B, V), new cache).
     """

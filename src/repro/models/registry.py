@@ -32,6 +32,13 @@ def get_module(cfg: ArchConfig):
     return _FAMILIES[cfg.family]
 
 
+def supports_slot_serving(cfg: ArchConfig) -> bool:
+    """Whether the family works with the continuous-batching serve engine
+    (needs ``prefill_slot`` + vector-``cur_index`` decode; the modality
+    frontends feed extra per-request inputs the slot path doesn't carry)."""
+    return cfg.family in ("dense", "moe") and hasattr(get_module(cfg), "prefill_slot")
+
+
 def abstract_params(cfg: ArchConfig):
     return spec_tree_to_sds(get_module(cfg).param_specs(cfg))
 

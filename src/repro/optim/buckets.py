@@ -41,6 +41,41 @@ from .flat import FlatLayout, flat_adam_update
 
 DEFAULT_BUCKET_BYTES = 4 << 20  # ~4 MiB, the NCCL-era sweet spot
 
+# Autotuner target: the fixed per-collective latency may eat at most this
+# fraction of each bucket's total collective time.  Smaller fraction ->
+# bigger buckets (less overlap granularity), larger -> more launch tax.
+_AUTO_LATENCY_FRACTION = 0.05
+_AUTO_MIN_BYTES = 1 << 20
+_AUTO_MAX_BYTES = 64 << 20
+
+
+def resolve_bucket_bytes(bucket_mb, *, group_size: int = 1) -> int:
+    """Resolve ``OptConfig.bucket_mb`` (a float MiB or ``"auto"``) to bytes.
+
+    ``"auto"`` sizes buckets from the roofline model: an all-reduce over a
+    ring of ``group_size`` workers moves ``2(g-1)/g * b`` wire bytes and
+    pays a fixed per-collective latency ``ICI_LATENCY_S``; the smallest
+    bucket whose wire time keeps that latency under
+    ``_AUTO_LATENCY_FRACTION`` of the total maximizes overlap granularity
+    without drowning in launch tax.  When the roofline lacks interconnect
+    numbers (``ICI_BW``/``ICI_LATENCY_S`` unset), auto falls back to the
+    static ~4 MiB default.
+    """
+    if bucket_mb != "auto":
+        return int(float(bucket_mb) * (1 << 20))
+    from repro.roofline import analysis
+
+    bw = getattr(analysis, "ICI_BW", None)
+    lat = getattr(analysis, "ICI_LATENCY_S", None)
+    if not bw or not lat:
+        return DEFAULT_BUCKET_BYTES
+    g = max(int(group_size), 2)   # wire factor of a degenerate group ~ g=2
+    wire_factor = 2.0 * (g - 1) / g
+    # lat <= f * (lat + wire_factor*b/bw)  =>  b >= lat*(1-f)/f * bw/wire_factor
+    f = _AUTO_LATENCY_FRACTION
+    b = lat * (1.0 - f) / f * bw / wire_factor
+    return int(min(max(b, _AUTO_MIN_BYTES), _AUTO_MAX_BYTES))
+
 
 @dataclasses.dataclass(frozen=True)
 class BucketLayout:

@@ -31,12 +31,23 @@ class OptConfig:
     # (the jnp mirror of the fused kernels/flat_adam pass; see §Perf)
     chunked: bool = False
     # flat-gradient bucket size (MiB) for the bucketed collective engine
-    # (optim/buckets.py); parameter-boundary-aligned greedy partition
-    bucket_mb: float = 4.0
+    # (optim/buckets.py); parameter-boundary-aligned greedy partition.
+    # "auto" sizes buckets from the roofline interconnect model
+    # (optim/buckets.resolve_bucket_bytes), falling back to 4 MiB when the
+    # roofline lacks interconnect numbers.
+    bucket_mb: float | str = 4.0
 
     def __post_init__(self):
         if self.kind not in KINDS:
             raise ValueError(f"kind {self.kind!r} not in {KINDS}")
+        if isinstance(self.bucket_mb, str):
+            if self.bucket_mb != "auto":
+                raise ValueError(
+                    f"bucket_mb must be a float (MiB) or 'auto', "
+                    f"got {self.bucket_mb!r}"
+                )
+        elif self.bucket_mb <= 0:
+            raise ValueError(f"bucket_mb must be positive, got {self.bucket_mb}")
 
 
 def init_state(cfg: OptConfig, params) -> dict:

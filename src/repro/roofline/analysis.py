@@ -23,6 +23,11 @@ import numpy as np
 PEAK_FLOPS = 197e12           # bf16 FLOP/s per chip
 HBM_BW = 819e9                # bytes/s per chip
 ICI_BW = 50e9                 # bytes/s per link (use 1 link conservatively)
+# Fixed per-collective cost (launch + ring setup + per-hop latency), used by
+# the bucket-size autotuner (optim/buckets.resolve_bucket_bytes).  Set to
+# None on parts where it isn't characterized — consumers must fall back to
+# their static defaults.
+ICI_LATENCY_S = 2e-6
 
 _DTYPE_BYTES = {
     "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,

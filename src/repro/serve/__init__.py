@@ -1,4 +1,18 @@
-from .loop import ServeConfig, generate
-from .step import jit_decode_step, jit_prefill
+from .cache import bucket_for, make_slot_state, prompt_buckets, slot_state_specs
+from .engine import Completion, EngineConfig, ServeEngine
+from .loop import ServeConfig, generate, generate_static
+from .step import (
+    jit_decode_step,
+    jit_prefill,
+    sample_tokens,
+    slot_decode_program,
+    slot_prefill_program,
+)
 
-__all__ = ["ServeConfig", "generate", "jit_decode_step", "jit_prefill"]
+__all__ = [
+    "Completion", "EngineConfig", "ServeEngine",
+    "ServeConfig", "generate", "generate_static",
+    "bucket_for", "make_slot_state", "prompt_buckets", "slot_state_specs",
+    "jit_decode_step", "jit_prefill", "sample_tokens",
+    "slot_decode_program", "slot_prefill_program",
+]

@@ -1,0 +1,107 @@
+"""Slotted KV cache for the continuous-batching serve engine.
+
+The cache is a fixed tensor of ``max_slots`` lanes x ``max_len`` positions
+(per layer/head as the model family dictates).  A *slot* is one lane:
+admission prefills a prompt into a free lane, decode advances every active
+lane by one token per step, and eviction just clears the lane's ``active``
+bit — the lane's stale KV is overwritten lazily (positions are only ever
+attended at ``pos <= length`` and each position is rewritten by the decode
+step before the sequence first attends it, so garbage left by a previous
+occupant is never read).
+
+All per-slot scheduling state lives **on device** in small vectors so the
+decode loop's only host sync is the sampled-token fetch:
+
+    tokens   (N,) int32  last sampled token per slot (next decode input)
+    lengths  (N,) int32  tokens currently in the lane's cache
+    active   (N,) bool   lane is serving a live request
+    limits   (N,) int32  cache length at which the final token is sampled
+    temps    (N,) f32    per-slot sampling temperature (0 = greedy)
+    key      PRNG key    split once per engine step (deterministic per seed)
+
+Prompt lengths are **bucketed** (powers of two by default) so one prefill
+executable per bucket serves every admission — the AOT dispatch cache
+stays flat after warmup instead of compiling per prompt length.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models import registry
+from repro.models.attention import DecodeSharding
+
+DEFAULT_MIN_BUCKET = 16
+
+
+def prompt_buckets(max_len: int, min_bucket: int = DEFAULT_MIN_BUCKET) -> tuple[int, ...]:
+    """Power-of-two prompt-length buckets, capped at ``max_len``."""
+    if max_len < 1:
+        raise ValueError(f"max_len must be positive, got {max_len}")
+    out: list[int] = []
+    b = min(min_bucket, max_len)
+    while b < max_len:
+        out.append(b)
+        b *= 2
+    out.append(max_len)
+    return tuple(out)
+
+
+def bucket_for(plen: int, buckets: tuple[int, ...]) -> int:
+    """Smallest bucket that fits a prompt of length ``plen``."""
+    for b in buckets:
+        if b >= plen:
+            return b
+    raise ValueError(
+        f"prompt length {plen} exceeds the largest bucket {buckets[-1]}"
+    )
+
+
+def slot_state_specs(cfg: ArchConfig, mesh, max_slots: int, max_len: int):
+    """Abstract slot state: ``({leaf: sds}, {leaf: NamedSharding})``."""
+    mod = registry.get_module(cfg)
+    dec = DecodeSharding.choose(mesh, max_slots)
+    cache_sds = mod.make_cache_specs(cfg, max_slots, max_len)
+    cache_ps = mod.cache_pspec(cfg, dec)
+    rep = NamedSharding(mesh, P())
+    n = max_slots
+    sds = {
+        "cache": cache_sds,
+        "tokens": jax.ShapeDtypeStruct((n,), jnp.int32),
+        "lengths": jax.ShapeDtypeStruct((n,), jnp.int32),
+        "active": jax.ShapeDtypeStruct((n,), jnp.bool_),
+        "limits": jax.ShapeDtypeStruct((n,), jnp.int32),
+        "temps": jax.ShapeDtypeStruct((n,), jnp.float32),
+        "key": jax.ShapeDtypeStruct((2,), jnp.uint32),
+    }
+    sh = {
+        "cache": jax.tree.map(
+            lambda p: NamedSharding(mesh, p), cache_ps,
+            is_leaf=lambda x: isinstance(x, P),
+        ),
+        "tokens": rep, "lengths": rep, "active": rep,
+        "limits": rep, "temps": rep, "key": rep,
+    }
+    return sds, sh
+
+
+def make_slot_state(cfg: ArchConfig, mesh, max_slots: int, max_len: int,
+                    seed: int = 0) -> dict:
+    """Allocate the device-resident slot state (all lanes free)."""
+    sds, sh = slot_state_specs(cfg, mesh, max_slots, max_len)
+    state = jax.tree.map(
+        lambda s, d: jax.device_put(jnp.zeros(s.shape, s.dtype), d), sds, sh,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+    )
+    state["key"] = jax.device_put(
+        jax.random.PRNGKey(seed).astype(jnp.uint32), sh["key"]
+    )
+    return state
+
+
+def state_sds(state) -> dict:
+    """ShapeDtypeStructs of a live state tree (for AOT lowering)."""
+    return jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)

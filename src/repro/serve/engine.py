@@ -1,0 +1,348 @@
+"""Continuous-batching serve engine over the slotted KV cache.
+
+The engine runs one fixed-shape decode executable over ``max_slots`` cache
+lanes.  Requests are admitted into free lanes at *any* decode step (prefill
+through a length-bucketed executable), finished sequences are evicted
+immediately (EOS or token budget), and sampling is fused into the decode
+program — the per-step host sync is a single ``(max_slots,)`` int32 token
+fetch instead of a logits round-trip.
+
+Every executable is AOT-compiled once per static key through an
+:class:`~repro.core.aot.AotCache` — ``(config, bucketed prompt length,
+max_slots, sampler options)`` — so steady-state dispatch is a dict probe:
+after warmup the engine's ``builds`` counter must stay flat (asserted by
+``benchmarks/serve_bench.py --smoke`` in CI).
+
+Host-side the engine keeps a mirror of the scheduling vectors (lengths,
+budgets, which request owns which lane).  The mirror is advanced by the
+same rules the device applies, so the engine never reads device state
+back except the sampled tokens it needs to stream anyway.
+
+    engine = ServeEngine(cfg, mesh, rules, params,
+                         EngineConfig(max_slots=8, max_len=256))
+    rid = engine.submit(prompt_ids, max_new_tokens=32, temperature=0.7)
+    engine.drain()                       # or step() under an arrival loop
+    out = engine.completions[rid].tokens
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.core.aot import AotCache
+from repro.models import registry
+from repro.models.common import ShardRules
+from repro.train.step import shardings_for
+from .cache import bucket_for, make_slot_state, prompt_buckets, slot_state_specs, state_sds
+from .step import slot_decode_program, slot_prefill_program
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    max_slots: int = 8            # cache lanes decoded per step
+    max_len: int = 256            # fixed per-lane cache length
+    eos_id: int | None = None     # None: budget-only eviction
+    top_k: int = 0                # 0: no top-k mask in the fused sampler
+    seed: int = 0
+    # prompt-length buckets for the prefill executables; None -> powers of
+    # two up to max_len (one AOT build per bucket ever used)
+    prefill_buckets: tuple[int, ...] | None = None
+    # False: benchmark baseline — logits round-trip to host sampling
+    fused_sampling: bool = True
+
+
+@dataclasses.dataclass
+class _Slot:
+    rid: int
+    plen: int
+    limit: int                    # cache length at which the last token samples
+    temperature: float
+    generated: int = 0
+
+
+@dataclasses.dataclass
+class Completion:
+    rid: int
+    prompt_len: int
+    max_new_tokens: int
+    tokens: list[int]
+    token_times: list[float]      # clock() when each token reached the host
+    submit_time: float
+    finish_time: float
+
+
+@dataclasses.dataclass
+class _Pending:
+    rid: int
+    prompt: np.ndarray
+    max_new_tokens: int
+    temperature: float
+    submit_time: float
+
+
+class ServeEngine:
+    def __init__(
+        self,
+        cfg: ArchConfig,
+        mesh,
+        rules: ShardRules,
+        params,
+        engine: EngineConfig = EngineConfig(),  # noqa: B008 - frozen, never mutated
+        *,
+        aot: AotCache | None = None,
+        clock: Callable[[], float] = time.perf_counter,
+    ):
+        if not registry.supports_slot_serving(cfg):
+            raise ValueError(
+                f"family {cfg.family!r} does not support slot serving; "
+                "use serve.loop.generate_static"
+            )
+        self.cfg, self.mesh, self.rules = cfg, mesh, rules
+        self.econ = engine
+        self.buckets = tuple(engine.prefill_buckets or prompt_buckets(engine.max_len))
+        if max(self.buckets) > engine.max_len:
+            raise ValueError("prefill bucket exceeds max_len")
+        self.aot = aot or AotCache("serve")
+        self.clock = clock
+
+        self._p_sh = shardings_for(mesh, registry.param_pspecs(cfg, rules))
+        self._rep = NamedSharding(mesh, P())
+        self.params = jax.device_put(params, self._p_sh)
+        self._params_sds = registry.abstract_params(cfg)
+        _, self._state_sh = slot_state_specs(cfg, mesh, engine.max_slots, engine.max_len)
+        self.state = make_slot_state(
+            cfg, mesh, engine.max_slots, engine.max_len, engine.seed)
+        self._state_sds = state_sds(self.state)
+
+        self.queue: deque[_Pending] = deque()
+        self.slots: list[_Slot | None] = [None] * engine.max_slots
+        self.live: dict[int, Completion] = {}
+        self.completions: dict[int, Completion] = {}
+        self.counters = {
+            "prefills": 0, "decode_steps": 0,
+            "admitted": 0, "evicted": 0, "dead_slot_steps": 0,
+        }
+        self._next_rid = 0
+        self._host_rng = np.random.default_rng(engine.seed)
+        # host mirrors only needed when sampling is not fused
+        self._tok_mirror = np.zeros(engine.max_slots, np.int32)
+        self._active_mirror = np.zeros(engine.max_slots, bool)
+
+    # ------------------------------------------------------------------
+    # Executables (AOT via the shared cache)
+    # ------------------------------------------------------------------
+    def _sampler_key(self) -> tuple:
+        e = self.econ
+        return (self.cfg.name, e.max_slots, e.max_len, e.top_k, e.eos_id,
+                e.fused_sampling)
+
+    def _decode_exe(self):
+        key = ("slot_decode",) + self._sampler_key()
+
+        def build():
+            fn = slot_decode_program(
+                self.cfg, self.mesh, self.rules, top_k=self.econ.top_k,
+                eos_id=self.econ.eos_id, fused=self.econ.fused_sampling,
+            )
+            jitted = jax.jit(
+                fn, in_shardings=(self._p_sh, self._state_sh),
+                # pin state outputs to the canonical shardings so decode
+                # and prefill executables hand the state back and forth
+                # without resharding (AOT calls check shardings exactly)
+                out_shardings=(self._state_sh, self._rep),
+                donate_argnums=(1,),
+            )
+            return jitted.lower(self._params_sds, self._state_sds).compile()
+
+        return self.aot.get(key, build)
+
+    def _prefill_exe(self, bucket: int):
+        key = ("slot_prefill", bucket) + self._sampler_key()
+
+        def build():
+            fn = slot_prefill_program(
+                self.cfg, self.mesh, self.rules, top_k=self.econ.top_k,
+                eos_id=self.econ.eos_id, fused=self.econ.fused_sampling,
+            )
+            rep = self._rep
+            jitted = jax.jit(
+                fn,
+                in_shardings=(self._p_sh, self._state_sh, rep, rep, rep, rep, rep),
+                out_shardings=(self._state_sh, rep),
+                donate_argnums=(1,),
+            )
+            i32 = lambda shape=(): jax.ShapeDtypeStruct(shape, jnp.int32)
+            return jitted.lower(
+                self._params_sds, self._state_sds, i32((1, bucket)),
+                i32(), i32(), i32(), jax.ShapeDtypeStruct((), jnp.float32),
+            ).compile()
+
+        return self.aot.get(key, build)
+
+    # ------------------------------------------------------------------
+    # Request lifecycle
+    # ------------------------------------------------------------------
+    def submit(self, prompt, *, max_new_tokens: int = 16,
+               temperature: float = 0.0, rid: int | None = None) -> int:
+        """Queue a request; returns its request id."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if prompt.size < 1:
+            raise ValueError("empty prompt")
+        if max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        bucket_for(prompt.size, self.buckets)  # raises if it can't fit
+        if prompt.size + max_new_tokens - 1 > self.econ.max_len:
+            raise ValueError(
+                f"prompt ({prompt.size}) + max_new_tokens ({max_new_tokens}) "
+                f"exceeds max_len {self.econ.max_len}"
+            )
+        if rid is None:
+            rid = self._next_rid
+        self._next_rid = max(self._next_rid, rid) + 1
+        self.queue.append(_Pending(
+            rid, prompt, max_new_tokens, float(temperature), self.clock()))
+        return rid
+
+    def free_slots(self) -> list[int]:
+        return [i for i, s in enumerate(self.slots) if s is None]
+
+    def has_work(self) -> bool:
+        return bool(self.queue) or any(s is not None for s in self.slots)
+
+    def _put(self, x, dtype):
+        return jax.device_put(jnp.asarray(x, dtype), self._rep)
+
+    def _admit(self, req: _Pending, slot: int) -> None:
+        plen = int(req.prompt.size)
+        bucket = bucket_for(plen, self.buckets)
+        padded = np.zeros((1, bucket), np.int32)
+        padded[0, :plen] = req.prompt
+        limit = plen + req.max_new_tokens - 1
+        exe = self._prefill_exe(bucket)
+        self.state, out = exe(
+            self.params, self.state, self._put(padded, jnp.int32),
+            self._put(slot, jnp.int32), self._put(plen, jnp.int32),
+            self._put(limit, jnp.int32), self._put(req.temperature, jnp.float32),
+        )
+        self.counters["prefills"] += 1
+        self.counters["admitted"] += 1
+
+        if self.econ.fused_sampling:
+            tok = int(np.asarray(out)[0])
+        else:
+            tok = int(self._host_sample(
+                np.asarray(out), np.array([req.temperature]))[0])
+        now = self.clock()
+        comp = Completion(
+            rid=req.rid, prompt_len=plen, max_new_tokens=req.max_new_tokens,
+            tokens=[tok], token_times=[now], submit_time=req.submit_time,
+            finish_time=0.0,
+        )
+        self.live[req.rid] = comp
+        self.slots[slot] = _Slot(req.rid, plen, limit, req.temperature, generated=1)
+        self._tok_mirror[slot] = tok
+        done = (req.max_new_tokens == 1) or (
+            self.econ.eos_id is not None and tok == self.econ.eos_id)
+        self._active_mirror[slot] = not done
+        if done:
+            self._finish(slot, now)
+        if not self.econ.fused_sampling:
+            self._writeback_sampled()
+
+    def _finish(self, slot: int, now: float) -> None:
+        s = self.slots[slot]
+        comp = self.live.pop(s.rid)
+        comp.finish_time = now
+        self.completions[s.rid] = comp
+        self.slots[slot] = None
+        self._active_mirror[slot] = False
+        self.counters["evicted"] += 1
+
+    def _host_sample(self, logits: np.ndarray, temps: np.ndarray) -> np.ndarray:
+        """Benchmark baseline: sample on host from full logits (M, V)."""
+        logits = np.asarray(logits, np.float32)
+        out = np.argmax(logits, axis=-1).astype(np.int32)
+        for i, t in enumerate(temps):
+            if t > 0:
+                z = logits[i] / t
+                z -= z.max()
+                p = np.exp(z)
+                out[i] = self._host_rng.choice(logits.shape[-1], p=p / p.sum())
+        return out
+
+    def _writeback_sampled(self) -> None:
+        """Host-sampling mode: push tokens/active back to device state."""
+        self.state["tokens"] = self._put(self._tok_mirror, jnp.int32)
+        self.state["active"] = self._put(self._active_mirror, jnp.bool_)
+
+    # ------------------------------------------------------------------
+    # The serving loop
+    # ------------------------------------------------------------------
+    def step(self) -> bool:
+        """Admit every queued request a free slot can take, then advance
+        all active lanes by one token.  Returns False when idle."""
+        progressed = False
+        for slot in self.free_slots():
+            if not self.queue:
+                break
+            self._admit(self.queue.popleft(), slot)
+            progressed = True
+
+        active_slots = [i for i, s in enumerate(self.slots) if s is not None]
+        if active_slots:
+            exe = self._decode_exe()
+            self.state, out = exe(self.params, self.state)
+            self.counters["decode_steps"] += 1
+            self.counters["dead_slot_steps"] += (
+                self.econ.max_slots - len(active_slots))
+            if self.econ.fused_sampling:
+                toks = np.asarray(out)          # the one per-step host sync
+            else:
+                temps = np.array([
+                    s.temperature if s is not None else 0.0 for s in self.slots
+                ])
+                toks = self._host_sample(np.asarray(out), temps)
+            now = self.clock()
+            for i in active_slots:
+                s = self.slots[i]
+                tok = int(toks[i])
+                s.generated += 1
+                comp = self.live[s.rid]
+                comp.tokens.append(tok)
+                comp.token_times.append(now)
+                self._tok_mirror[i] = tok
+                done = (s.plen + s.generated - 1 >= s.limit) or (
+                    self.econ.eos_id is not None and tok == self.econ.eos_id)
+                if done:
+                    self._finish(i, now)
+            if not self.econ.fused_sampling:
+                self._writeback_sampled()
+            progressed = True
+        return progressed
+
+    def drain(self) -> None:
+        while self.step():
+            pass
+
+    def run(self, prompts: Sequence[Any], *, max_new_tokens: int = 16,
+            temperature: float = 0.0) -> list[np.ndarray]:
+        """Batch convenience: submit all, drain, return tokens in order."""
+        rids = [
+            self.submit(p, max_new_tokens=max_new_tokens, temperature=temperature)
+            for p in prompts
+        ]
+        self.drain()
+        return [np.asarray(self.completions[r].tokens, np.int32) for r in rids]
+
+    @property
+    def stats(self) -> dict:
+        """Engine + dispatch counters (mirrors ``SynkFunction.stats``)."""
+        return {**self.counters, **self.aot.stats, "executables": len(self.aot)}

@@ -3,6 +3,14 @@
 ``serve_step`` for the dry-run shapes means: decode shapes lower
 ``decode_step`` (one new token against a seq_len cache), prefill shapes
 lower ``prefill``.
+
+The slot-program builders (``slot_decode_program`` / ``slot_prefill_program``)
+are the continuous-batching engine's executables: decode advances every
+lane of the slotted cache by one token with sampling **fused on device**
+(the host fetches one ``(max_slots,)`` int32 vector per step, not logits),
+prefill admits one bucketed prompt into a lane and seeds its slot state.
+Both are plain jitted functions; ``serve/engine.py`` AOT-compiles them
+through its :class:`~repro.core.aot.AotCache`.
 """
 from __future__ import annotations
 
@@ -15,6 +23,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig, ShapeConfig
 from repro.models import registry
+from repro.models.attention import NEG_INF
 from repro.models.common import ShardRules
 from repro.train.step import shardings_for
 
@@ -60,3 +69,120 @@ def jit_decode_step(cfg: ArchConfig, mesh: Mesh, rules: ShardRules,
         donate_argnums=(1,) if donate else (),
     )
     return jitted, (params_sds, cache_sds, tok_sds, idx_sds)
+
+
+# ---------------------------------------------------------------------------
+# Fused on-device sampling
+# ---------------------------------------------------------------------------
+
+
+def sample_tokens(logits, key, temps, top_k: int = 0):
+    """Per-row sampling fused into the decode/prefill executables.
+
+    logits: (B, V); temps: (B,) — rows with ``temp == 0`` take the argmax,
+    rows with ``temp > 0`` sample ``categorical(logits / temp)`` (after an
+    optional static top-k mask).  Returns (B,) int32.
+
+    The stochastic branch (PRNG bits over the full (B, V) logits) sits
+    behind a ``lax.cond`` on ``any(temp > 0)`` so all-greedy steps pay
+    only the argmax.
+    """
+    logits = logits.astype(jnp.float32)
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    def stochastic(_):
+        z = logits
+        if top_k:
+            kth = jax.lax.top_k(z, top_k)[0][..., -1:]
+            z = jnp.where(z < kth, NEG_INF, z)
+        safe_t = jnp.where(temps > 0, temps, 1.0)[:, None]
+        sampled = jax.random.categorical(key, z / safe_t, axis=-1)
+        return jnp.where(temps > 0, sampled.astype(jnp.int32), greedy)
+
+    return jax.lax.cond(jnp.any(temps > 0), stochastic, lambda _: greedy, None)
+
+
+# ---------------------------------------------------------------------------
+# Slot programs (continuous batching)
+# ---------------------------------------------------------------------------
+
+
+def slot_decode_program(cfg: ArchConfig, mesh: Mesh, rules: ShardRules, *,
+                        top_k: int = 0, eos_id: int | None = None,
+                        fused: bool = True):
+    """One decode step over every lane of the slotted cache.
+
+    fused=True (the engine default): ``fn(params, state) -> (state', tok)``
+    — sampling, length bookkeeping, and EOS/budget eviction all happen on
+    device; ``tok`` is the only per-step host fetch.
+
+    fused=False (benchmark baseline): ``fn(params, state) -> (state', logits)``
+    — full logits round-trip to the host, which samples and writes
+    ``tokens``/``active`` back before the next step (the old loop's cost).
+    """
+    mod = registry.get_module(cfg)
+
+    def fn(params, state):
+        key, sub = jax.random.split(state["key"])
+        logits, cache = mod.decode_step(
+            cfg, mesh, rules, params, state["cache"],
+            state["tokens"], state["lengths"],
+        )
+        active = state["active"]
+        new_len = state["lengths"] + active.astype(jnp.int32)
+        if not fused:
+            new_state = {**state, "cache": cache, "lengths": new_len, "key": key}
+            return new_state, logits
+        tok = sample_tokens(logits, sub, state["temps"], top_k)
+        tok = jnp.where(active, tok, 0).astype(jnp.int32)
+        done = active & (new_len >= state["limits"])
+        if eos_id is not None:
+            done |= active & (tok == eos_id)
+        new_state = {
+            **state, "cache": cache, "tokens": tok, "lengths": new_len,
+            "active": active & ~done, "key": key,
+        }
+        return new_state, tok
+
+    return fn
+
+
+def slot_prefill_program(cfg: ArchConfig, mesh: Mesh, rules: ShardRules, *,
+                         top_k: int = 0, eos_id: int | None = None,
+                         fused: bool = True):
+    """Admit one prompt into lane ``slot``: prefill its KV into the lane
+    (prompt padded to a length bucket; one executable per bucket), sample
+    the first generated token, and seed the slot's scheduling state.
+
+    ``fn(params, state, prompt (1, bucket), slot, plen, limit, temp)
+    -> (state', tok (1,))`` with fused sampling, or ``-> (state', logits)``
+    when ``fused=False`` (host samples and writes tokens/active back).
+    """
+    mod = registry.get_module(cfg)
+
+    def fn(params, state, prompt, slot, plen, limit, temp):
+        key, sub = jax.random.split(state["key"])
+        cache, logits = mod.prefill_slot(
+            cfg, mesh, rules, params, state["cache"], prompt, slot, plen,
+        )
+        upd = lambda a, v: a.at[slot].set(jnp.asarray(v).astype(a.dtype))
+        new_state = {
+            **state,
+            "cache": cache,
+            "lengths": upd(state["lengths"], plen),
+            "limits": upd(state["limits"], limit),
+            "temps": upd(state["temps"], temp),
+            "key": key,
+        }
+        if not fused:
+            new_state["active"] = upd(state["active"], plen < limit)
+            return new_state, logits
+        tok = sample_tokens(logits, sub, jnp.reshape(temp, (1,)), top_k)
+        alive = plen < limit
+        if eos_id is not None:
+            alive &= tok[0] != eos_id
+        new_state["tokens"] = upd(state["tokens"], tok[0])
+        new_state["active"] = upd(state["active"], alive)
+        return new_state, tok
+
+    return fn

@@ -167,7 +167,7 @@ def check_flat_parity():
 
     cfg = get_smoke_config("smollm-360m")
     mesh = _mk((8, 1), ("data", "model"))
-    shape = ShapeConfig("t", "train", 16, 8)
+    shape = ShapeConfig("t", "train", 8, 16)   # (seq_len, global_batch)
     opt = OptConfig(kind="adam", lr=1e-3, bucket_mb=0.05)
     rng = np.random.default_rng(11)
     tokens = rng.integers(0, cfg.vocab, size=(16, 9)).astype(np.int32)

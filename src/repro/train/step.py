@@ -46,6 +46,7 @@ from repro.optim.buckets import (
     bucketed_reduce_scatter,
     flat_adam_apply,
     make_buckets,
+    resolve_bucket_bytes,
     scatter_flat,
 )
 from repro.optim.flat import FlatLayout, flatten, make_layout, unflatten
@@ -224,7 +225,9 @@ def buckets_for(
 ) -> BucketLayout:
     layout = flat_layout_for(cfg)
     return make_buckets(
-        layout, bucket_bytes=int(opt.bucket_mb * (1 << 20)), n_shards=n_shards,
+        layout,
+        bucket_bytes=resolve_bucket_bytes(opt.bucket_mb, group_size=n_shards),
+        n_shards=n_shards,
     )
 
 
@@ -235,7 +238,7 @@ def _build_flat_train_step(cfg, mesh, rules, opt, settings, mode: str):
     layout = flat_layout_for(cfg)
     buckets = make_buckets(
         layout,
-        bucket_bytes=int(opt.bucket_mb * (1 << 20)),
+        bucket_bytes=resolve_bucket_bytes(opt.bucket_mb, group_size=n_data),
         n_shards=n_data if mode == "zero" else 1,
     )
     wd = opt.weight_decay if opt.kind == "adamw" else 0.0

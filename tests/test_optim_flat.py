@@ -9,7 +9,8 @@ import numpy as np
 import pytest
 
 from repro.optim.buckets import (
-    bucketed_all_reduce, flat_adam_apply, make_buckets,
+    DEFAULT_BUCKET_BYTES, bucketed_all_reduce, flat_adam_apply, make_buckets,
+    resolve_bucket_bytes,
 )
 from repro.optim.flat import (
     flat_adam_update, flatten, make_layout, unflatten,
@@ -89,6 +90,46 @@ def test_buckets_validation():
         make_buckets(layout, bucket_bytes=0)
     with pytest.raises(ValueError, match="n_shards"):
         make_buckets(layout, n_shards=0)
+
+
+def test_resolve_bucket_bytes_numeric_and_auto():
+    assert resolve_bucket_bytes(4.0) == 4 << 20
+    assert resolve_bucket_bytes(0.05) == int(0.05 * (1 << 20))
+    # auto: roofline-derived, positive, clamped to [1, 64] MiB
+    b8 = resolve_bucket_bytes("auto", group_size=8)
+    assert (1 << 20) <= b8 <= (64 << 20)
+    # bigger groups -> wire factor grows -> buckets no larger
+    assert resolve_bucket_bytes("auto", group_size=256) <= b8
+
+
+def test_resolve_bucket_bytes_auto_falls_back_without_roofline(monkeypatch):
+    """When the roofline lacks interconnect numbers, 'auto' keeps the
+    static ~4 MiB default."""
+    from repro.roofline import analysis
+
+    monkeypatch.setattr(analysis, "ICI_LATENCY_S", None)
+    assert resolve_bucket_bytes("auto", group_size=8) == DEFAULT_BUCKET_BYTES
+
+
+def test_optconfig_bucket_mb_auto_builds_train_step():
+    """OptConfig(bucket_mb='auto') resolves through the train-step builder."""
+    from repro.configs import get_smoke_config
+    from repro.optim import OptConfig
+    from repro.train.step import TrainSettings, build_train_step
+    from repro.models.common import ShardRules
+
+    mesh = jax.make_mesh((1, 1, 1), ("pod", "data", "model"))
+    cfg = get_smoke_config("smollm-360m")
+    opt = OptConfig(kind="adam", lr=1e-3, bucket_mb="auto")
+    rules = ShardRules.for_mesh(mesh, faithful=True)
+    step = build_train_step(cfg, mesh, rules, opt, TrainSettings(faithful=True))
+    assert step._flat_engine == "faithful"
+    assert step._flat_buckets.bucket_bytes == resolve_bucket_bytes(
+        "auto", group_size=1)
+    with pytest.raises(ValueError):
+        OptConfig(bucket_mb="bogus")
+    with pytest.raises(ValueError):
+        OptConfig(bucket_mb=-1.0)
 
 
 def test_bucketed_all_reduce_single_axis_identity():

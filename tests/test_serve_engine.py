@@ -1,0 +1,285 @@
+"""Continuous-batching serve engine: admit/evict invariants, per-slot
+decode correctness vs the static loop, prefill bucket reuse (flat build
+counter), fused-sampler determinism, EOS eviction, and AotCache counters
+for both the train (SynkFunction) and serve callers."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.aot import AotCache
+from repro.models import registry
+from repro.serve import (
+    EngineConfig,
+    ServeConfig,
+    ServeEngine,
+    bucket_for,
+    generate,
+    generate_static,
+    prompt_buckets,
+)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    from repro.launch.mesh import single_device_mesh
+    from repro.models.common import ShardRules
+
+    mesh = single_device_mesh()
+    rules = ShardRules.for_mesh(mesh)
+    # f32 so greedy comparisons against the static loop are exact
+    cfg = dataclasses.replace(
+        get_smoke_config("smollm-360m"), compute_dtype="float32")
+    params = registry.get_module(cfg).init(cfg, jax.random.PRNGKey(0))
+    return cfg, mesh, rules, params
+
+
+def _prompts(cfg, rng, lens):
+    return [rng.integers(0, cfg.vocab, n).astype(np.int32) for n in lens]
+
+
+# ---------------------------------------------------------------------------
+# Slot lifecycle
+# ---------------------------------------------------------------------------
+
+
+def test_admit_evict_invariants(setup):
+    """Scripted schedule: more requests than slots, heterogeneous budgets.
+    Slots never oversubscribe, every request gets exactly its budget, and
+    the engine counters balance."""
+    cfg, mesh, rules, params = setup
+    rng = np.random.default_rng(0)
+    budgets = [3, 1, 6, 2, 4, 2, 5, 1]
+    prompts = _prompts(cfg, rng, [4, 9, 5, 12, 3, 7, 6, 4])
+    eng = ServeEngine(cfg, mesh, rules, params,
+                      EngineConfig(max_slots=3, max_len=32))
+    rids = [eng.submit(p, max_new_tokens=b) for p, b in zip(prompts, budgets)]
+
+    while eng.has_work():
+        assert eng.step()
+        occupied = sum(s is not None for s in eng.slots)
+        assert occupied <= 3
+        assert eng.counters["admitted"] - eng.counters["evicted"] == len(eng.live)
+        assert len(eng.live) == occupied
+    assert not eng.step()                       # idle engine reports no work
+
+    assert eng.counters["admitted"] == eng.counters["evicted"] == len(budgets)
+    assert eng.counters["admitted"] > 3         # slots were reused
+    for r, b in zip(rids, budgets):
+        c = eng.completions[r]
+        assert len(c.tokens) == b
+        assert all(0 <= t < cfg.vocab for t in c.tokens)
+
+
+def test_staggered_matches_solo_static(setup):
+    """THE continuous-batching correctness property: a request admitted
+    mid-flight into a slot (at its own cache position, prompt padded to a
+    bucket, batchmates at other positions) must produce exactly the tokens
+    the legacy static loop produces for it alone."""
+    cfg, mesh, rules, params = setup
+    rng = np.random.default_rng(1)
+    lens = [5, 11, 8]
+    budgets = [7, 3, 5]
+    prompts = _prompts(cfg, rng, lens)
+
+    solo = [
+        generate_static(cfg, mesh, rules, params, p[None],
+                        serve=ServeConfig(max_new_tokens=b))[0]
+        for p, b in zip(prompts, budgets)
+    ]
+
+    # 2 slots, 3 requests: the third is admitted when a lane frees, while
+    # the surviving lane sits mid-sequence at a different length
+    eng = ServeEngine(cfg, mesh, rules, params,
+                      EngineConfig(max_slots=2, max_len=32))
+    rids = [eng.submit(p, max_new_tokens=b) for p, b in zip(prompts, budgets)]
+    eng.drain()
+    for r, want in zip(rids, solo):
+        got = np.asarray(eng.completions[r].tokens)
+        np.testing.assert_array_equal(got, np.asarray(want))
+
+
+def test_generate_wrapper_greedy_parity(setup):
+    """generate() is a thin wrapper over the engine and must match the
+    legacy loop token-for-token under greedy decoding."""
+    cfg, mesh, rules, params = setup
+    rng = np.random.default_rng(2)
+    prompts = np.stack(_prompts(cfg, rng, [10, 10, 10]))
+    a = generate(cfg, mesh, rules, params, prompts,
+                 serve=ServeConfig(max_new_tokens=6))
+    b = generate_static(cfg, mesh, rules, params, prompts,
+                        serve=ServeConfig(max_new_tokens=6))
+    np.testing.assert_array_equal(a, b)
+    assert a.shape == (3, 6)
+
+
+def test_generate_default_serveconfig_not_shared(setup):
+    """The old signature had ``serve: ServeConfig = ServeConfig()`` — a
+    mutable shared-instance footgun.  Defaulting must build a fresh config
+    per call (None sentinel)."""
+    import inspect
+    from repro.serve import loop
+
+    for fn in (loop.generate, loop.generate_static):
+        default = inspect.signature(fn).parameters["serve"].default
+        assert default is None
+
+
+def test_eos_eviction(setup):
+    """A lane hitting EOS frees immediately and its tokens end at EOS."""
+    cfg, mesh, rules, params = setup
+    rng = np.random.default_rng(3)
+    prompt = _prompts(cfg, rng, [6])[0]
+    # learn what greedy emits, then re-run with that token as EOS
+    probe = ServeEngine(cfg, mesh, rules, params,
+                        EngineConfig(max_slots=1, max_len=32))
+    toks = probe.run([prompt], max_new_tokens=8)[0]
+    eos = int(toks[2])
+
+    eng = ServeEngine(cfg, mesh, rules, params,
+                      EngineConfig(max_slots=1, max_len=32, eos_id=eos))
+    out = eng.run([prompt], max_new_tokens=8)[0]
+    assert out[-1] == eos
+    assert len(out) <= len(toks)
+    assert eos not in out[:-1]
+    assert eng.counters["evicted"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Dispatch-cache behavior
+# ---------------------------------------------------------------------------
+
+
+def test_prefill_bucket_reuse(setup):
+    """Build count = one decode + one prefill per distinct *bucket*; more
+    requests in the same buckets must not build anything new."""
+    cfg, mesh, rules, params = setup
+    rng = np.random.default_rng(4)
+    eng = ServeEngine(cfg, mesh, rules, params,
+                      EngineConfig(max_slots=2, max_len=64))
+    assert eng.buckets == prompt_buckets(64) == (16, 32, 64)
+
+    eng.run(_prompts(cfg, rng, [3, 9, 14]), max_new_tokens=2)   # bucket 16
+    assert eng.stats["builds"] == 2                 # decode + prefill@16
+    eng.run(_prompts(cfg, rng, [20, 17]), max_new_tokens=2)     # bucket 32
+    assert eng.stats["builds"] == 3
+    hits_before = eng.stats["cache_hits"]
+    eng.run(_prompts(cfg, rng, [5, 21, 8, 30]), max_new_tokens=3)
+    assert eng.stats["builds"] == 3                 # steady state: no builds
+    assert eng.stats["cache_hits"] > hits_before
+    assert eng.stats["executables"] == 3
+
+
+def test_bucket_for():
+    assert bucket_for(3, (16, 32)) == 16
+    assert bucket_for(16, (16, 32)) == 16
+    assert bucket_for(17, (16, 32)) == 32
+    with pytest.raises(ValueError):
+        bucket_for(33, (16, 32))
+    assert prompt_buckets(10) == (10,)
+    assert prompt_buckets(100) == (16, 32, 64, 100)
+
+
+def test_aot_cache_counters_train_and_serve(setup):
+    """The shared AotCache counts builds/hits for both caller families."""
+    # unit
+    c = AotCache("t")
+    assert c.get(("a",), lambda: 41) == 41
+    assert c.get(("a",), lambda: 43) == 41          # cached, build not rerun
+    assert c.get(("b",), lambda: 42) == 42
+    assert c.stats == {"builds": 2, "cache_hits": 1}
+    assert len(c) == 2 and ("a",) in c
+
+    # train caller: SynkFunction routes its executables through AotCache
+    import repro.core as synk
+
+    synk.reset()
+    f = synk.function(lambda x: jnp.sum(x), [synk.Scatter()],
+                      synk.Reduce("sum"))
+    x = np.arange(8, dtype=np.float32)
+    f(x); f(x)
+    assert f.stats["builds"] == 1
+    assert f.stats["cache_hits"] == 1
+    f(np.arange(16, dtype=np.float32))              # new signature
+    assert f.stats["builds"] == 2
+
+    # serve caller: engine counters mirror the same schema
+    cfg, mesh, rules, params = setup
+    eng = ServeEngine(cfg, mesh, rules, params,
+                      EngineConfig(max_slots=1, max_len=32))
+    eng.run(_prompts(cfg, np.random.default_rng(5), [4]), max_new_tokens=4)
+    assert eng.stats["builds"] == 2
+    assert eng.stats["cache_hits"] >= 1
+    for key in ("admitted", "evicted", "dead_slot_steps", "builds",
+                "cache_hits"):
+        assert key in eng.stats
+
+
+# ---------------------------------------------------------------------------
+# Fused sampler
+# ---------------------------------------------------------------------------
+
+
+def test_fused_sampler_deterministic_given_seed(setup):
+    cfg, mesh, rules, params = setup
+    rng = np.random.default_rng(6)
+    prompts = _prompts(cfg, rng, [6, 9])
+
+    def run(seed):
+        eng = ServeEngine(cfg, mesh, rules, params,
+                          EngineConfig(max_slots=2, max_len=32, seed=seed))
+        return eng.run(prompts, max_new_tokens=8, temperature=1.5)
+
+    a, b = run(seed=7), run(seed=7)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+    c = run(seed=8)
+    assert any(not np.array_equal(x, y) for x, y in zip(a, c))
+
+
+def test_mixed_greedy_and_sampled_lanes(setup):
+    """Greedy lanes must stay greedy (= static loop) even while a
+    temperature>0 lane shares the decode executable."""
+    cfg, mesh, rules, params = setup
+    rng = np.random.default_rng(7)
+    g_prompt, s_prompt = _prompts(cfg, rng, [8, 8])
+    want = generate_static(cfg, mesh, rules, params, g_prompt[None],
+                           serve=ServeConfig(max_new_tokens=5))[0]
+
+    eng = ServeEngine(cfg, mesh, rules, params,
+                      EngineConfig(max_slots=2, max_len=32))
+    rid_g = eng.submit(g_prompt, max_new_tokens=5, temperature=0.0)
+    eng.submit(s_prompt, max_new_tokens=5, temperature=2.0)
+    eng.drain()
+    np.testing.assert_array_equal(
+        np.asarray(eng.completions[rid_g].tokens), np.asarray(want))
+
+
+def test_sample_tokens_shapes():
+    from repro.serve import sample_tokens
+
+    logits = jnp.asarray(np.random.default_rng(0).normal(size=(4, 32)),
+                         jnp.float32)
+    key = jax.random.PRNGKey(0)
+    greedy = sample_tokens(logits, key, jnp.zeros(4))
+    np.testing.assert_array_equal(
+        np.asarray(greedy), np.argmax(np.asarray(logits), -1))
+    hot = sample_tokens(logits, key, jnp.full(4, 2.0), top_k=4)
+    top4 = np.argsort(np.asarray(logits), -1)[:, -4:]
+    for i in range(4):
+        assert int(hot[i]) in top4[i]
+
+
+def test_submit_validation(setup):
+    cfg, mesh, rules, params = setup
+    eng = ServeEngine(cfg, mesh, rules, params,
+                      EngineConfig(max_slots=1, max_len=16))
+    with pytest.raises(ValueError):
+        eng.submit(np.arange(20), max_new_tokens=2)     # prompt > max bucket
+    with pytest.raises(ValueError):
+        eng.submit(np.arange(4), max_new_tokens=14)     # overruns max_len
+    with pytest.raises(ValueError):
+        eng.submit(np.array([], np.int32))
