@@ -89,11 +89,18 @@ def run_serve(emit, smoke: bool = True, out_json: str | None = None) -> bool:
     h = rep["headline"]
     emit("serve/speedup_vs_static", h["speedup_vs_static"] * 100,
          "continuous/static tokens-per-s x100")
+    emit("serve/kv_reserved_ratio_paged",
+         h["kv_reserved_ratio_paged_vs_slotted"] * 100,
+         "paged/slotted KV reservation x100")
     # full acceptance: >= 2x tokens/s at equal-or-better p99 per-token
-    # latency, with zero executable builds after warmup
+    # latency, zero executable builds after warmup on every engine mode,
+    # paged greedy parity, and a real paged reservation saving
     ok = (h["speedup_vs_static"] >= 2.0
           and h["p99_ratio_vs_static"] <= 1.0
-          and h["steady_builds_delta"] == 0)
+          and h["steady_builds_delta"] == 0
+          and h["paged_steady_builds_delta"] == 0
+          and h["paged_greedy_parity"]
+          and h["kv_reserved_ratio_paged_vs_slotted"] < 1.0)
     if not ok:
         print(f"serve bench FAILED acceptance: {h}", file=sys.stderr)
     return ok

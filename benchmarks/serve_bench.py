@@ -24,6 +24,19 @@ Modes:
     continuous_host   engine with ``fused_sampling=False``: full logits
                       round-trip + host sampling per step (ablates the
                       fused sampler).
+    continuous_paged  paged (block-table) KV layout with the pool sized
+                      to HALF the slotted worst case — ``kv_reserved_
+                      bytes`` drops accordingly while greedy tokens stay
+                      identical (asserted into ``headline.paged_greedy_
+                      parity``; ci.sh gates on it).
+    continuous_paged_chunked
+                      paged + chunked prefill: prompts admitted in fixed
+                      chunks interleaved with decode steps.
+
+Every continuous mode reports ``kv_reserved_bytes`` (cache HBM actually
+allocated) and ``kv_peak_used_bytes`` (high-water mark of positions/blocks
+holding live KV) — the reserved-vs-used gap is the over-allocation the
+paged layout removes.
 
 Each engine mode runs the trace twice: a warmup pass (arrivals collapsed
 to t=0) that compiles every executable the trace needs, then the timed
@@ -159,13 +172,18 @@ def run_static(cfg, mesh, rules, params, trace: list[_Req], *,
 
 def run_continuous(cfg, mesh, rules, params, trace: list[_Req], *,
                    max_slots: int, max_len: int, fused: bool,
-                   temperature: float = 0.0) -> dict:
+                   temperature: float = 0.0, kv_layout: str = "slotted",
+                   page_size: int = 16, num_blocks: int | None = None,
+                   prefill_chunk: int = 0, aot=None) -> dict:
     from repro.serve import EngineConfig, ServeEngine
 
     engine = ServeEngine(
         cfg, mesh, rules, params,
         EngineConfig(max_slots=max_slots, max_len=max_len,
-                     fused_sampling=fused),
+                     fused_sampling=fused, kv_layout=kv_layout,
+                     page_size=page_size, num_blocks=num_blocks,
+                     prefill_chunk=prefill_chunk),
+        aot=aot,
     )
 
     def play(timed: bool):
@@ -193,7 +211,40 @@ def run_continuous(cfg, mesh, rules, params, trace: list[_Req], *,
         lat_ms.append((c.token_times[-1] - (t0 + r.arrival)) / len(c.tokens) * 1e3)
         tokens += len(c.tokens)
     return _summary(wall, tokens, lat_ms, steady_builds_delta=builds_delta,
+                    kv_reserved_bytes=engine.kv_reserved_bytes,
+                    kv_peak_used_bytes=engine.stats["kv_peak_used_bytes"],
                     stats=engine.stats)
+
+
+def check_paged_parity(cfg, mesh, rules, params, trace: list[_Req], *,
+                       max_slots: int, max_len: int, page_size: int,
+                       num_blocks: int, prefill_chunk: int,
+                       aot=None) -> bool:
+    """Greedy token-for-token parity of the paged engine (both prefill
+    modes) against the slotted engine on a staggered submit-all trace.
+    Sharing the bench modes' AotCache means this compiles nothing new."""
+    from repro.serve import EngineConfig, ServeEngine
+
+    reqs = trace[: 2 * max_slots + 1]          # lanes get reused
+    prompts = [r.prompt for r in reqs]
+    budgets = [r.budget for r in reqs]
+
+    def tokens(ec):
+        eng = ServeEngine(cfg, mesh, rules, params, ec, aot=aot)
+        rids = [eng.submit(p, max_new_tokens=b)
+                for p, b in zip(prompts, budgets)]
+        eng.drain()
+        return [list(eng.completions[r].tokens) for r in rids]
+
+    want = tokens(EngineConfig(max_slots=max_slots, max_len=max_len))
+    paged = tokens(EngineConfig(
+        max_slots=max_slots, max_len=max_len, kv_layout="paged",
+        page_size=page_size, num_blocks=num_blocks))
+    chunked = tokens(EngineConfig(
+        max_slots=max_slots, max_len=max_len, kv_layout="paged",
+        page_size=page_size, num_blocks=num_blocks,
+        prefill_chunk=prefill_chunk))
+    return paged == want and chunked == want
 
 
 # ---------------------------------------------------------------------------
@@ -223,7 +274,16 @@ def main(argv=None) -> dict:
     n_requests = args.requests or (24 if args.smoke else 64)
     max_slots, long_budget = 8, 64
     trace = make_trace(n_requests, cfg.vocab, long_budget=long_budget)
+    page_size = 16
     max_len = max(r.prompt.size for r in trace) + long_budget
+    max_len = -(-max_len // page_size) * page_size     # paged wants a multiple
+    # paged pool: HALF the slotted worst-case reservation — the layout's
+    # point is that the mixed-length trace never needs the worst case —
+    # rounded up to the device count (the engine shards the block dim)
+    worst_blocks = max_slots * (max_len // page_size)
+    ndev = jax.device_count()
+    num_blocks = -(-(worst_blocks // 2 + 1) // ndev) * ndev
+    prefill_chunk = 2 * page_size
 
     report = {
         "meta": {
@@ -237,20 +297,37 @@ def main(argv=None) -> dict:
                 "n_requests": n_requests, "max_slots": max_slots,
                 "max_len": max_len, "long_budget": long_budget,
                 "useful_tokens": sum(r.budget for r in trace),
+                "page_size": page_size, "num_blocks": num_blocks,
+                "prefill_chunk": prefill_chunk,
             },
         },
         "modes": {},
     }
+    # one AotCache across every engine: each mode compiles only its own
+    # executables (keys carry layout/fused/chunk), and the parity check at
+    # the end dispatches entirely from cache
+    from repro.core.aot import AotCache
+    aot = AotCache("serve-bench")
     report["modes"]["static_batch"] = run_static(
         cfg, mesh, rules, params, trace, batch=max_slots)
     report["modes"]["continuous_fused"] = run_continuous(
         cfg, mesh, rules, params, trace, max_slots=max_slots,
-        max_len=max_len, fused=True)
+        max_len=max_len, fused=True, aot=aot)
     report["modes"]["continuous_host"] = run_continuous(
         cfg, mesh, rules, params, trace, max_slots=max_slots,
-        max_len=max_len, fused=False)
+        max_len=max_len, fused=False, aot=aot)
+    report["modes"]["continuous_paged"] = run_continuous(
+        cfg, mesh, rules, params, trace, max_slots=max_slots,
+        max_len=max_len, fused=True, kv_layout="paged",
+        page_size=page_size, num_blocks=num_blocks, aot=aot)
+    report["modes"]["continuous_paged_chunked"] = run_continuous(
+        cfg, mesh, rules, params, trace, max_slots=max_slots,
+        max_len=max_len, fused=True, kv_layout="paged",
+        page_size=page_size, num_blocks=num_blocks,
+        prefill_chunk=prefill_chunk, aot=aot)
 
     st, cf = report["modes"]["static_batch"], report["modes"]["continuous_fused"]
+    pg = report["modes"]["continuous_paged"]
     report["headline"] = {
         "speedup_vs_static": cf["tokens_per_s"] / st["tokens_per_s"],
         "p99_ratio_vs_static": cf["p99_ms_per_token"] / st["p99_ms_per_token"],
@@ -258,6 +335,15 @@ def main(argv=None) -> dict:
             cf["tokens_per_s"]
             / report["modes"]["continuous_host"]["tokens_per_s"]),
         "steady_builds_delta": cf["steady_builds_delta"],
+        "paged_steady_builds_delta": max(
+            pg["steady_builds_delta"],
+            report["modes"]["continuous_paged_chunked"]["steady_builds_delta"]),
+        "kv_reserved_ratio_paged_vs_slotted": (
+            pg["kv_reserved_bytes"] / cf["kv_reserved_bytes"]),
+        "paged_greedy_parity": check_paged_parity(
+            cfg, mesh, rules, params, trace, max_slots=max_slots,
+            max_len=max_len, page_size=page_size, num_blocks=num_blocks,
+            prefill_chunk=prefill_chunk, aot=aot),
     }
     text = json.dumps(report, indent=2)
     print(text)

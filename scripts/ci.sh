@@ -35,15 +35,33 @@ python - <<'EOF'
 import json, sys
 rep = json.load(open("BENCH_serve.json"))
 for name, row in rep["modes"].items():
-    print(f"  {name:16s} {row['tokens_per_s']:7.1f} tok/s  "
+    kv = ""
+    if "kv_reserved_bytes" in row:
+        kv = (f"  kv {row['kv_peak_used_bytes'] / 2**20:5.1f}"
+              f"/{row['kv_reserved_bytes'] / 2**20:5.1f} MiB used/reserved")
+    print(f"  {name:24s} {row['tokens_per_s']:7.1f} tok/s  "
           f"p50 {row['p50_ms_per_token']:7.1f} ms/tok  "
-          f"p99 {row['p99_ms_per_token']:7.1f} ms/tok")
+          f"p99 {row['p99_ms_per_token']:7.1f} ms/tok{kv}")
 h = rep["headline"]
 print(f"  speedup_vs_static {h['speedup_vs_static']:.2f}x  "
       f"p99_ratio {h['p99_ratio_vs_static']:.2f}  "
-      f"steady_builds_delta {h['steady_builds_delta']}")
+      f"steady_builds_delta {h['steady_builds_delta']}  "
+      f"paged_builds_delta {h['paged_steady_builds_delta']}  "
+      f"kv_ratio {h['kv_reserved_ratio_paged_vs_slotted']:.2f}  "
+      f"paged_parity {h['paged_greedy_parity']}")
 if h["steady_builds_delta"] != 0:
     sys.exit("FAIL: serve decode built executables after warmup "
              "(AOT dispatch cache regression)")
+if h["paged_steady_builds_delta"] != 0:
+    sys.exit("FAIL: paged/chunked serving built executables after warmup "
+             "(chunked prefill must not reintroduce per-length rebuilds)")
+if not h["paged_greedy_parity"]:
+    sys.exit("FAIL: paged engine diverged from the slotted engine under "
+             "greedy decoding")
+paged = rep["modes"]["continuous_paged"]
+slotted = rep["modes"]["continuous_fused"]
+if paged["kv_reserved_bytes"] >= slotted["kv_reserved_bytes"]:
+    sys.exit("FAIL: paged layout did not reserve less KV HBM than the "
+             "slotted max_slots*max_len layout")
 EOF
 echo "CI OK — BENCH_overlap.json + BENCH_serve.json written"

@@ -6,10 +6,11 @@ interpret mode on CPU; TPU is the compilation target.
 """
 from .flash_attention.ops import flash_attention
 from .flat_adam.ops import flat_adam_op
+from .paged_attention.ops import paged_attention
 from .rmsnorm.ops import rmsnorm_add_op, rmsnorm_op
 from .ssd.ops import ssd_model_layout, ssd_op
 
 __all__ = [
-    "flash_attention", "flat_adam_op", "rmsnorm_add_op", "rmsnorm_op",
-    "ssd_model_layout", "ssd_op",
+    "flash_attention", "flat_adam_op", "paged_attention",
+    "rmsnorm_add_op", "rmsnorm_op", "ssd_model_layout", "ssd_op",
 ]

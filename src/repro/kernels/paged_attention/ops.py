@@ -1,0 +1,28 @@
+"""Jitted public wrapper for the paged decode-attention kernel.
+
+Decode-only (no backward: serving never differentiates through the KV
+cache), so unlike the flash wrapper there is no custom_vjp — just a jit
+with the masking knobs static.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .kernel import paged_attention_fwd
+
+
+@partial(jax.jit, static_argnames=("window", "softcap", "interpret"))
+def paged_attention(
+    q, k_pool, v_pool, lengths, tables, *,
+    window: int = 0,
+    softcap: float = 0.0,
+    interpret: bool | None = None,
+):
+    """q: (B, Hk, rep, D); pools: (NB, bs, Hk, D); lengths: (B,) int32;
+    tables: (B, nb) int32 block-table rows.  Returns (B, Hk, rep, D)."""
+    return paged_attention_fwd(
+        q, k_pool, v_pool, lengths, tables,
+        window=window, softcap=softcap, interpret=interpret,
+    )

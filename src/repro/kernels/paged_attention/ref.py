@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for the paged decode-attention kernel.
+
+Gathers each lane's blocks into logical order and runs the masked softmax
+— the memory-expensive path the kernel avoids (the kernel walks the block
+table and only ever holds one block in VMEM).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -2.0e38
+
+
+def paged_attention_ref(q, k_pool, v_pool, lengths, tables, *,
+                        window: int = 0, softcap: float = 0.0):
+    """q: (B, Hk, rep, D); pools: (NB, bs, Hk, D); lengths: (B,);
+    tables: (B, nb).  Returns (B, Hk, rep, D)."""
+    bs = k_pool.shape[1]
+    B, nb = tables.shape
+
+    def gather(pool):
+        g = jnp.take(pool, tables, axis=0)              # (B, nb, bs, Hk, D)
+        return g.reshape(B, nb * bs, *pool.shape[2:])
+
+    k, v = gather(k_pool), gather(v_pool)
+    pos = jnp.arange(nb * bs)
+    valid = pos[None, :] <= lengths[:, None]
+    if window:
+        valid &= pos[None, :] > lengths[:, None] - window
+    s = jnp.einsum(
+        "bhrd,bshd->bhrs", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * (q.shape[-1] ** -0.5)
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    m = jnp.max(s, axis=-1)
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bhrs,bshd->bhrd", p, v.astype(jnp.float32))
+    return (o / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)

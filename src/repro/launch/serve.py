@@ -43,12 +43,19 @@ def run_static(cfg, mesh, rules, params, args, rng):
 
 def run_stream(cfg, mesh, rules, params, args, rng):
     """Drive the continuous-batching engine with a Poisson arrival trace."""
+    max_len = args.prompt_len + args.new_tokens + 8
+    if args.kv_layout == "paged":
+        max_len = -(-max_len // args.page_size) * args.page_size
     engine = ServeEngine(
         cfg, mesh, rules, params,
         EngineConfig(
             max_slots=args.max_slots,
-            max_len=args.prompt_len + args.new_tokens + 8,
+            max_len=max_len,
             seed=args.seed,
+            kv_layout=args.kv_layout,
+            page_size=args.page_size,
+            num_blocks=args.num_blocks,
+            prefill_chunk=args.prefill_chunk,
         ),
     )
     arrivals = np.cumsum(rng.exponential(1.0 / args.rate, args.requests))
@@ -79,6 +86,9 @@ def run_stream(cfg, mesh, rules, params, args, rng):
         print(f"req{rid}: plen={c.prompt_len} new={len(c.tokens)} "
               f"{lat:.1f} ms/tok  {c.tokens}")
     print(f"-- {tokens} tokens in {wall:.2f}s = {tokens / wall:.1f} tok/s")
+    print(f"-- kv[{args.kv_layout}]: "
+          f"{engine.stats['kv_peak_used_bytes'] / 2**20:.2f} MiB peak used / "
+          f"{engine.kv_reserved_bytes / 2**20:.2f} MiB reserved")
     print(f"-- stats: {engine.stats}")
 
 
@@ -100,6 +110,16 @@ def main():
                     help="Poisson arrival rate, requests/s")
     ap.add_argument("--max-slots", type=int, default=4)
     ap.add_argument("--seed", type=int, default=0)
+    # KV layout knobs (continuous engine)
+    ap.add_argument("--kv-layout", choices=("slotted", "paged"),
+                    default="slotted")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="KV block size (paged layout)")
+    ap.add_argument("--num-blocks", type=int, default=None,
+                    help="KV pool size in blocks (paged; default worst case)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help=">0: admit prompts in chunks of this many tokens "
+                         "interleaved with decode (paged only)")
     args = ap.parse_args()
 
     mesh = {"production": make_production_mesh,

@@ -101,7 +101,11 @@ def chunked_attention(
     kg = k.reshape(B, nk, kv_chunk, Hk, D).transpose(1, 0, 3, 2, 4)   # (nk,B,Hk,kc,D)
     vg = v.reshape(B, nk, kv_chunk, Hk, D).transpose(1, 0, 3, 2, 4)
 
-    band = causal and window and window < Sk and q_chunk == kv_chunk
+    # the static band assumes q and kv blocks are aligned from position 0;
+    # a (possibly traced) nonzero q_offset — chunked prefill resuming at a
+    # mid-prompt position — falls back to the masked full scan
+    aligned = isinstance(q_offset, (int, np.integer)) and q_offset == 0
+    band = causal and window and window < Sk and q_chunk == kv_chunk and aligned
     # q-chunk rows [iC, iC+C-1] may attend keys in [iC - window + 1, iC + C - 1]
     # -> ceil((window + C - 1) / C) KV chunks ending at chunk i.
     nb = int(np.ceil((window + kv_chunk - 1) / kv_chunk)) if band else nk
@@ -319,3 +323,119 @@ def decode_attention(
         check_vma=False,
     )
     return fn(q, k_cache, v_cache, k_new, v_new, cur_index)
+
+
+# ---------------------------------------------------------------------------
+# Paged KV cache: block-table plumbing + paged decode
+# ---------------------------------------------------------------------------
+#
+# The pool layout is (num_blocks, block_size, Hk, D): logical position ``p``
+# of a lane lives at physical row ``table[p // bs] * bs + p % bs`` of the
+# flattened pool.  Physical block 0 is a write sink (serve/paged.py reserves
+# it): unmapped table entries and invalid positions route writes there, so
+# garbage never lands in a live block and the sink is never read (reads are
+# masked to ``pos <= length``, and every readable position's block is
+# mapped by construction).
+
+
+def paged_gather(pool, tables):
+    """Materialise lanes from the pool in logical position order.
+
+    pool: (NB, bs, ...); tables: (B, nb) int32.  Returns (B, nb*bs, ...)
+    — index ``p`` of a row is logical position ``p`` of that lane
+    (garbage from the null block where unmapped; callers mask by length).
+    """
+    g = jnp.take(pool, tables, axis=0)                  # (B, nb, bs, ...)
+    return g.reshape(tables.shape[0], -1, *pool.shape[2:])
+
+
+def _physical_rows(table, positions, bs: int, nb: int):
+    """Flat pool rows for logical ``positions`` under one table row; out-of
+    -range positions clamp into the last block (callers only pass them for
+    stale lanes whose table rows are nulled — the clamp lands in the sink)."""
+    li = jnp.clip(positions // bs, 0, nb - 1)
+    blk = jnp.take(table, li)
+    off = jnp.clip(positions - li * bs, 0, bs - 1)
+    return blk * bs + off
+
+
+def paged_write_token(pool, tables, lengths, new):
+    """Write one new token's K or V per lane at logical ``lengths[b]``.
+
+    pool: (NB, bs, Hk, D); tables: (B, nb); new: (B, Hk, D).  Lanes whose
+    block for that position is unmapped (free/stale lanes) write into the
+    null sink.  Only the B written rows are touched — the paged analogue
+    of ``decode_attention``'s per-row scatter.
+    """
+    NB, bs = pool.shape[:2]
+    nb = tables.shape[1]
+    B = tables.shape[0]
+    li = jnp.clip(lengths // bs, 0, nb - 1)
+    blk = jnp.take_along_axis(tables, li[:, None], axis=1)[:, 0]
+    off = jnp.clip(lengths - li * bs, 0, bs - 1)
+    flat = pool.reshape(NB * bs, *pool.shape[2:])
+    flat = flat.at[blk * bs + off].set(new.astype(pool.dtype))
+    return flat.reshape(pool.shape)
+
+
+def paged_write_positions(pool, table, positions, new, valid=None):
+    """Scatter a chunk of positions of ONE lane into the pool.
+
+    pool: (NB, bs, Hk, D) or layer-stacked (Lf, NB, bs, Hk, D);
+    table: (nb,) int32; positions: (P,); new matches pool's lead plus
+    (P, Hk, D).  ``valid=False`` positions (prompt padding) divert to the
+    null sink.
+    """
+    stacked = pool.ndim == 5
+    NB, bs = (pool.shape[1], pool.shape[2]) if stacked else pool.shape[:2]
+    rows = _physical_rows(table, positions, bs, table.shape[0])
+    if valid is not None:
+        rows = jnp.where(valid, rows, 0)
+    if stacked:
+        flat = pool.reshape(pool.shape[0], NB * bs, *pool.shape[3:])
+        flat = flat.at[:, rows].set(new.astype(pool.dtype))
+    else:
+        flat = pool.reshape(NB * bs, *pool.shape[2:])
+        flat = flat.at[rows].set(new.astype(pool.dtype))
+    return flat.reshape(pool.shape)
+
+
+def paged_decode_attention(
+    q, k_pool, v_pool, k_new, v_new, lengths, tables, *,
+    window: int = 0,
+    softcap: float = 0.0,
+    impl: str = "ref",
+):
+    """One decoding step against the paged (block-table) KV cache.
+
+    q:             (B, Hk, rep, D) — current-token queries (RoPE applied)
+    k_pool/v_pool: (NB, bs, Hk, D) — the shared block pool
+    k_new/v_new:   (B, Hk, D) — written at logical position ``lengths[b]``
+    lengths:       (B,) int32 — tokens already in each lane
+    tables:        (B, nb) int32 — the lanes' block-table rows
+    impl:          "ref" gathers lanes and runs the masked-softmax XLA
+                   path (bitwise-identical to the slotted
+                   ``decode_attention`` on equal inputs — the parity
+                   anchor); "pallas" dispatches the block-walking kernel
+                   (kernels/paged_attention) that never materialises the
+                   gathered lanes.
+
+    Returns (out (B, Hk, rep, D), k_pool', v_pool').
+    """
+    k_pool = paged_write_token(k_pool, tables, lengths, k_new)
+    v_pool = paged_write_token(v_pool, tables, lengths, v_new)
+    if impl == "pallas":
+        from repro.kernels import paged_attention
+        out = paged_attention(
+            q, k_pool, v_pool, lengths, tables,
+            window=window, softcap=softcap,
+        )
+    else:
+        # the kernel's jnp oracle IS the production reference path, so the
+        # kernel-vs-ref tests cover exactly what serves here
+        from repro.kernels.paged_attention.ref import paged_attention_ref
+        out = paged_attention_ref(
+            q, k_pool, v_pool, lengths, tables,
+            window=window, softcap=softcap,
+        )
+    return out, k_pool, v_pool

@@ -18,7 +18,15 @@ import numpy as np
 from jax.sharding import Mesh
 
 from repro.configs.base import ArchConfig
-from .attention import DecodeSharding, chunked_attention, decode_attention, rope
+from .attention import (
+    DecodeSharding,
+    chunked_attention,
+    decode_attention,
+    paged_decode_attention,
+    paged_gather,
+    paged_write_positions,
+    rope,
+)
 from .common import (
     ParamSpec,
     ShardRules,
@@ -154,15 +162,24 @@ def _ffn(cfg, mesh, rules, x, bp):
     return out, {"lb_loss": jnp.float32(0.0), "drop_frac": jnp.float32(0.0)}
 
 
-def _block_fwd(cfg, mesh, rules, x, bp, positions, *, window: int, collect_kv: bool):
+def _block_fwd(cfg, mesh, rules, x, bp, positions, *, window: int,
+               collect_kv: bool, attn_fn=None):
     """One transformer block, training/prefill path.
 
-    Returns (x, aux, (k, v) or None).
+    ``attn_fn(q, k, v, window) -> (attn, extra)`` overrides the attention
+    step (the chunked-prefill path writes K/V through a block table and
+    attends against the lane's cache); everything around it — projections,
+    norms, residuals, FFN — is shared so the paths stay numerically
+    identical.  Returns (x, aux, kv): kv is (k, v) when ``collect_kv``,
+    else ``attn_fn``'s extra (None on the default path).
     """
     h = rms_norm(x, bp["ln1"], cfg.norm_eps)
     h = constrain(h, rules, "dp", "sp", None)
     q, k, v = _attn_proj(cfg, mesh, rules, h, bp, positions)
-    if cfg.attn_impl == "pallas":
+    extra = None
+    if attn_fn is not None:
+        attn, extra = attn_fn(q, k, v, window)
+    elif cfg.attn_impl == "pallas":
         # TPU hot-spot path: fused flash kernel with dynamic block skipping
         # (validated against chunked_attention in tests/test_kernels.py)
         from repro.kernels import flash_attention
@@ -195,13 +212,19 @@ def _block_fwd(cfg, mesh, rules, x, bp, positions, *, window: int, collect_kv: b
     if cfg.alt_local_global:
         ffn = rms_norm(ffn, bp["ln2b"], cfg.norm_eps)
     x = constrain(x + ffn, rules, "dp", "sp", None)
-    kv = (k, v) if collect_kv else None
+    kv = (k, v) if collect_kv else extra
     return x, aux, kv
 
 
 def _block_decode(cfg, mesh, rules, x, bp, kc, vc, cur_index, *, window: int,
-                  dec_sharding: DecodeSharding):
-    """One block, single-token decode. x: (B, D). Returns (x, kc, vc)."""
+                  dec_sharding: DecodeSharding | None, attn_fn=None):
+    """One block, single-token decode. x: (B, D). Returns (x, kc, vc).
+
+    ``attn_fn(q, kc, vc, k_new, v_new, window)`` overrides the cache-write
+    + attention step (the paged path); the default is the slotted
+    ``decode_attention`` under ``dec_sharding``.  Everything around the
+    attention call is shared so the layouts stay numerically identical.
+    """
     cdt = jnp.dtype(cfg.compute_dtype)
     dh, H, Hk = cfg.head_dim, cfg.n_heads, cfg.n_kv
     B = x.shape[0]
@@ -216,10 +239,13 @@ def _block_decode(cfg, mesh, rules, x, bp, kc, vc, cur_index, *, window: int,
     q = rope(q[:, None], pos, cfg.rope_theta)[:, 0] * _q_scale(cfg)
     k = rope(k[:, None], pos, cfg.rope_theta)[:, 0]
     q = q.reshape(B, Hk, H // Hk, dh)
-    attn, kc, vc = decode_attention(
-        q, kc, vc, k, v, cur_index,
-        sharding=dec_sharding, window=window, softcap=cfg.attn_softcap,
-    )
+    if attn_fn is None:
+        attn, kc, vc = decode_attention(
+            q, kc, vc, k, v, cur_index,
+            sharding=dec_sharding, window=window, softcap=cfg.attn_softcap,
+        )
+    else:
+        attn, kc, vc = attn_fn(q, kc, vc, k, v, window)
     o = jnp.einsum("bk,kd->bd", attn.reshape(B, H * dh), bp["wo"].astype(cdt))
     if cfg.alt_local_global:
         o = rms_norm(o, bp["ln1b"], cfg.norm_eps)
@@ -347,6 +373,31 @@ def cache_pspec(cfg: ArchConfig, dec: DecodeSharding):
     return {"k": spec, "v": spec}
 
 
+def make_paged_cache_specs(cfg: ArchConfig, num_blocks: int, block_size: int):
+    """Abstract paged KV pool (lead..., NB, bs, Hk, dh)."""
+    lead = _leading(cfg)
+    shape = lead + (num_blocks, block_size, cfg.n_kv, cfg.head_dim)
+    c = jax.ShapeDtypeStruct(shape, jnp.dtype(cfg.compute_dtype))
+    return {"k": c, "v": c}
+
+
+def paged_cache_pspec(cfg: ArchConfig, mesh: Mesh, num_blocks: int = 0):
+    """Pool sharding: blocks over the data axes (so per-device reservation
+    shrinks with DP size — matching how the slotted cache batch-shards its
+    lanes; table gathers become collectives, a bandwidth-for-HBM trade)
+    and KV heads over the tensor axis, each when divisible."""
+    lead = (None,) * len(_leading(cfg))
+    from jax.sharding import PartitionSpec as P
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    ndp = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+    blk = dp if (dp and num_blocks and num_blocks % ndp == 0) else None
+    tp = "model" if (
+        "model" in mesh.axis_names and cfg.n_kv % mesh.shape["model"] == 0
+    ) else None
+    spec = P(*lead, blk, None, tp, None)
+    return {"k": spec, "v": spec}
+
+
 def prefill(cfg: ArchConfig, mesh: Mesh, rules: ShardRules, params, tokens,
             img_embeds=None, *, max_len: int | None = None):
     """Returns (cache {k,v}, last-token logits (B, V))."""
@@ -401,22 +452,133 @@ def prefill_slot(cfg: ArchConfig, mesh: Mesh, rules: ShardRules, params,
     return cache, unembed(cfg, rules, params, last)
 
 
-def decode_step(cfg: ArchConfig, mesh: Mesh, rules: ShardRules, params, cache,
-                tokens, cur_index):
-    """tokens: (B,) int32; cur_index: tokens already in cache — a scalar
-    (aligned batch) or a (B,) vector (slotted cache, per-lane positions).
+def prefill_slot_paged(cfg: ArchConfig, mesh: Mesh, rules: ShardRules, params,
+                       cache, tokens, table_row, plen):
+    """Prefill the FIRST chunk (positions [0, C)) of one lane into the
+    paged pool through its block table.
 
-    Returns (logits (B, V), new cache).
+    Runs the same ``forward`` as :func:`prefill_slot` — activations are
+    bitwise-identical, which anchors slotted-vs-paged greedy parity — but
+    the collected KV scatters into pool blocks instead of a lane slice.
+    tokens: (1, C) right-padded; positions ``>= plen`` divert to the null
+    sink block.  Returns (cache', logits (1, V) at ``min(plen, C) - 1``).
     """
-    x = embed_tokens(cfg, rules, params, tokens[:, None])[:, 0]
-    dec = DecodeSharding.choose(mesh, tokens.shape[0])
+    hidden, _, kv = forward(
+        cfg, mesh, rules, params, tokens, None, remat=False, collect_kv=True,
+    )
+    k, v = kv                                   # (L[,2], 1, C, Hk, dh)
+    C = tokens.shape[1]
+    pos = jnp.arange(C)
+    valid = pos < plen
+
+    def write(pool, new):
+        flat_pool = pool.reshape((-1,) + pool.shape[-4:])
+        new = new.reshape(-1, C, cfg.n_kv, cfg.head_dim)
+        out = paged_write_positions(flat_pool, table_row, pos, new, valid)
+        return out.reshape(pool.shape)
+
+    cache = {"k": write(cache["k"], k), "v": write(cache["v"], v)}
+    last = jax.lax.dynamic_index_in_dim(
+        hidden, jnp.clip(plen - 1, 0, C - 1), 1, keepdims=False)
+    return cache, unembed(cfg, rules, params, last)
+
+
+def _block_chunk(cfg, mesh, rules, x, bp, kp, vp, table_row, start, plen, *,
+                 window: int):
+    """One transformer block of a chunked-prefill continuation.
+
+    x: (1, C, D) hidden for prompt positions [start, start+C); kp/vp:
+    block pools (NB, bs, Hk, dh).  Rides ``_block_fwd`` with an attention
+    override: write the chunk's K/V through the table, then attend the
+    chunk's queries against the lane's gathered KV (previous chunks + the
+    chunk itself; the stale tail beyond ``start+C`` is causally masked,
+    pad rows never feed valid rows).  Returns (x, kp, vp).
+    """
+    C = x.shape[1]
+    pos = start + jnp.arange(C)
+
+    def attn_fn(q, k, v, w):
+        valid = pos < plen
+        kp2 = paged_write_positions(kp, table_row, pos, k[0], valid)
+        vp2 = paged_write_positions(vp, table_row, pos, v[0], valid)
+        kl = paged_gather(kp2, table_row[None])   # (1, S_mapped_view, Hk, dh)
+        vl = paged_gather(vp2, table_row[None])
+        attn = chunked_attention(
+            q, kl, vl,
+            causal=True,
+            window=w,
+            softcap=cfg.attn_softcap,
+            q_chunk=min(256, C),
+            kv_chunk=min(256, kl.shape[1]),
+            q_offset=start,
+        )
+        return attn, (kp2, vp2)
+
+    x, _, (kp, vp) = _block_fwd(
+        cfg, mesh, rules, x, bp, pos[None],
+        window=window, collect_kv=False, attn_fn=attn_fn,
+    )
+    return x, kp, vp
+
+
+def prefill_chunk_paged(cfg: ArchConfig, mesh: Mesh, rules: ShardRules,
+                        params, cache, tokens, table_row, start, plen):
+    """Continue a chunked prefill: prompt positions [start, start+C)
+    against the lane's existing paged KV (``start > 0``; the first chunk
+    goes through :func:`prefill_slot_paged`).
+
+    tokens: (1, C) — the chunk, right-padded on the last chunk; ``start``
+    and ``plen`` are traced scalars so ONE executable per chunk size
+    serves every continuation.  Returns (cache', logits (1, V) at prompt
+    position ``min(plen, start+C) - 1`` — meaningful on the last chunk).
+    """
+    x = embed_tokens(cfg, rules, params, tokens)          # (1, C, D)
+    x = constrain(x, rules, "dp", "sp", None)
+    C = tokens.shape[1]
     windows = _windows(cfg)
 
-    # fori_loop with in-place dynamic updates on the carried cache: the
-    # stacked KV cache lives in ONE buffer (a scan's xs+ys would
-    # double-buffer it — 2x HBM for the dominant decode tensor).  The
-    # leading layer axis is unsharded, so the per-layer slice/update is
-    # local (no collectives).
+    def body(i, carry):
+        x, kp_all, vp_all = carry
+        idx = lambda a: jax.lax.dynamic_index_in_dim(a, i, 0, keepdims=False)
+        bp = jax.tree.map(idx, params["blocks"])
+        kp, vp = idx(kp_all), idx(vp_all)
+        if len(windows) > 1:
+            kps, vps = [], []
+            for j, w in enumerate(windows):
+                x, kpj, vpj = _block_chunk(
+                    cfg, mesh, rules, x, _sub(bp, j), kp[j], vp[j],
+                    table_row, start, plen, window=w,
+                )
+                kps.append(kpj); vps.append(vpj)
+            kp, vp = jnp.stack(kps), jnp.stack(vps)
+        else:
+            x, kp, vp = _block_chunk(
+                cfg, mesh, rules, x, bp, kp, vp, table_row, start, plen,
+                window=windows[0],
+            )
+        upd = lambda a, s: jax.lax.dynamic_update_index_in_dim(a, s, i, 0)
+        return x, upd(kp_all, kp), upd(vp_all, vp)
+
+    L = jax.tree.leaves(params["blocks"])[0].shape[0]
+    x, k_new, v_new = jax.lax.fori_loop(
+        0, L, body, (x, cache["k"], cache["v"]))
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    last = jax.lax.dynamic_index_in_dim(
+        x, jnp.clip(plen - 1 - start, 0, C - 1), 1, keepdims=False)
+    return {"k": k_new, "v": v_new}, unembed(cfg, rules, params, last)
+
+
+def _decode_walk(cfg, mesh, rules, params, cache, x, cur_index, dec, attn_fn):
+    """Shared per-layer decode walk for the slotted and paged layouts.
+
+    fori_loop with in-place dynamic updates on the carried cache: the
+    stacked KV cache lives in ONE buffer (a scan's xs+ys would
+    double-buffer it — 2x HBM for the dominant decode tensor).  The
+    leading layer axis is unsharded, so the per-layer slice/update is
+    local (no collectives).
+    """
+    windows = _windows(cfg)
+
     def body(i, carry):
         x, kc_all, vc_all = carry
         idx = lambda a: jax.lax.dynamic_index_in_dim(a, i, 0, keepdims=False)
@@ -427,14 +589,14 @@ def decode_step(cfg: ArchConfig, mesh: Mesh, rules: ShardRules, params, cache,
             for j, w in enumerate(windows):
                 x, kcj, vcj = _block_decode(
                     cfg, mesh, rules, x, _sub(bp, j), kc[j], vc[j], cur_index,
-                    window=w, dec_sharding=dec,
+                    window=w, dec_sharding=dec, attn_fn=attn_fn,
                 )
                 kcs.append(kcj); vcs.append(vcj)
             kc, vc = jnp.stack(kcs), jnp.stack(vcs)
         else:
             x, kc, vc = _block_decode(
                 cfg, mesh, rules, x, bp, kc, vc, cur_index,
-                window=windows[0], dec_sharding=dec,
+                window=windows[0], dec_sharding=dec, attn_fn=attn_fn,
             )
         upd = lambda a, s: jax.lax.dynamic_update_index_in_dim(a, s, i, 0)
         return x, upd(kc_all, kc), upd(vc_all, vc)
@@ -445,3 +607,37 @@ def decode_step(cfg: ArchConfig, mesh: Mesh, rules: ShardRules, params, cache,
     x = rms_norm(x, params["ln_f"], cfg.norm_eps)
     logits = unembed(cfg, rules, params, x)
     return logits, {"k": k_new, "v": v_new}
+
+
+def decode_step(cfg: ArchConfig, mesh: Mesh, rules: ShardRules, params, cache,
+                tokens, cur_index):
+    """tokens: (B,) int32; cur_index: tokens already in cache — a scalar
+    (aligned batch) or a (B,) vector (slotted cache, per-lane positions).
+
+    Returns (logits (B, V), new cache).
+    """
+    x = embed_tokens(cfg, rules, params, tokens[:, None])[:, 0]
+    dec = DecodeSharding.choose(mesh, tokens.shape[0])
+    return _decode_walk(cfg, mesh, rules, params, cache, x, cur_index, dec, None)
+
+
+def decode_step_paged(cfg: ArchConfig, mesh: Mesh, rules: ShardRules, params,
+                      cache, tokens, lengths, tables, *, impl: str = "ref"):
+    """Paged decode: cache leaves are block pools (L[,2], NB, bs, Hk, dh);
+    ``tables`` (B, nb) maps each lane's logical blocks to pool rows and
+    ``lengths`` (B,) is both the RoPE position and the write position of
+    the new token.  ``impl`` picks the attention backend ("ref" jnp
+    gather / "pallas" block-walking kernel).
+
+    Returns (logits (B, V), new cache).
+    """
+    x = embed_tokens(cfg, rules, params, tokens[:, None])[:, 0]
+
+    def attn_fn(q, kc, vc, k_new, v_new, window):
+        return paged_decode_attention(
+            q, kc, vc, k_new, v_new, lengths, tables,
+            window=window, softcap=cfg.attn_softcap, impl=impl,
+        )
+
+    return _decode_walk(
+        cfg, mesh, rules, params, cache, x, lengths, None, attn_fn)

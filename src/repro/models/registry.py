@@ -39,6 +39,13 @@ def supports_slot_serving(cfg: ArchConfig) -> bool:
     return cfg.family in ("dense", "moe") and hasattr(get_module(cfg), "prefill_slot")
 
 
+def supports_paged_serving(cfg: ArchConfig) -> bool:
+    """Whether the family supports the paged (block-table) KV layout —
+    needs the paged decode/prefill entry points on top of slot serving."""
+    return supports_slot_serving(cfg) and hasattr(
+        get_module(cfg), "decode_step_paged")
+
+
 def abstract_params(cfg: ArchConfig):
     return spec_tree_to_sds(get_module(cfg).param_specs(cfg))
 

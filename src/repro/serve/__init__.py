@@ -1,9 +1,18 @@
 from .cache import bucket_for, make_slot_state, prompt_buckets, slot_state_specs
 from .engine import Completion, EngineConfig, ServeEngine
 from .loop import ServeConfig, generate, generate_static
+from .paged import (
+    BlockAllocator,
+    SlotTables,
+    blocks_for,
+    make_paged_state,
+    paged_state_specs,
+)
 from .step import (
     jit_decode_step,
     jit_prefill,
+    paged_decode_program,
+    paged_prefill_program,
     sample_tokens,
     slot_decode_program,
     slot_prefill_program,
@@ -13,6 +22,9 @@ __all__ = [
     "Completion", "EngineConfig", "ServeEngine",
     "ServeConfig", "generate", "generate_static",
     "bucket_for", "make_slot_state", "prompt_buckets", "slot_state_specs",
+    "BlockAllocator", "SlotTables", "blocks_for", "make_paged_state",
+    "paged_state_specs",
     "jit_decode_step", "jit_prefill", "sample_tokens",
     "slot_decode_program", "slot_prefill_program",
+    "paged_decode_program", "paged_prefill_program",
 ]

@@ -17,6 +17,8 @@ decode loop's only host sync is the sampled-token fetch:
     active   (N,) bool   lane is serving a live request
     limits   (N,) int32  cache length at which the final token is sampled
     temps    (N,) f32    per-slot sampling temperature (0 = greedy)
+    top_ks   (N,) int32  per-slot top-k mask (0 = off)
+    top_ps   (N,) f32    per-slot nucleus threshold (<=0 or >=1 = off)
     key      PRNG key    split once per engine step (deterministic per seed)
 
 Prompt lengths are **bucketed** (powers of two by default) so one prefill
@@ -41,6 +43,8 @@ def prompt_buckets(max_len: int, min_bucket: int = DEFAULT_MIN_BUCKET) -> tuple[
     """Power-of-two prompt-length buckets, capped at ``max_len``."""
     if max_len < 1:
         raise ValueError(f"max_len must be positive, got {max_len}")
+    if min_bucket < 1:
+        raise ValueError(f"min_bucket must be positive, got {min_bucket}")
     out: list[int] = []
     b = min(min_bucket, max_len)
     while b < max_len:
@@ -52,6 +56,10 @@ def prompt_buckets(max_len: int, min_bucket: int = DEFAULT_MIN_BUCKET) -> tuple[
 
 def bucket_for(plen: int, buckets: tuple[int, ...]) -> int:
     """Smallest bucket that fits a prompt of length ``plen``."""
+    if plen < 1:
+        raise ValueError(f"prompt length must be positive, got {plen}")
+    if not buckets:
+        raise ValueError("no prompt buckets configured")
     for b in buckets:
         if b >= plen:
             return b
@@ -60,30 +68,39 @@ def bucket_for(plen: int, buckets: tuple[int, ...]) -> int:
     )
 
 
+def sched_specs(mesh, max_slots: int):
+    """Per-slot scheduling vectors shared by the slotted and paged layouts:
+    ``({leaf: sds}, {leaf: NamedSharding})`` (all replicated)."""
+    rep = NamedSharding(mesh, P())
+    n = max_slots
+    sds = {
+        "tokens": jax.ShapeDtypeStruct((n,), jnp.int32),
+        "lengths": jax.ShapeDtypeStruct((n,), jnp.int32),
+        "active": jax.ShapeDtypeStruct((n,), jnp.bool_),
+        "limits": jax.ShapeDtypeStruct((n,), jnp.int32),
+        "temps": jax.ShapeDtypeStruct((n,), jnp.float32),
+        "top_ks": jax.ShapeDtypeStruct((n,), jnp.int32),
+        "top_ps": jax.ShapeDtypeStruct((n,), jnp.float32),
+        "key": jax.ShapeDtypeStruct((2,), jnp.uint32),
+    }
+    sh = {k: rep for k in sds}
+    return sds, sh
+
+
 def slot_state_specs(cfg: ArchConfig, mesh, max_slots: int, max_len: int):
     """Abstract slot state: ``({leaf: sds}, {leaf: NamedSharding})``."""
     mod = registry.get_module(cfg)
     dec = DecodeSharding.choose(mesh, max_slots)
     cache_sds = mod.make_cache_specs(cfg, max_slots, max_len)
     cache_ps = mod.cache_pspec(cfg, dec)
-    rep = NamedSharding(mesh, P())
-    n = max_slots
-    sds = {
-        "cache": cache_sds,
-        "tokens": jax.ShapeDtypeStruct((n,), jnp.int32),
-        "lengths": jax.ShapeDtypeStruct((n,), jnp.int32),
-        "active": jax.ShapeDtypeStruct((n,), jnp.bool_),
-        "limits": jax.ShapeDtypeStruct((n,), jnp.int32),
-        "temps": jax.ShapeDtypeStruct((n,), jnp.float32),
-        "key": jax.ShapeDtypeStruct((2,), jnp.uint32),
-    }
+    sched_sds, sched_sh = sched_specs(mesh, max_slots)
+    sds = {"cache": cache_sds, **sched_sds}
     sh = {
         "cache": jax.tree.map(
             lambda p: NamedSharding(mesh, p), cache_ps,
             is_leaf=lambda x: isinstance(x, P),
         ),
-        "tokens": rep, "lengths": rep, "active": rep,
-        "limits": rep, "temps": rep, "key": rep,
+        **sched_sh,
     }
     return sds, sh
 

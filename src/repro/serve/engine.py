@@ -1,4 +1,4 @@
-"""Continuous-batching serve engine over the slotted KV cache.
+"""Continuous-batching serve engine over the slotted or paged KV cache.
 
 The engine runs one fixed-shape decode executable over ``max_slots`` cache
 lanes.  Requests are admitted into free lanes at *any* decode step (prefill
@@ -7,20 +7,42 @@ immediately (EOS or token budget), and sampling is fused into the decode
 program — the per-step host sync is a single ``(max_slots,)`` int32 token
 fetch instead of a logits round-trip.
 
+Two cache layouts (``EngineConfig.kv_layout``):
+
+``slotted``  fixed ``max_slots x max_len`` lanes — every lane reserves
+             worst-case HBM (the PR-2 baseline, kept for parity).
+``paged``    a shared pool of fixed-size KV blocks with per-lane block
+             tables (serve/paged.py): blocks are allocated on demand —
+             prompt blocks at admission, one more each time decode
+             crosses a block boundary — and freed on eviction, so
+             reservation is ``num_blocks * page_size`` positions sized to
+             load, not ``max_slots * max_len``.  Greedy decoding is
+             token-for-token identical to the slotted layout (asserted in
+             tests and gated in CI).
+
+On the paged layout, **chunked prefill** (``EngineConfig.prefill_chunk``)
+admits long prompts as fixed-size chunks processed one per engine step and
+interleaved with decode, instead of one monolithic prefill call blocking
+the whole batch; one AOT executable per chunk size serves every prompt.
+
 Every executable is AOT-compiled once per static key through an
-:class:`~repro.core.aot.AotCache` — ``(config, bucketed prompt length,
-max_slots, sampler options)`` — so steady-state dispatch is a dict probe:
-after warmup the engine's ``builds`` counter must stay flat (asserted by
-``benchmarks/serve_bench.py --smoke`` in CI).
+:class:`~repro.core.aot.AotCache`, so steady-state dispatch is a dict
+probe: after warmup the engine's ``builds`` counter must stay flat
+(asserted by ``benchmarks/serve_bench.py --smoke`` in CI, for both
+layouts).
 
 Host-side the engine keeps a mirror of the scheduling vectors (lengths,
-budgets, which request owns which lane).  The mirror is advanced by the
-same rules the device applies, so the engine never reads device state
-back except the sampled tokens it needs to stream anyway.
+budgets, block tables, which request owns which lane).  The mirror is
+advanced by the same rules the device applies, so the engine never reads
+device state back except the sampled tokens it needs to stream anyway;
+block accounting is pure host bookkeeping plus a tiny ``tables`` re-push
+whenever a row changes.
 
     engine = ServeEngine(cfg, mesh, rules, params,
-                         EngineConfig(max_slots=8, max_len=256))
-    rid = engine.submit(prompt_ids, max_new_tokens=32, temperature=0.7)
+                         EngineConfig(max_slots=8, max_len=256,
+                                      kv_layout="paged", prefill_chunk=32))
+    rid = engine.submit(prompt_ids, max_new_tokens=32, temperature=0.7,
+                        top_k=50, top_p=0.9)
     engine.drain()                       # or step() under an arrival loop
     out = engine.completions[rid].tokens
 """
@@ -42,21 +64,47 @@ from repro.models import registry
 from repro.models.common import ShardRules
 from repro.train.step import shardings_for
 from .cache import bucket_for, make_slot_state, prompt_buckets, slot_state_specs, state_sds
-from .step import slot_decode_program, slot_prefill_program
+from .paged import (
+    BlockAllocator,
+    SlotTables,
+    blocks_for,
+    cache_nbytes,
+    make_paged_state,
+    paged_state_specs,
+)
+from .step import (
+    paged_decode_program,
+    paged_prefill_program,
+    slot_decode_program,
+    slot_prefill_program,
+)
 
 
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
     max_slots: int = 8            # cache lanes decoded per step
-    max_len: int = 256            # fixed per-lane cache length
+    max_len: int = 256            # max per-lane sequence length
     eos_id: int | None = None     # None: budget-only eviction
-    top_k: int = 0                # 0: no top-k mask in the fused sampler
+    top_k: int = 0                # default per-request top-k (0 = off)
+    top_p: float = 0.0            # default per-request nucleus p (off)
     seed: int = 0
     # prompt-length buckets for the prefill executables; None -> powers of
     # two up to max_len (one AOT build per bucket ever used)
     prefill_buckets: tuple[int, ...] | None = None
     # False: benchmark baseline — logits round-trip to host sampling
     fused_sampling: bool = True
+    # --- KV layout -----------------------------------------------------
+    kv_layout: str = "slotted"    # "slotted" | "paged"
+    page_size: int = 16           # KV block size (paged)
+    # pool size in blocks incl. the null block; None -> worst case
+    # (max_slots * max_len/page_size + 1) — size it below that to reserve
+    # less HBM than the slotted layout
+    num_blocks: int | None = None
+    # >0: admit prompts in chunks of this many tokens, one chunk per
+    # engine step, interleaved with decode (paged only; 0 = whole-prompt
+    # bucketed prefill)
+    prefill_chunk: int = 0
+    paged_attn: str = "ref"       # paged decode backend: "ref" | "pallas"
 
 
 @dataclasses.dataclass
@@ -65,6 +113,11 @@ class _Slot:
     plen: int
     limit: int                    # cache length at which the last token samples
     temperature: float
+    top_k: int
+    top_p: float
+    prompt: np.ndarray
+    chunk: int                    # prefill chunk size (== bucket when whole)
+    prefilled: int = 0            # prompt positions prefilled so far
     generated: int = 0
 
 
@@ -85,6 +138,8 @@ class _Pending:
     prompt: np.ndarray
     max_new_tokens: int
     temperature: float
+    top_k: int
+    top_p: float
     submit_time: float
 
 
@@ -105,6 +160,14 @@ class ServeEngine:
                 f"family {cfg.family!r} does not support slot serving; "
                 "use serve.loop.generate_static"
             )
+        if engine.kv_layout not in ("slotted", "paged"):
+            raise ValueError(f"unknown kv_layout {engine.kv_layout!r}")
+        self.paged = engine.kv_layout == "paged"
+        if not self.paged and engine.prefill_chunk:
+            raise ValueError("prefill_chunk requires kv_layout='paged'")
+        if self.paged and not registry.supports_paged_serving(cfg):
+            raise ValueError(
+                f"family {cfg.family!r} does not support paged serving")
         self.cfg, self.mesh, self.rules = cfg, mesh, rules
         self.econ = engine
         self.buckets = tuple(engine.prefill_buckets or prompt_buckets(engine.max_len))
@@ -117,18 +180,51 @@ class ServeEngine:
         self._rep = NamedSharding(mesh, P())
         self.params = jax.device_put(params, self._p_sh)
         self._params_sds = registry.abstract_params(cfg)
-        _, self._state_sh = slot_state_specs(cfg, mesh, engine.max_slots, engine.max_len)
-        self.state = make_slot_state(
-            cfg, mesh, engine.max_slots, engine.max_len, engine.seed)
+        if self.paged:
+            bs = engine.page_size
+            if engine.max_len % bs:
+                raise ValueError(
+                    f"max_len ({engine.max_len}) must be a multiple of "
+                    f"page_size ({bs})"
+                )
+            blocks_per_slot = engine.max_len // bs
+            want = engine.num_blocks or engine.max_slots * blocks_per_slot + 1
+            # round the pool up to the data-parallel size so its block dim
+            # shards evenly — per-DEVICE reservation then scales down with
+            # DP like the slotted cache's batch-sharded lanes does
+            ndp = int(np.prod([
+                mesh.shape[a] for a in ("pod", "data")
+                if a in mesh.axis_names
+            ]))
+            self._num_blocks = -(-want // max(ndp, 1)) * max(ndp, 1)
+            self.alloc = BlockAllocator(self._num_blocks, bs)
+            self.tables = SlotTables(engine.max_slots, blocks_per_slot)
+            self._deficit = 0           # committed-but-unallocated blocks
+            self._slot_wc = [0] * engine.max_slots
+            self._tables_dirty = False
+            _, self._state_sh = paged_state_specs(
+                cfg, mesh, engine.max_slots, engine.max_len,
+                self._num_blocks, bs)
+            self.state = make_paged_state(
+                cfg, mesh, engine.max_slots, engine.max_len,
+                self._num_blocks, bs, engine.seed)
+        else:
+            self._num_blocks = 0
+            _, self._state_sh = slot_state_specs(
+                cfg, mesh, engine.max_slots, engine.max_len)
+            self.state = make_slot_state(
+                cfg, mesh, engine.max_slots, engine.max_len, engine.seed)
         self._state_sds = state_sds(self.state)
+        self.kv_reserved_bytes = cache_nbytes(self.state["cache"])
 
         self.queue: deque[_Pending] = deque()
         self.slots: list[_Slot | None] = [None] * engine.max_slots
         self.live: dict[int, Completion] = {}
         self.completions: dict[int, Completion] = {}
         self.counters = {
-            "prefills": 0, "decode_steps": 0,
+            "prefills": 0, "prefill_chunks": 0, "decode_steps": 0,
             "admitted": 0, "evicted": 0, "dead_slot_steps": 0,
+            "kv_peak_used_bytes": 0,
         }
         self._next_rid = 0
         self._host_rng = np.random.default_rng(engine.seed)
@@ -141,17 +237,25 @@ class ServeEngine:
     # ------------------------------------------------------------------
     def _sampler_key(self) -> tuple:
         e = self.econ
-        return (self.cfg.name, e.max_slots, e.max_len, e.top_k, e.eos_id,
-                e.fused_sampling)
+        return (self.cfg.name, e.max_slots, e.max_len, e.eos_id,
+                e.fused_sampling, e.kv_layout, e.page_size,
+                self._num_blocks, e.paged_attn)
 
     def _decode_exe(self):
         key = ("slot_decode",) + self._sampler_key()
 
         def build():
-            fn = slot_decode_program(
-                self.cfg, self.mesh, self.rules, top_k=self.econ.top_k,
-                eos_id=self.econ.eos_id, fused=self.econ.fused_sampling,
-            )
+            e = self.econ
+            if self.paged:
+                fn = paged_decode_program(
+                    self.cfg, self.mesh, self.rules, eos_id=e.eos_id,
+                    fused=e.fused_sampling, impl=e.paged_attn,
+                )
+            else:
+                fn = slot_decode_program(
+                    self.cfg, self.mesh, self.rules, eos_id=e.eos_id,
+                    fused=e.fused_sampling,
+                )
             jitted = jax.jit(
                 fn, in_shardings=(self._p_sh, self._state_sh),
                 # pin state outputs to the canonical shardings so decode
@@ -164,25 +268,42 @@ class ServeEngine:
 
         return self.aot.get(key, build)
 
-    def _prefill_exe(self, bucket: int):
-        key = ("slot_prefill", bucket) + self._sampler_key()
+    def _prefill_exe(self, bucket: int, first: bool = True):
+        key = ("slot_prefill", bucket, first) + self._sampler_key()
 
         def build():
-            fn = slot_prefill_program(
-                self.cfg, self.mesh, self.rules, top_k=self.econ.top_k,
-                eos_id=self.econ.eos_id, fused=self.econ.fused_sampling,
-            )
+            e = self.econ
             rep = self._rep
+            i32 = lambda shape=(): jax.ShapeDtypeStruct(shape, jnp.int32)
+            f32 = lambda: jax.ShapeDtypeStruct((), jnp.float32)
+            if self.paged:
+                fn = paged_prefill_program(
+                    self.cfg, self.mesh, self.rules, eos_id=e.eos_id,
+                    fused=e.fused_sampling, first=first,
+                )
+                jitted = jax.jit(
+                    fn,
+                    in_shardings=(self._p_sh, self._state_sh) + (rep,) * 8,
+                    out_shardings=(self._state_sh, rep),
+                    donate_argnums=(1,),
+                )
+                return jitted.lower(
+                    self._params_sds, self._state_sds, i32((1, bucket)),
+                    i32(), i32(), i32(), i32(), f32(), i32(), f32(),
+                ).compile()
+            fn = slot_prefill_program(
+                self.cfg, self.mesh, self.rules, eos_id=e.eos_id,
+                fused=e.fused_sampling,
+            )
             jitted = jax.jit(
                 fn,
-                in_shardings=(self._p_sh, self._state_sh, rep, rep, rep, rep, rep),
+                in_shardings=(self._p_sh, self._state_sh) + (rep,) * 7,
                 out_shardings=(self._state_sh, rep),
                 donate_argnums=(1,),
             )
-            i32 = lambda shape=(): jax.ShapeDtypeStruct(shape, jnp.int32)
             return jitted.lower(
                 self._params_sds, self._state_sds, i32((1, bucket)),
-                i32(), i32(), i32(), jax.ShapeDtypeStruct((), jnp.float32),
+                i32(), i32(), i32(), f32(), i32(), f32(),
             ).compile()
 
         return self.aot.get(key, build)
@@ -191,8 +312,10 @@ class ServeEngine:
     # Request lifecycle
     # ------------------------------------------------------------------
     def submit(self, prompt, *, max_new_tokens: int = 16,
-               temperature: float = 0.0, rid: int | None = None) -> int:
-        """Queue a request; returns its request id."""
+               temperature: float = 0.0, top_k: int | None = None,
+               top_p: float | None = None, rid: int | None = None) -> int:
+        """Queue a request; returns its request id.  ``top_k``/``top_p``
+        default to the engine-wide ``EngineConfig`` values."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if prompt.size < 1:
             raise ValueError("empty prompt")
@@ -204,11 +327,27 @@ class ServeEngine:
                 f"prompt ({prompt.size}) + max_new_tokens ({max_new_tokens}) "
                 f"exceeds max_len {self.econ.max_len}"
             )
+        if self.paged:
+            wc = blocks_for(prompt.size + max_new_tokens - 1,
+                            self.econ.page_size)
+            if wc > self.alloc.capacity:
+                raise ValueError(
+                    f"request needs up to {wc} KV blocks but the pool only "
+                    f"has {self.alloc.capacity}"
+                )
+        eff_k = int(self.econ.top_k if top_k is None else top_k)
+        eff_p = float(self.econ.top_p if top_p is None else top_p)
+        if not self.econ.fused_sampling and (eff_k > 0 or 0.0 < eff_p < 1.0):
+            raise ValueError(
+                "top_k/top_p require fused_sampling=True (the host-sampling "
+                "ablation applies temperature only)"
+            )
         if rid is None:
             rid = self._next_rid
         self._next_rid = max(self._next_rid, rid) + 1
         self.queue.append(_Pending(
-            rid, prompt, max_new_tokens, float(temperature), self.clock()))
+            rid, prompt, max_new_tokens, float(temperature), eff_k, eff_p,
+            self.clock()))
         return rid
 
     def free_slots(self) -> list[int]:
@@ -220,36 +359,104 @@ class ServeEngine:
     def _put(self, x, dtype):
         return jax.device_put(jnp.asarray(x, dtype), self._rep)
 
+    # -- paged block bookkeeping ---------------------------------------
+    def _can_admit(self, req: _Pending) -> bool:
+        if not self.paged:
+            return True
+        wc = blocks_for(req.prompt.size + req.max_new_tokens - 1,
+                        self.econ.page_size)
+        # conservative: only admit when the pool can still cover every
+        # live lane's worst case plus this one — decode growth can then
+        # never find the free list empty
+        return self.alloc.num_free - self._deficit >= wc
+
+    def _map_blocks(self, slot: int, need: int) -> None:
+        while self.tables.mapped(slot) < need:
+            self.tables.append(slot, self.alloc.alloc())
+            self._deficit -= 1
+            self._tables_dirty = True
+
+    def _push_tables(self) -> None:
+        """Re-push the host block-table mirror as the device state leaf.
+        Must run before any executable that follows a table change — in
+        particular before the decode after an eviction, so stale lanes'
+        sink-routed writes can't land in re-allocated blocks."""
+        if self._tables_dirty:
+            self.state["tables"] = self._put(self.tables.table, jnp.int32)
+            self._tables_dirty = False
+
+    # -- admission ------------------------------------------------------
     def _admit(self, req: _Pending, slot: int) -> None:
         plen = int(req.prompt.size)
-        bucket = bucket_for(plen, self.buckets)
-        padded = np.zeros((1, bucket), np.int32)
-        padded[0, :plen] = req.prompt
         limit = plen + req.max_new_tokens - 1
-        exe = self._prefill_exe(bucket)
-        self.state, out = exe(
-            self.params, self.state, self._put(padded, jnp.int32),
-            self._put(slot, jnp.int32), self._put(plen, jnp.int32),
-            self._put(limit, jnp.int32), self._put(req.temperature, jnp.float32),
+        if self.paged and self.econ.prefill_chunk:
+            chunk = self.econ.prefill_chunk
+        else:
+            chunk = bucket_for(plen, self.buckets)
+        self.live[req.rid] = Completion(
+            rid=req.rid, prompt_len=plen, max_new_tokens=req.max_new_tokens,
+            tokens=[], token_times=[], submit_time=req.submit_time,
+            finish_time=0.0,
         )
-        self.counters["prefills"] += 1
+        self.slots[slot] = _Slot(
+            req.rid, plen, limit, req.temperature, req.top_k, req.top_p,
+            req.prompt, chunk,
+        )
+        if self.paged:
+            wc = blocks_for(limit, self.econ.page_size)
+            self._slot_wc[slot] = wc
+            self._deficit += wc
         self.counters["admitted"] += 1
+        self._prefill_next_chunk(slot)
+
+    def _prefill_next_chunk(self, slot: int) -> None:
+        """Run one prefill chunk for the lane (the whole bucketed prompt
+        when chunking is off).  The chunk covering the prompt's last
+        position samples the first token and activates the lane."""
+        s = self.slots[slot]
+        start = s.prefilled
+        C = s.chunk
+        end = min(start + C, s.plen)
+        padded = np.zeros((1, C), np.int32)
+        padded[0, : end - start] = s.prompt[start:end]
+        if self.paged:
+            self._map_blocks(slot, blocks_for(end, self.econ.page_size))
+            self._push_tables()
+            exe = self._prefill_exe(C, first=(start == 0))
+            self.state, out = exe(
+                self.params, self.state, self._put(padded, jnp.int32),
+                self._put(slot, jnp.int32), self._put(start, jnp.int32),
+                self._put(s.plen, jnp.int32), self._put(s.limit, jnp.int32),
+                self._put(s.temperature, jnp.float32),
+                self._put(s.top_k, jnp.int32), self._put(s.top_p, jnp.float32),
+            )
+        else:
+            exe = self._prefill_exe(C)
+            self.state, out = exe(
+                self.params, self.state, self._put(padded, jnp.int32),
+                self._put(slot, jnp.int32), self._put(s.plen, jnp.int32),
+                self._put(s.limit, jnp.int32),
+                self._put(s.temperature, jnp.float32),
+                self._put(s.top_k, jnp.int32), self._put(s.top_p, jnp.float32),
+            )
+        s.prefilled = end
+        self.counters["prefill_chunks"] += 1
+        if end < s.plen:
+            return                              # more chunks to come
+        self.counters["prefills"] += 1
 
         if self.econ.fused_sampling:
             tok = int(np.asarray(out)[0])
         else:
             tok = int(self._host_sample(
-                np.asarray(out), np.array([req.temperature]))[0])
+                np.asarray(out), np.array([s.temperature]))[0])
         now = self.clock()
-        comp = Completion(
-            rid=req.rid, prompt_len=plen, max_new_tokens=req.max_new_tokens,
-            tokens=[tok], token_times=[now], submit_time=req.submit_time,
-            finish_time=0.0,
-        )
-        self.live[req.rid] = comp
-        self.slots[slot] = _Slot(req.rid, plen, limit, req.temperature, generated=1)
+        comp = self.live[s.rid]
+        comp.tokens.append(tok)
+        comp.token_times.append(now)
+        s.generated = 1
         self._tok_mirror[slot] = tok
-        done = (req.max_new_tokens == 1) or (
+        done = (s.plen >= s.limit) or (
             self.econ.eos_id is not None and tok == self.econ.eos_id)
         self._active_mirror[slot] = not done
         if done:
@@ -264,10 +471,18 @@ class ServeEngine:
         self.completions[s.rid] = comp
         self.slots[slot] = None
         self._active_mirror[slot] = False
+        if self.paged:
+            mapped = self.tables.mapped(slot)
+            self._deficit -= self._slot_wc[slot] - mapped
+            self._slot_wc[slot] = 0
+            for b in self.tables.release(slot):
+                self.alloc.free(b)
+            self._tables_dirty = True
         self.counters["evicted"] += 1
 
     def _host_sample(self, logits: np.ndarray, temps: np.ndarray) -> np.ndarray:
-        """Benchmark baseline: sample on host from full logits (M, V)."""
+        """Benchmark baseline: sample on host from full logits (M, V)
+        (temperature only — per-slot top-k/top-p ride the fused path)."""
         logits = np.asarray(logits, np.float32)
         out = np.argmax(logits, axis=-1).astype(np.int32)
         for i, t in enumerate(temps):
@@ -283,23 +498,62 @@ class ServeEngine:
         self.state["tokens"] = self._put(self._tok_mirror, jnp.int32)
         self.state["active"] = self._put(self._active_mirror, jnp.bool_)
 
+    def _note_kv_usage(self, decoding: frozenset = frozenset()) -> None:
+        """Update the KV high-water mark.  Paged reads the allocator's
+        monotone peak (same-step evictions can't hide it); slotted is
+        sampled right after the decode write (``decoding`` = lanes whose
+        new token's KV is on device but not yet in the ``generated``
+        mirror) so eviction-step usage isn't under-counted."""
+        if self.paged:
+            used = self.alloc.peak_in_use * (
+                self.kv_reserved_bytes // self._num_blocks)
+        else:
+            per_tok = self.kv_reserved_bytes // (
+                self.econ.max_slots * self.econ.max_len)
+            used = per_tok * sum(
+                s.prefilled + max(0, s.generated - 1) + (i in decoding)
+                for i, s in enumerate(self.slots) if s is not None
+            )
+        self.counters["kv_peak_used_bytes"] = max(
+            self.counters["kv_peak_used_bytes"], used)
+
     # ------------------------------------------------------------------
     # The serving loop
     # ------------------------------------------------------------------
     def step(self) -> bool:
-        """Admit every queued request a free slot can take, then advance
-        all active lanes by one token.  Returns False when idle."""
+        """Advance in-flight chunked prefills (one chunk per lane), admit
+        every queued request a free slot (and, paged, the block budget)
+        can take, then advance all fully-prefilled lanes by one token.
+        Returns False when idle."""
         progressed = False
+        for slot, s in enumerate(self.slots):
+            if s is not None and s.prefilled < s.plen:
+                self._prefill_next_chunk(slot)
+                progressed = True
+
         for slot in self.free_slots():
-            if not self.queue:
+            if not self.queue or not self._can_admit(self.queue[0]):
                 break
             self._admit(self.queue.popleft(), slot)
             progressed = True
 
-        active_slots = [i for i, s in enumerate(self.slots) if s is not None]
+        active_slots = [
+            i for i, s in enumerate(self.slots)
+            if s is not None and s.prefilled >= s.plen
+        ]
         if active_slots:
+            if self.paged:
+                # map the block each lane's next token lands in BEFORE the
+                # step — the device never allocates
+                for i in active_slots:
+                    s = self.slots[i]
+                    next_pos = s.plen + s.generated - 1
+                    self._map_blocks(
+                        i, next_pos // self.econ.page_size + 1)
+                self._push_tables()
             exe = self._decode_exe()
             self.state, out = exe(self.params, self.state)
+            self._note_kv_usage(frozenset(active_slots))
             self.counters["decode_steps"] += 1
             self.counters["dead_slot_steps"] += (
                 self.econ.max_slots - len(active_slots))
@@ -326,6 +580,7 @@ class ServeEngine:
             if not self.econ.fused_sampling:
                 self._writeback_sampled()
             progressed = True
+        self._note_kv_usage()
         return progressed
 
     def drain(self) -> None:
@@ -333,10 +588,12 @@ class ServeEngine:
             pass
 
     def run(self, prompts: Sequence[Any], *, max_new_tokens: int = 16,
-            temperature: float = 0.0) -> list[np.ndarray]:
+            temperature: float = 0.0, top_k: int | None = None,
+            top_p: float | None = None) -> list[np.ndarray]:
         """Batch convenience: submit all, drain, return tokens in order."""
         rids = [
-            self.submit(p, max_new_tokens=max_new_tokens, temperature=temperature)
+            self.submit(p, max_new_tokens=max_new_tokens,
+                        temperature=temperature, top_k=top_k, top_p=top_p)
             for p in prompts
         ]
         self.drain()
@@ -345,4 +602,9 @@ class ServeEngine:
     @property
     def stats(self) -> dict:
         """Engine + dispatch counters (mirrors ``SynkFunction.stats``)."""
-        return {**self.counters, **self.aot.stats, "executables": len(self.aot)}
+        return {
+            **self.counters, **self.aot.stats,
+            "executables": len(self.aot),
+            "kv_layout": self.econ.kv_layout,
+            "kv_reserved_bytes": self.kv_reserved_bytes,
+        }

@@ -1,0 +1,228 @@
+"""Paged KV cache: host-side block allocator + device-resident paged state.
+
+The slotted cache reserves ``max_slots x max_len`` KV positions up front —
+every lane pays worst-case HBM whether its request is 4 tokens or 400.
+The paged layout replaces the per-lane tensor with a **shared pool** of
+fixed-size blocks:
+
+    cache {k,v}  (L[,2], num_blocks, block_size, Hk, dh)
+    tables       (max_slots, max_len // block_size) int32
+
+A lane owns a *block table* row: entry ``j`` is the physical block holding
+logical positions ``[j*bs, (j+1)*bs)``.  Blocks are allocated on demand —
+at admission for the prompt, then one at a time as decode crosses block
+boundaries — and returned to the free list on eviction.  HBM reservation
+is ``num_blocks * block_size`` positions total, sized to *expected* load
+rather than ``max_slots * max_len`` worst case.
+
+Physical block **0 is the null block**: a write sink that is never
+allocated and never read.  Unmapped table entries point at it, so garbage
+writes from padded prefill tails, freed lanes, and mid-prefill decode
+steps land there instead of corrupting live blocks (the paged analogue of
+the slotted cache's lazy-overwrite argument).
+
+The allocator and tables are **host-side** (plain Python/numpy): the
+engine mirrors scheduling state anyway, so block accounting adds zero
+device syncs.  The device sees only the ``tables`` array, re-pushed as a
+state leaf whenever a row changes (a few hundred bytes, amortised over
+many steps).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models import registry
+
+NULL_BLOCK = 0
+
+
+def blocks_for(positions: int, block_size: int) -> int:
+    """Blocks needed to hold ``positions`` KV positions."""
+    if positions <= 0:
+        return 0
+    return -(-positions // block_size)
+
+
+class BlockAllocator:
+    """Fixed pool of KV blocks with a free list.
+
+    Block 0 is reserved as the null/write-sink block and is never handed
+    out.  ``alloc`` pops the lowest free id (deterministic across runs so
+    block layouts — and therefore the bytes the bench reports — are
+    reproducible); ``free`` returns a block.  ``peak_in_use`` tracks the
+    high-water mark for the bench's ``kv_used_bytes``.
+    """
+
+    def __init__(self, num_blocks: int, block_size: int):
+        if num_blocks < 2:
+            raise ValueError(
+                f"num_blocks must be >= 2 (block 0 is the null block), "
+                f"got {num_blocks}"
+            )
+        if block_size < 1:
+            raise ValueError(f"block_size must be positive, got {block_size}")
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        # sorted free list, popped from the front: lowest ids first
+        self._free = list(range(1, num_blocks))
+        self._allocated: set[int] = set()
+        self.peak_in_use = 0
+
+    @property
+    def capacity(self) -> int:
+        """Allocatable blocks (excludes the null block)."""
+        return self.num_blocks - 1
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def in_use(self) -> int:
+        return len(self._allocated)
+
+    def alloc(self) -> int:
+        if not self._free:
+            raise RuntimeError("KV block pool exhausted")
+        b = self._free.pop(0)
+        self._allocated.add(b)
+        self.peak_in_use = max(self.peak_in_use, len(self._allocated))
+        return b
+
+    def free(self, block: int) -> None:
+        if block == NULL_BLOCK:
+            raise ValueError("cannot free the null block")
+        if block not in self._allocated:
+            raise ValueError(f"block {block} is not allocated")
+        self._allocated.remove(block)
+        # keep the free list sorted so allocation order is deterministic
+        import bisect
+        bisect.insort(self._free, block)
+
+    def check(self) -> None:
+        """Invariant sweep (used by the property tests)."""
+        assert len(self._free) + len(self._allocated) == self.capacity
+        assert not (set(self._free) & self._allocated)
+        assert NULL_BLOCK not in self._allocated and NULL_BLOCK not in self._free
+        assert self._free == sorted(self._free)
+
+
+class SlotTables:
+    """Per-slot block tables mirrored on host.
+
+    Invariant (the *compaction* invariant): every row is a contiguous
+    prefix of live block ids followed by ``NULL_BLOCK`` padding — blocks
+    are appended in logical order and only released all at once, so a
+    lane's mapped region is always ``[0, mapped(slot) * block_size)``.
+    """
+
+    def __init__(self, max_slots: int, blocks_per_slot: int):
+        self.table = np.zeros((max_slots, blocks_per_slot), np.int32)
+        self._blocks: list[list[int]] = [[] for _ in range(max_slots)]
+
+    @property
+    def blocks_per_slot(self) -> int:
+        return self.table.shape[1]
+
+    def mapped(self, slot: int) -> int:
+        """Number of blocks mapped for ``slot``."""
+        return len(self._blocks[slot])
+
+    def blocks(self, slot: int) -> tuple[int, ...]:
+        return tuple(self._blocks[slot])
+
+    def append(self, slot: int, block: int) -> None:
+        """Map ``block`` as the next logical block of ``slot``."""
+        if block == NULL_BLOCK:
+            raise ValueError("cannot map the null block")
+        row = self._blocks[slot]
+        if len(row) >= self.blocks_per_slot:
+            raise ValueError(f"slot {slot} table is full")
+        self.table[slot, len(row)] = block
+        row.append(block)
+
+    def release(self, slot: int) -> list[int]:
+        """Unmap every block of ``slot``; returns them (caller frees)."""
+        out, self._blocks[slot] = self._blocks[slot], []
+        self.table[slot, :] = NULL_BLOCK
+        return out
+
+    def check(self) -> None:
+        """Compaction + uniqueness invariants (property tests)."""
+        seen: set[int] = set()
+        for slot, row in enumerate(self._blocks):
+            n = len(row)
+            assert list(self.table[slot, :n]) == row
+            assert not self.table[slot, n:].any(), "non-contiguous table row"
+            assert NULL_BLOCK not in row
+            dup = seen & set(row)
+            assert not dup, f"blocks {dup} mapped in two slots"
+            seen |= set(row)
+
+
+# ---------------------------------------------------------------------------
+# Device-resident paged state
+# ---------------------------------------------------------------------------
+
+
+def paged_state_specs(cfg: ArchConfig, mesh, max_slots: int, max_len: int,
+                      num_blocks: int, block_size: int):
+    """Abstract paged state: ``({leaf: sds}, {leaf: NamedSharding})``.
+
+    Mirrors ``cache.slot_state_specs`` but the KV tensors are a shared
+    block pool and the per-slot vectors gain the ``tables`` rows.
+    """
+    from .cache import sched_specs  # local import: cache imports registry too
+
+    if max_len % block_size:
+        raise ValueError(
+            f"max_len ({max_len}) must be a multiple of block_size "
+            f"({block_size})"
+        )
+    mod = registry.get_module(cfg)
+    cache_sds = mod.make_paged_cache_specs(cfg, num_blocks, block_size)
+    cache_ps = mod.paged_cache_pspec(cfg, mesh, num_blocks)
+    rep = NamedSharding(mesh, P())
+    sched_sds, sched_sh = sched_specs(mesh, max_slots)
+    nb = max_len // block_size
+    sds = {
+        "cache": cache_sds,
+        "tables": jax.ShapeDtypeStruct((max_slots, nb), jnp.int32),
+        **sched_sds,
+    }
+    sh = {
+        "cache": jax.tree.map(
+            lambda p: NamedSharding(mesh, p), cache_ps,
+            is_leaf=lambda x: isinstance(x, P),
+        ),
+        "tables": rep,
+        **sched_sh,
+    }
+    return sds, sh
+
+
+def make_paged_state(cfg: ArchConfig, mesh, max_slots: int, max_len: int,
+                     num_blocks: int, block_size: int, seed: int = 0) -> dict:
+    """Allocate the device-resident paged state (all tables null)."""
+    sds, sh = paged_state_specs(
+        cfg, mesh, max_slots, max_len, num_blocks, block_size)
+    state = jax.tree.map(
+        lambda s, d: jax.device_put(jnp.zeros(s.shape, s.dtype), d), sds, sh,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+    )
+    state["key"] = jax.device_put(
+        jax.random.PRNGKey(seed).astype(jnp.uint32), sh["key"]
+    )
+    return state
+
+
+def cache_nbytes(cache_tree) -> int:
+    """Total bytes of the KV cache leaves (arrays or ShapeDtypeStructs)."""
+    return sum(
+        int(np.prod(leaf.shape)) * jnp.dtype(leaf.dtype).itemsize
+        for leaf in jax.tree.leaves(cache_tree)
+    )

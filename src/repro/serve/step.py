@@ -4,13 +4,15 @@
 ``decode_step`` (one new token against a seq_len cache), prefill shapes
 lower ``prefill``.
 
-The slot-program builders (``slot_decode_program`` / ``slot_prefill_program``)
+The program builders (``slot_decode_program`` / ``slot_prefill_program``
+and their paged twins ``paged_decode_program`` / ``paged_prefill_program``)
 are the continuous-batching engine's executables: decode advances every
-lane of the slotted cache by one token with sampling **fused on device**
-(the host fetches one ``(max_slots,)`` int32 vector per step, not logits),
-prefill admits one bucketed prompt into a lane and seeds its slot state.
-Both are plain jitted functions; ``serve/engine.py`` AOT-compiles them
-through its :class:`~repro.core.aot.AotCache`.
+lane of the cache by one token with sampling **fused on device** (the
+host fetches one ``(max_slots,)`` int32 vector per step, not logits —
+per-slot temperature/top-k/top-p ride in state vectors), prefill admits
+one bucketed prompt — or, paged, one prefill *chunk* — into a lane and
+seeds its slot state.  All are plain jitted functions; ``serve/engine.py``
+AOT-compiles them through its :class:`~repro.core.aot.AotCache`.
 """
 from __future__ import annotations
 
@@ -76,27 +78,65 @@ def jit_decode_step(cfg: ArchConfig, mesh: Mesh, rules: ShardRules,
 # ---------------------------------------------------------------------------
 
 
-def sample_tokens(logits, key, temps, top_k: int = 0):
+def sample_tokens(logits, key, temps, top_k: int = 0, top_ks=None, top_ps=None):
     """Per-row sampling fused into the decode/prefill executables.
 
     logits: (B, V); temps: (B,) — rows with ``temp == 0`` take the argmax,
-    rows with ``temp > 0`` sample ``categorical(logits / temp)`` (after an
-    optional static top-k mask).  Returns (B,) int32.
+    rows with ``temp > 0`` sample ``categorical(logits / temp)``.  Masks,
+    all optional and applied only in the stochastic branch:
 
-    The stochastic branch (PRNG bits over the full (B, V) logits) sits
-    behind a ``lax.cond`` on ``any(temp > 0)`` so all-greedy steps pay
-    only the argmax.
+      top_k    static int — one k for every row (the engine-static knob)
+      top_ks   (B,) int32 — per-row k, ``0`` disables that row's mask
+      top_ps   (B,) f32   — per-row nucleus threshold applied after
+               temperature; ``<= 0`` or ``>= 1`` disables; the most
+               probable token always survives
+
+    Returns (B,) int32.  The stochastic branch (PRNG bits + sort-based
+    masks over the full (B, V) logits) sits behind a ``lax.cond`` on
+    ``any(temp > 0)`` so all-greedy steps pay only the argmax.
     """
     logits = logits.astype(jnp.float32)
     greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
 
     def stochastic(_):
         z = logits
+        V = z.shape[-1]
         if top_k:
             kth = jax.lax.top_k(z, top_k)[0][..., -1:]
             z = jnp.where(z < kth, NEG_INF, z)
         safe_t = jnp.where(temps > 0, temps, 1.0)[:, None]
-        sampled = jax.random.categorical(key, z / safe_t, axis=-1)
+        if top_ks is None and top_ps is None:
+            zt = z / safe_t
+        else:
+            B = z.shape[0]
+            ks = jnp.zeros(B, jnp.int32) if top_ks is None else top_ks
+            ps = jnp.zeros(B, jnp.float32) if top_ps is None else top_ps
+
+            def masked(zz):
+                # ONE argsort serves both per-row masks: the descending
+                # sort yields the k-th thresholds directly, and (positive
+                # temperature preserving order) the nucleus exclusive
+                # cumsum runs over the same permutation
+                order = jnp.argsort(-zz, axis=-1)
+                z_sorted = jnp.take_along_axis(zz, order, axis=-1)
+                kth = jnp.take_along_axis(
+                    z_sorted, jnp.clip(ks - 1, 0, V - 1)[:, None], axis=-1)
+                drop_k = (ks > 0)[:, None] & (z_sorted < kth)
+                p_sorted = jax.nn.softmax(
+                    jnp.where(drop_k, NEG_INF, z_sorted) / safe_t, axis=-1)
+                # drop tokens whose EXCLUSIVE cumulative probability
+                # already reaches p: the smallest set covering p survives,
+                # and the top token (exclusive cum = 0) always does
+                drop_p = ((ps > 0) & (ps < 1))[:, None] & (
+                    jnp.cumsum(p_sorted, axis=-1) - p_sorted >= ps[:, None])
+                drop = jnp.take_along_axis(
+                    drop_k | drop_p, jnp.argsort(order, axis=-1), axis=-1)
+                return jnp.where(drop, NEG_INF, zz / safe_t)
+
+            # all-default steps (no per-row masks anywhere) skip the sort
+            need = jnp.any(ks > 0) | jnp.any((ps > 0) & (ps < 1))
+            zt = jax.lax.cond(need, masked, lambda zz: zz / safe_t, z)
+        sampled = jax.random.categorical(key, zt, axis=-1)
         return jnp.where(temps > 0, sampled.astype(jnp.int32), greedy)
 
     return jax.lax.cond(jnp.any(temps > 0), stochastic, lambda _: greedy, None)
@@ -107,33 +147,32 @@ def sample_tokens(logits, key, temps, top_k: int = 0):
 # ---------------------------------------------------------------------------
 
 
-def slot_decode_program(cfg: ArchConfig, mesh: Mesh, rules: ShardRules, *,
-                        top_k: int = 0, eos_id: int | None = None,
-                        fused: bool = True):
-    """One decode step over every lane of the slotted cache.
+def _decode_program(decode_fn, *, eos_id: int | None, fused: bool):
+    """Wrap a cache-layout-specific ``decode_fn(params, state) ->
+    (logits, cache')`` with the shared scheduling/sampling bookkeeping.
 
     fused=True (the engine default): ``fn(params, state) -> (state', tok)``
-    — sampling, length bookkeeping, and EOS/budget eviction all happen on
-    device; ``tok`` is the only per-step host fetch.
+    — sampling (per-slot temperature/top-k/top-p vectors), length
+    bookkeeping, and EOS/budget eviction all happen on device; ``tok`` is
+    the only per-step host fetch.
 
     fused=False (benchmark baseline): ``fn(params, state) -> (state', logits)``
     — full logits round-trip to the host, which samples and writes
     ``tokens``/``active`` back before the next step (the old loop's cost).
     """
-    mod = registry.get_module(cfg)
 
     def fn(params, state):
         key, sub = jax.random.split(state["key"])
-        logits, cache = mod.decode_step(
-            cfg, mesh, rules, params, state["cache"],
-            state["tokens"], state["lengths"],
-        )
+        logits, cache = decode_fn(params, state)
         active = state["active"]
         new_len = state["lengths"] + active.astype(jnp.int32)
         if not fused:
             new_state = {**state, "cache": cache, "lengths": new_len, "key": key}
             return new_state, logits
-        tok = sample_tokens(logits, sub, state["temps"], top_k)
+        tok = sample_tokens(
+            logits, sub, state["temps"],
+            top_ks=state["top_ks"], top_ps=state["top_ps"],
+        )
         tok = jnp.where(active, tok, 0).astype(jnp.int32)
         done = active & (new_len >= state["limits"])
         if eos_id is not None:
@@ -147,20 +186,52 @@ def slot_decode_program(cfg: ArchConfig, mesh: Mesh, rules: ShardRules, *,
     return fn
 
 
+def slot_decode_program(cfg: ArchConfig, mesh: Mesh, rules: ShardRules, *,
+                        eos_id: int | None = None, fused: bool = True):
+    """One decode step over every lane of the slotted cache."""
+    mod = registry.get_module(cfg)
+
+    def decode_fn(params, state):
+        return mod.decode_step(
+            cfg, mesh, rules, params, state["cache"],
+            state["tokens"], state["lengths"],
+        )
+
+    return _decode_program(decode_fn, eos_id=eos_id, fused=fused)
+
+
+def paged_decode_program(cfg: ArchConfig, mesh: Mesh, rules: ShardRules, *,
+                         eos_id: int | None = None, fused: bool = True,
+                         impl: str = "ref"):
+    """One decode step over every lane of the paged (block-table) cache.
+    Identical bookkeeping to :func:`slot_decode_program`; only the cache
+    walk differs (``decode_step_paged`` through ``state["tables"]``)."""
+    mod = registry.get_module(cfg)
+
+    def decode_fn(params, state):
+        return mod.decode_step_paged(
+            cfg, mesh, rules, params, state["cache"],
+            state["tokens"], state["lengths"], state["tables"], impl=impl,
+        )
+
+    return _decode_program(decode_fn, eos_id=eos_id, fused=fused)
+
+
 def slot_prefill_program(cfg: ArchConfig, mesh: Mesh, rules: ShardRules, *,
-                         top_k: int = 0, eos_id: int | None = None,
-                         fused: bool = True):
+                         eos_id: int | None = None, fused: bool = True):
     """Admit one prompt into lane ``slot``: prefill its KV into the lane
     (prompt padded to a length bucket; one executable per bucket), sample
-    the first generated token, and seed the slot's scheduling state.
+    the first generated token, and seed the slot's scheduling state
+    (including its per-slot sampling params).
 
-    ``fn(params, state, prompt (1, bucket), slot, plen, limit, temp)
-    -> (state', tok (1,))`` with fused sampling, or ``-> (state', logits)``
-    when ``fused=False`` (host samples and writes tokens/active back).
+    ``fn(params, state, prompt (1, bucket), slot, plen, limit, temp,
+    top_k, top_p) -> (state', tok (1,))`` with fused sampling, or
+    ``-> (state', logits)`` when ``fused=False`` (host samples and writes
+    tokens/active back).
     """
     mod = registry.get_module(cfg)
 
-    def fn(params, state, prompt, slot, plen, limit, temp):
+    def fn(params, state, prompt, slot, plen, limit, temp, top_k, top_p):
         key, sub = jax.random.split(state["key"])
         cache, logits = mod.prefill_slot(
             cfg, mesh, rules, params, state["cache"], prompt, slot, plen,
@@ -172,16 +243,89 @@ def slot_prefill_program(cfg: ArchConfig, mesh: Mesh, rules: ShardRules, *,
             "lengths": upd(state["lengths"], plen),
             "limits": upd(state["limits"], limit),
             "temps": upd(state["temps"], temp),
+            "top_ks": upd(state["top_ks"], top_k),
+            "top_ps": upd(state["top_ps"], top_p),
             "key": key,
         }
         if not fused:
             new_state["active"] = upd(state["active"], plen < limit)
             return new_state, logits
-        tok = sample_tokens(logits, sub, jnp.reshape(temp, (1,)), top_k)
+        tok = sample_tokens(
+            logits, sub, jnp.reshape(temp, (1,)),
+            top_ks=jnp.reshape(top_k, (1,)), top_ps=jnp.reshape(top_p, (1,)),
+        )
         alive = plen < limit
         if eos_id is not None:
             alive &= tok[0] != eos_id
         new_state["tokens"] = upd(state["tokens"], tok[0])
+        new_state["active"] = upd(state["active"], alive)
+        return new_state, tok
+
+    return fn
+
+
+def paged_prefill_program(cfg: ArchConfig, mesh: Mesh, rules: ShardRules, *,
+                          eos_id: int | None = None, fused: bool = True,
+                          first: bool = True):
+    """Process ONE prefill chunk of a request in lane ``slot`` of the
+    paged cache — chunked prefill's unit of work, also the whole-prompt
+    admission when the chunk is the full bucket.
+
+    ``first=True`` (static): the chunk starts at position 0 and runs the
+    plain ``forward`` (bitwise-identical to the slotted prefill) —
+    ``start`` is ignored.  ``first=False``: continuation through
+    ``prefill_chunk_paged`` at traced offset ``start``.  One executable
+    per (chunk size, first?) pair.
+
+    ``fn(params, state, chunk (1, C), slot, start, plen, limit, temp,
+    top_k, top_p) -> (state', tok (1,))``.  Scheduling state advances
+    every chunk (``lengths`` = prefilled positions); the lane only
+    activates — and the returned token is only meaningful — on the chunk
+    that covers position ``plen - 1``.
+    """
+    mod = registry.get_module(cfg)
+
+    def fn(params, state, chunk, slot, start, plen, limit, temp, top_k, top_p):
+        key, sub = jax.random.split(state["key"])
+        table_row = state["tables"][slot]
+        if first:
+            cache, logits = mod.prefill_slot_paged(
+                cfg, mesh, rules, params, state["cache"], chunk, table_row,
+                plen,
+            )
+            start = jnp.int32(0)
+        else:
+            cache, logits = mod.prefill_chunk_paged(
+                cfg, mesh, rules, params, state["cache"], chunk, table_row,
+                start, plen,
+            )
+        C = chunk.shape[1]
+        end = jnp.minimum(start + C, plen)
+        is_last = end >= plen
+        upd = lambda a, v: a.at[slot].set(jnp.asarray(v).astype(a.dtype))
+        new_state = {
+            **state,
+            "cache": cache,
+            "lengths": upd(state["lengths"], end),
+            "limits": upd(state["limits"], limit),
+            "temps": upd(state["temps"], temp),
+            "top_ks": upd(state["top_ks"], top_k),
+            "top_ps": upd(state["top_ps"], top_p),
+            "key": key,
+        }
+        if not fused:
+            new_state["active"] = upd(
+                state["active"], is_last & (plen < limit))
+            return new_state, logits
+        tok = sample_tokens(
+            logits, sub, jnp.reshape(temp, (1,)),
+            top_ks=jnp.reshape(top_k, (1,)), top_ps=jnp.reshape(top_p, (1,)),
+        )
+        alive = is_last & (plen < limit)
+        if eos_id is not None:
+            alive &= tok[0] != eos_id
+        new_state["tokens"] = upd(
+            state["tokens"], jnp.where(is_last, tok[0], state["tokens"][slot]))
         new_state["active"] = upd(state["active"], alive)
         return new_state, tok
 

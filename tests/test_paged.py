@@ -1,0 +1,348 @@
+"""Paged KV-cache subsystem: block-allocator property tests (hypothesis /
+the _minihypothesis stand-in), block-table compaction invariants, paged
+gather/scatter plumbing, the Pallas paged-decode kernel vs its oracle,
+and THE layout-parity property — the paged engine (whole-bucket and
+chunked prefill) must match the slotted engine token-for-token under
+greedy decoding on a staggered-arrival trace."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_smoke_config
+from repro.models import registry
+from repro.serve import BlockAllocator, EngineConfig, ServeEngine, SlotTables, blocks_for
+from repro.serve.paged import NULL_BLOCK
+
+
+@pytest.fixture(scope="module")
+def setup():
+    from repro.launch.mesh import single_device_mesh
+    from repro.models.common import ShardRules
+
+    mesh = single_device_mesh()
+    rules = ShardRules.for_mesh(mesh)
+    # f32 so greedy comparisons against the slotted engine are exact
+    cfg = dataclasses.replace(
+        get_smoke_config("smollm-360m"), compute_dtype="float32")
+    params = registry.get_module(cfg).init(cfg, jax.random.PRNGKey(0))
+    return cfg, mesh, rules, params
+
+
+def _prompts(cfg, rng, lens):
+    return [rng.integers(0, cfg.vocab, n).astype(np.int32) for n in lens]
+
+
+# ---------------------------------------------------------------------------
+# Block allocator: property tests
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25)
+@given(ops=st.lists(st.integers(min_value=0, max_value=9), min_size=0,
+                    max_size=60))
+def test_allocator_roundtrip_invariants(ops):
+    """Random alloc/free walks: ids stay unique, the null block is never
+    handed out, free+in_use always partitions the pool, and freed blocks
+    become allocatable again."""
+    alloc = BlockAllocator(num_blocks=8, block_size=4)
+    held: list[int] = []
+    for op in ops:
+        if op < 6 and alloc.num_free:          # bias towards allocating
+            b = alloc.alloc()
+            assert b != NULL_BLOCK
+            assert b not in held               # no double assignment
+            held.append(b)
+        elif held:
+            alloc.free(held.pop(0))
+        alloc.check()
+        assert alloc.in_use == len(held)
+    for b in held:
+        alloc.free(b)
+    alloc.check()
+    assert alloc.num_free == alloc.capacity
+    assert alloc.peak_in_use <= alloc.capacity
+
+
+def test_allocator_exhaustion_and_errors():
+    alloc = BlockAllocator(num_blocks=4, block_size=2)
+    got = [alloc.alloc() for _ in range(3)]
+    assert sorted(got) == [1, 2, 3]
+    with pytest.raises(RuntimeError):
+        alloc.alloc()
+    with pytest.raises(ValueError):
+        alloc.free(NULL_BLOCK)
+    with pytest.raises(ValueError):
+        alloc.free(99)
+    alloc.free(got[1])
+    assert alloc.alloc() == got[1]              # lowest-id-first reuse
+    with pytest.raises(ValueError):
+        BlockAllocator(num_blocks=1, block_size=2)
+    with pytest.raises(ValueError):
+        BlockAllocator(num_blocks=4, block_size=0)
+
+
+@settings(max_examples=25)
+@given(ops=st.lists(st.integers(min_value=0, max_value=11), min_size=0,
+                    max_size=60))
+def test_slot_tables_compaction_invariants(ops):
+    """Random append/release walks over slots: every table row stays a
+    contiguous prefix of live blocks (the compaction invariant), no block
+    is mapped by two slots, and release returns exactly what was mapped."""
+    alloc = BlockAllocator(num_blocks=10, block_size=4)
+    tables = SlotTables(max_slots=3, blocks_per_slot=3)
+    for op in ops:
+        slot = op % 3
+        if op < 9:                             # bias towards appending
+            if alloc.num_free and tables.mapped(slot) < tables.blocks_per_slot:
+                tables.append(slot, alloc.alloc())
+        else:
+            before = tables.blocks(slot)
+            freed = tables.release(slot)
+            assert tuple(freed) == before
+            for b in freed:
+                alloc.free(b)
+        tables.check()
+        alloc.check()
+        total_mapped = sum(tables.mapped(s) for s in range(3))
+        assert total_mapped == alloc.in_use
+    tables.check()
+
+
+def test_slot_tables_errors():
+    tables = SlotTables(max_slots=2, blocks_per_slot=2)
+    with pytest.raises(ValueError):
+        tables.append(0, NULL_BLOCK)
+    tables.append(0, 1)
+    tables.append(0, 2)
+    with pytest.raises(ValueError):
+        tables.append(0, 3)                     # row full
+    assert tables.release(1) == []
+
+
+def test_blocks_for():
+    assert blocks_for(0, 4) == 0
+    assert blocks_for(1, 4) == 1
+    assert blocks_for(4, 4) == 1
+    assert blocks_for(5, 4) == 2
+
+
+# ---------------------------------------------------------------------------
+# Paged attention: plumbing + kernel vs oracle
+# ---------------------------------------------------------------------------
+
+
+def test_paged_write_gather_roundtrip():
+    from repro.models.attention import (
+        paged_gather, paged_write_positions, paged_write_token)
+
+    rng = np.random.default_rng(0)
+    NB, bs, Hk, D = 9, 4, 2, 8
+    pool = jnp.asarray(rng.normal(size=(NB, bs, Hk, D)), jnp.float32)
+    tables = jnp.asarray([[1, 2, 0], [4, 5, 6]], jnp.int32)
+
+    # per-lane token write lands at the logical position
+    lengths = jnp.asarray([5, 9], jnp.int32)
+    new = jnp.asarray(rng.normal(size=(2, Hk, D)), jnp.float32)
+    lanes = paged_gather(paged_write_token(pool, tables, lengths, new), tables)
+    for b in range(2):
+        np.testing.assert_array_equal(
+            np.asarray(lanes[b, int(lengths[b])]), np.asarray(new[b]))
+
+    # chunk write: valid positions land in order, invalid go to the sink
+    pos = jnp.arange(4) + 2
+    vals = jnp.asarray(rng.normal(size=(4, Hk, D)), jnp.float32)
+    out = paged_write_positions(pool, tables[0], pos, vals, valid=pos < 5)
+    lane = paged_gather(out, tables[0][None])[0]
+    np.testing.assert_array_equal(np.asarray(lane[2:5]), np.asarray(vals[:3]))
+    # the sink (block 0) rows never appear at mapped positions
+    np.testing.assert_array_equal(
+        np.asarray(lane[5]), np.asarray(pool[2, 1]))   # untouched
+
+
+@pytest.mark.parametrize("window,softcap", [(0, 0.0), (4, 0.0), (0, 5.0)])
+def test_paged_kernel_matches_ref(window, softcap):
+    from repro.kernels.paged_attention.ops import paged_attention
+    from repro.kernels.paged_attention.ref import paged_attention_ref
+
+    rng = np.random.default_rng(1)
+    B, Hk, rep, D, NB, bs, nb = 3, 2, 3, 16, 9, 4, 6
+    q = jnp.asarray(rng.normal(size=(B, Hk, rep, D)), jnp.float32)
+    kp = jnp.asarray(rng.normal(size=(NB, bs, Hk, D)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(NB, bs, Hk, D)), jnp.float32)
+    lengths = jnp.asarray([5, 0, 13], jnp.int32)
+    tables = jnp.asarray(
+        [[1, 2, 0, 0, 0, 0], [3, 0, 0, 0, 0, 0], [4, 5, 6, 7, 0, 0]],
+        jnp.int32)
+    out = paged_attention(q, kp, vp, lengths, tables,
+                          window=window, softcap=softcap, interpret=True)
+    ref = paged_attention_ref(q, kp, vp, lengths, tables,
+                              window=window, softcap=softcap)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_paged_decode_attention_matches_slotted(setup):
+    """The jnp reference path must equal the slotted ``decode_attention``
+    bitwise on equal logical inputs — the anchor of engine-level parity."""
+    from repro.models.attention import (
+        DecodeSharding, decode_attention, paged_decode_attention,
+        paged_write_positions)
+
+    cfg, mesh, rules, params = setup
+    rng = np.random.default_rng(2)
+    B, Hk, rep, D = 2, 1, 3, 16
+    S, bs = 16, 4
+    lengths = jnp.asarray([5, 9], jnp.int32)
+    tables = jnp.asarray([[1, 2, 3, 4], [5, 6, 7, 8]], jnp.int32)
+    kv = rng.normal(size=(2, B, S, Hk, D)).astype(np.float32)
+    q = jnp.asarray(rng.normal(size=(B, Hk, rep, D)), jnp.float32)
+    kn = jnp.asarray(rng.normal(size=(B, Hk, D)), jnp.float32)
+    vn = jnp.asarray(rng.normal(size=(B, Hk, D)), jnp.float32)
+
+    # slotted layout: (B, S, ...) lanes
+    k_lane, v_lane = jnp.asarray(kv[0]), jnp.asarray(kv[1])
+    dec = DecodeSharding.choose(mesh, B)
+    want, _, _ = decode_attention(
+        q, k_lane, v_lane, kn, vn, lengths, sharding=dec)
+
+    # paged layout: same logical contents scattered through the tables
+    pools = []
+    for lane in kv:
+        pool = jnp.zeros((9, bs, Hk, D), jnp.float32)
+        for b in range(B):
+            pool = paged_write_positions(
+                pool, tables[b], jnp.arange(S), jnp.asarray(lane[b]))
+        pools.append(pool)
+    got, _, _ = paged_decode_attention(
+        q, pools[0], pools[1], kn, vn, lengths, tables)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# Engine-level layout parity
+# ---------------------------------------------------------------------------
+
+
+def _staggered_tokens(cfg, mesh, rules, params, ec):
+    rng = np.random.default_rng(3)
+    lens = [5, 11, 8, 14, 4]
+    budgets = [7, 3, 5, 2, 6]
+    prompts = _prompts(cfg, rng, lens)
+    eng = ServeEngine(cfg, mesh, rules, params, ec)
+    rids = [eng.submit(p, max_new_tokens=b) for p, b in zip(prompts, budgets)]
+    eng.drain()
+    return [list(eng.completions[r].tokens) for r in rids], eng
+
+
+def test_paged_matches_slotted_staggered(setup):
+    """THE paged-correctness property: on a staggered trace (more requests
+    than lanes, heterogeneous lengths, lanes reused), the paged engine —
+    whole-bucket prefill — produces exactly the slotted engine's greedy
+    tokens, while reserving strictly less KV HBM."""
+    cfg, mesh, rules, params = setup
+    want, slotted = _staggered_tokens(
+        cfg, mesh, rules, params, EngineConfig(max_slots=2, max_len=32))
+    got, paged = _staggered_tokens(
+        cfg, mesh, rules, params,
+        EngineConfig(max_slots=2, max_len=32, kv_layout="paged",
+                     page_size=8, num_blocks=7))
+    assert got == want
+    assert paged.kv_reserved_bytes < slotted.kv_reserved_bytes
+    assert paged.stats["kv_peak_used_bytes"] <= paged.kv_reserved_bytes
+    # every block returned to the pool once the trace drained
+    assert paged.alloc.in_use == 0
+    paged.alloc.check()
+    paged.tables.check()
+
+
+def test_chunked_prefill_matches_slotted(setup):
+    """Chunked prefill (prompts admitted 4 tokens per step, interleaved
+    with decode) must still match the slotted engine's greedy tokens."""
+    cfg, mesh, rules, params = setup
+    want, _ = _staggered_tokens(
+        cfg, mesh, rules, params, EngineConfig(max_slots=2, max_len=32))
+    got, eng = _staggered_tokens(
+        cfg, mesh, rules, params,
+        EngineConfig(max_slots=2, max_len=32, kv_layout="paged",
+                     page_size=8, num_blocks=7, prefill_chunk=4))
+    assert got == want
+    # chunking really happened: more chunk calls than prompts
+    assert eng.counters["prefill_chunks"] > eng.counters["prefills"]
+
+
+def test_paged_pallas_backend_matches(setup):
+    cfg, mesh, rules, params = setup
+    want, _ = _staggered_tokens(
+        cfg, mesh, rules, params, EngineConfig(max_slots=2, max_len=32))
+    got, _ = _staggered_tokens(
+        cfg, mesh, rules, params,
+        EngineConfig(max_slots=2, max_len=32, kv_layout="paged",
+                     page_size=8, paged_attn="pallas"))
+    assert got == want
+
+
+def test_paged_block_budget_gates_admission(setup):
+    """With a pool too small to hold two worst-case requests, the second
+    waits in the queue until the first frees its blocks — and both still
+    complete correctly."""
+    cfg, mesh, rules, params = setup
+    rng = np.random.default_rng(4)
+    prompts = _prompts(cfg, rng, [8, 8])
+    eng = ServeEngine(
+        cfg, mesh, rules, params,
+        EngineConfig(max_slots=2, max_len=16, kv_layout="paged",
+                     page_size=4, num_blocks=5))   # 4 usable blocks
+    rids = [eng.submit(p, max_new_tokens=6) for p in prompts]
+    eng.step()
+    # only one lane admitted: the other's worst case (4 blocks) can't be
+    # covered alongside the first's commitment
+    assert sum(s is not None for s in eng.slots) == 1
+    assert len(eng.queue) == 1
+    eng.drain()
+    assert all(len(eng.completions[r].tokens) == 6 for r in rids)
+    assert eng.alloc.in_use == 0
+
+    # a single request whose worst case exceeds the whole pool can NEVER
+    # be admitted: submit refuses it up front
+    tiny = ServeEngine(
+        cfg, mesh, rules, params,
+        EngineConfig(max_slots=2, max_len=16, kv_layout="paged",
+                     page_size=4, num_blocks=4),   # 3 usable blocks
+        aot=eng.aot,
+    )
+    with pytest.raises(ValueError):
+        tiny.submit(np.arange(8), max_new_tokens=6)   # needs 4 blocks
+
+
+def test_paged_engine_steady_builds_flat(setup):
+    """Steady state on the paged path may not build executables — chunked
+    prefill must not reintroduce per-length compiles."""
+    cfg, mesh, rules, params = setup
+    rng = np.random.default_rng(5)
+    eng = ServeEngine(
+        cfg, mesh, rules, params,
+        EngineConfig(max_slots=2, max_len=32, kv_layout="paged",
+                     page_size=8, prefill_chunk=4))
+    eng.run(_prompts(cfg, rng, [3, 9, 14]), max_new_tokens=3)
+    builds = eng.stats["builds"]
+    # decode + first-chunk + continuation-chunk executables, nothing else
+    assert builds == 3
+    eng.run(_prompts(cfg, rng, [5, 13, 7, 2]), max_new_tokens=4)
+    assert eng.stats["builds"] == builds
+
+
+def test_paged_engine_validation(setup):
+    cfg, mesh, rules, params = setup
+    with pytest.raises(ValueError):
+        ServeEngine(cfg, mesh, rules, params,
+                    EngineConfig(kv_layout="bogus"))
+    with pytest.raises(ValueError):
+        ServeEngine(cfg, mesh, rules, params,
+                    EngineConfig(kv_layout="slotted", prefill_chunk=8))
+    with pytest.raises(ValueError):   # max_len not a multiple of page_size
+        ServeEngine(cfg, mesh, rules, params,
+                    EngineConfig(max_len=30, kv_layout="paged", page_size=8))

@@ -183,6 +183,25 @@ def test_bucket_for():
     assert prompt_buckets(100) == (16, 32, 64, 100)
 
 
+def test_bucket_degenerate_inputs():
+    """Degenerate inputs must raise loudly instead of silently producing
+    empty/garbage bucket tables."""
+    with pytest.raises(ValueError):
+        prompt_buckets(0)
+    with pytest.raises(ValueError):
+        prompt_buckets(-3)
+    with pytest.raises(ValueError):
+        prompt_buckets(64, min_bucket=0)
+    with pytest.raises(ValueError):
+        prompt_buckets(64, min_bucket=-16)
+    with pytest.raises(ValueError):
+        bucket_for(0, (16, 32))            # zero-length prompt
+    with pytest.raises(ValueError):
+        bucket_for(-1, (16, 32))
+    with pytest.raises(ValueError):
+        bucket_for(4, ())                  # no buckets configured
+
+
 def test_aot_cache_counters_train_and_serve(setup):
     """The shared AotCache counts builds/hits for both caller families."""
     # unit
@@ -273,6 +292,60 @@ def test_sample_tokens_shapes():
         assert int(hot[i]) in top4[i]
 
 
+def test_sample_tokens_per_slot_vectors():
+    """Per-slot top_ks/top_ps vectors: row 0 unmasked, row 1 top-k=1
+    (degenerates to greedy), row 2 tiny top-p (degenerates to greedy),
+    row 3 top-k=4 — each row masked independently."""
+    from repro.serve import sample_tokens
+
+    rng = np.random.default_rng(1)
+    logits = jnp.asarray(rng.normal(size=(4, 32)), jnp.float32)
+    greedy = np.argmax(np.asarray(logits), -1)
+    key = jax.random.PRNGKey(1)
+    out = sample_tokens(
+        logits, key, jnp.full(4, 3.0),
+        top_ks=jnp.asarray([0, 1, 0, 4], jnp.int32),
+        top_ps=jnp.asarray([0.0, 0.0, 1e-6, 0.0], jnp.float32),
+    )
+    assert int(out[1]) == greedy[1]
+    assert int(out[2]) == greedy[2]
+    top4 = np.argsort(np.asarray(logits), -1)[:, -4:]
+    assert int(out[3]) in top4[3]
+    # off-vectors (0s) must not perturb the unmasked sampling path
+    base = sample_tokens(logits, key, jnp.full(4, 3.0))
+    masked_off = sample_tokens(
+        logits, key, jnp.full(4, 3.0),
+        top_ks=jnp.zeros(4, jnp.int32), top_ps=jnp.zeros(4, jnp.float32))
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(masked_off))
+
+
+def test_per_request_sampling_params(setup):
+    """submit(top_k=, top_p=) land in the on-device per-slot vectors: a
+    hot-temperature lane with top_k=1 (or a tiny top_p) must reproduce the
+    greedy stream, while an unconstrained hot lane in the SAME batch
+    diverges — all through the fused sampler, no host syncs added."""
+    cfg, mesh, rules, params = setup
+    rng = np.random.default_rng(8)
+    p1, p2 = _prompts(cfg, rng, [8, 8])
+    want = generate_static(cfg, mesh, rules, params, p1[None],
+                           serve=ServeConfig(max_new_tokens=6))[0]
+
+    eng = ServeEngine(cfg, mesh, rules, params,
+                      EngineConfig(max_slots=2, max_len=32))
+    rid_k = eng.submit(p1, max_new_tokens=6, temperature=2.0, top_k=1)
+    rid_hot = eng.submit(p2, max_new_tokens=6, temperature=2.0)
+    eng.drain()
+    np.testing.assert_array_equal(
+        np.asarray(eng.completions[rid_k].tokens), np.asarray(want))
+
+    eng2 = ServeEngine(cfg, mesh, rules, params,
+                       EngineConfig(max_slots=2, max_len=32))
+    rid_p = eng2.submit(p1, max_new_tokens=6, temperature=2.0, top_p=1e-9)
+    eng2.drain()
+    np.testing.assert_array_equal(
+        np.asarray(eng2.completions[rid_p].tokens), np.asarray(want))
+
+
 def test_submit_validation(setup):
     cfg, mesh, rules, params = setup
     eng = ServeEngine(cfg, mesh, rules, params,
@@ -283,3 +356,13 @@ def test_submit_validation(setup):
         eng.submit(np.arange(4), max_new_tokens=14)     # overruns max_len
     with pytest.raises(ValueError):
         eng.submit(np.array([], np.int32))
+
+    # the host-sampling ablation applies temperature only: per-request
+    # masks must be rejected loudly, not silently dropped
+    host = ServeEngine(cfg, mesh, rules, params,
+                       EngineConfig(max_slots=1, max_len=16,
+                                    fused_sampling=False))
+    with pytest.raises(ValueError):
+        host.submit(np.arange(4), max_new_tokens=2, top_k=5)
+    with pytest.raises(ValueError):
+        host.submit(np.arange(4), max_new_tokens=2, top_p=0.9)
