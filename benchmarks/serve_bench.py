@@ -32,16 +32,39 @@ Modes:
     continuous_paged_chunked
                       paged + chunked prefill: prompts admitted in fixed
                       chunks interleaved with decode steps.
+    continuous_paged_shared
+                      paged engine on the SHARED-PREFIX trace (every
+                      prompt opens with the same 48-token system prompt)
+                      with prefix caching OFF — the comparator for the
+                      prefix mode's prefill-token savings.
+    continuous_paged_prefix
+                      same shared-prefix trace with the refcounted prefix
+                      cache ON: admissions match the published block
+                      chains and prefill only their unique suffix.
+                      ``timed.prefix_hit_rate`` and the prefill-token
+                      ratio vs continuous_paged_shared are the headline
+                      (ci.sh gates hit rate > 0 and ratio < 0.6).
+    continuous_paged_preempt
+                      paged engine with ``admission="preempt"`` and the
+                      pool squeezed to ~3/8 of worst case: lanes admit on
+                      immediate need and decode growth evicts the lowest-
+                      priority lane back to the queue (exact greedy
+                      parity still required — ``headline.preempt_greedy_
+                      parity``).
 
 Every continuous mode reports ``kv_reserved_bytes`` (cache HBM actually
 allocated) and ``kv_peak_used_bytes`` (high-water mark of positions/blocks
 holding live KV) — the reserved-vs-used gap is the over-allocation the
 paged layout removes.
 
-Each engine mode runs the trace twice: a warmup pass (arrivals collapsed
-to t=0) that compiles every executable the trace needs, then the timed
-pass.  ``steady_builds_delta`` must be 0 — the AOT dispatch cache may not
-miss in steady state (scripts/ci.sh fails otherwise).
+Each engine mode prebuilds its executables (``engine.prebuild()``) and
+then runs the trace twice: a warmup pass (arrivals collapsed to t=0),
+then the timed pass.  ``steady_builds_delta`` must be 0 for EVERY mode —
+the AOT dispatch cache may not miss in steady state (scripts/ci.sh fails
+otherwise).  Prefix hits and preemptions make the executable schedule
+timing-dependent, which is exactly why prebuild (not the warmup trace) is
+what guarantees coverage.  ``timed`` holds the timed-pass-only counter
+deltas (prefill tokens, prefix hits, preemptions, COW copies).
 
 Metrics per mode: useful tokens/s (every request's budgeted tokens /
 wall), and p50/p99 per-token latency ((last-token-time - arrival) /
@@ -91,6 +114,26 @@ def make_trace(n_requests: int, vocab: int, *, seed: int = 0,
         budget = long_budget if i % long_every == long_every - 1 \
             else int(rng.integers(2, 6))
         out.append(_Req(i, t, rng.integers(0, vocab, plen).astype(np.int32), budget))
+    return out
+
+
+def make_shared_trace(n_requests: int, vocab: int, *, seed: int = 1,
+                      rate: float = 60.0, prefix_len: int = 48,
+                      long_every: int = 4, long_budget: int = 16) -> list[_Req]:
+    """The prefix-cache workload: every prompt opens with the SAME
+    ``prefix_len``-token system prompt followed by a short unique tail —
+    the chat-serving shape where prefix caching pays (near-zero-cost
+    system prompts)."""
+    rng = np.random.default_rng(seed)
+    sysp = rng.integers(0, vocab, prefix_len).astype(np.int32)
+    t = 0.0
+    out = []
+    for i in range(n_requests):
+        t += rng.exponential(1.0 / rate)
+        tail = rng.integers(0, vocab, int(rng.integers(4, 17))).astype(np.int32)
+        budget = long_budget if i % long_every == long_every - 1 \
+            else int(rng.integers(2, 6))
+        out.append(_Req(i, t, np.concatenate([sysp, tail]), budget))
     return out
 
 
@@ -170,11 +213,16 @@ def run_static(cfg, mesh, rules, params, trace: list[_Req], *,
 # ---------------------------------------------------------------------------
 
 
+_TIMED_KEYS = ("prefill_tokens", "prefix_hit_tokens", "prefix_lookup_tokens",
+               "preemptions", "cow_copies")
+
+
 def run_continuous(cfg, mesh, rules, params, trace: list[_Req], *,
                    max_slots: int, max_len: int, fused: bool,
                    temperature: float = 0.0, kv_layout: str = "slotted",
                    page_size: int = 16, num_blocks: int | None = None,
-                   prefill_chunk: int = 0, aot=None) -> dict:
+                   prefill_chunk: int = 0, prefix_cache: bool = False,
+                   admission: str = "deficit", aot=None) -> dict:
     from repro.serve import EngineConfig, ServeEngine
 
     engine = ServeEngine(
@@ -182,9 +230,14 @@ def run_continuous(cfg, mesh, rules, params, trace: list[_Req], *,
         EngineConfig(max_slots=max_slots, max_len=max_len,
                      fused_sampling=fused, kv_layout=kv_layout,
                      page_size=page_size, num_blocks=num_blocks,
-                     prefill_chunk=prefill_chunk),
+                     prefill_chunk=prefill_chunk, prefix_cache=prefix_cache,
+                     admission=admission),
         aot=aot,
     )
+    # compile everything up front: prefix hits and preemption resumes make
+    # the executable schedule timing-dependent, so a warmup *trace* can't
+    # guarantee coverage — prebuild makes builds-flat an invariant
+    engine.prebuild()
 
     def play(timed: bool):
         i = 0
@@ -200,10 +253,15 @@ def run_continuous(cfg, mesh, rules, params, trace: list[_Req], *,
                 time.sleep(max(0.0, t0 + trace[i].arrival - time.perf_counter()))
         return t0, time.perf_counter() - t0
 
-    play(timed=False)                       # warmup: compiles every bucket
+    play(timed=False)                       # warmup (also warms the prefix cache)
     builds_warm = engine.stats["builds"]
+    warm_counters = {k: engine.counters[k] for k in _TIMED_KEYS}
     t0, wall = play(timed=True)
     builds_delta = engine.stats["builds"] - builds_warm
+    timed = {k: engine.counters[k] - warm_counters[k] for k in _TIMED_KEYS}
+    timed["prefix_hit_rate"] = (
+        timed["prefix_hit_tokens"] / timed["prefix_lookup_tokens"]
+        if timed["prefix_lookup_tokens"] else 0.0)
 
     lat_ms, tokens = [], 0
     for r in trace:
@@ -213,16 +271,17 @@ def run_continuous(cfg, mesh, rules, params, trace: list[_Req], *,
     return _summary(wall, tokens, lat_ms, steady_builds_delta=builds_delta,
                     kv_reserved_bytes=engine.kv_reserved_bytes,
                     kv_peak_used_bytes=engine.stats["kv_peak_used_bytes"],
-                    stats=engine.stats)
+                    timed=timed, stats=engine.stats)
 
 
 def check_paged_parity(cfg, mesh, rules, params, trace: list[_Req], *,
                        max_slots: int, max_len: int, page_size: int,
-                       num_blocks: int, prefill_chunk: int,
-                       aot=None) -> bool:
-    """Greedy token-for-token parity of the paged engine (both prefill
-    modes) against the slotted engine on a staggered submit-all trace.
-    Sharing the bench modes' AotCache means this compiles nothing new."""
+                       num_blocks: int, preempt_blocks: int,
+                       prefill_chunk: int, aot=None) -> dict:
+    """Greedy token-for-token parity of every paged engine mode — whole-
+    bucket, chunked, prefix-cached, and preempting (squeezed pool) —
+    against the slotted engine on a staggered submit-all trace.  Sharing
+    the bench modes' AotCache means this compiles nothing new."""
     from repro.serve import EngineConfig, ServeEngine
 
     reqs = trace[: 2 * max_slots + 1]          # lanes get reused
@@ -234,17 +293,29 @@ def check_paged_parity(cfg, mesh, rules, params, trace: list[_Req], *,
         rids = [eng.submit(p, max_new_tokens=b)
                 for p, b in zip(prompts, budgets)]
         eng.drain()
-        return [list(eng.completions[r].tokens) for r in rids]
+        return [list(eng.completions[r].tokens) for r in rids], eng
 
-    want = tokens(EngineConfig(max_slots=max_slots, max_len=max_len))
-    paged = tokens(EngineConfig(
+    want, _ = tokens(EngineConfig(max_slots=max_slots, max_len=max_len))
+    paged, _ = tokens(EngineConfig(
         max_slots=max_slots, max_len=max_len, kv_layout="paged",
         page_size=page_size, num_blocks=num_blocks))
-    chunked = tokens(EngineConfig(
+    chunked, _ = tokens(EngineConfig(
         max_slots=max_slots, max_len=max_len, kv_layout="paged",
         page_size=page_size, num_blocks=num_blocks,
         prefill_chunk=prefill_chunk))
-    return paged == want and chunked == want
+    prefix, _ = tokens(EngineConfig(
+        max_slots=max_slots, max_len=max_len, kv_layout="paged",
+        page_size=page_size, num_blocks=num_blocks, prefix_cache=True))
+    preempt, peng = tokens(EngineConfig(
+        max_slots=max_slots, max_len=max_len, kv_layout="paged",
+        page_size=page_size, num_blocks=preempt_blocks,
+        admission="preempt"))
+    return {
+        "paged_greedy_parity": paged == want and chunked == want,
+        "prefix_greedy_parity": prefix == want,
+        "preempt_greedy_parity": preempt == want,
+        "parity_check_preemptions": peng.counters["preemptions"],
+    }
 
 
 # ---------------------------------------------------------------------------
@@ -274,8 +345,10 @@ def main(argv=None) -> dict:
     n_requests = args.requests or (24 if args.smoke else 64)
     max_slots, long_budget = 8, 64
     trace = make_trace(n_requests, cfg.vocab, long_budget=long_budget)
+    shared_trace = make_shared_trace(n_requests, cfg.vocab)
     page_size = 16
-    max_len = max(r.prompt.size for r in trace) + long_budget
+    max_len = max(max(r.prompt.size + r.budget for r in trace),
+                  max(r.prompt.size + r.budget for r in shared_trace))
     max_len = -(-max_len // page_size) * page_size     # paged wants a multiple
     # paged pool: HALF the slotted worst-case reservation — the layout's
     # point is that the mixed-length trace never needs the worst case —
@@ -283,6 +356,13 @@ def main(argv=None) -> dict:
     worst_blocks = max_slots * (max_len // page_size)
     ndev = jax.device_count()
     num_blocks = -(-(worst_blocks // 2 + 1) // ndev) * ndev
+    # preempting pool: squeezed to just above the largest single request's
+    # worst case (the admission floor), so concurrent lanes constantly
+    # overcommit it — admission stops gating on worst-case commitments and
+    # decode growth preempts instead of waiting
+    max_wc = max(-(-(r.prompt.size + r.budget - 1) // page_size)
+                 for r in trace)
+    preempt_blocks = -(-(max_wc + 2) // ndev) * ndev
     prefill_chunk = 2 * page_size
 
     report = {
@@ -298,7 +378,9 @@ def main(argv=None) -> dict:
                 "max_len": max_len, "long_budget": long_budget,
                 "useful_tokens": sum(r.budget for r in trace),
                 "page_size": page_size, "num_blocks": num_blocks,
+                "preempt_blocks": preempt_blocks,
                 "prefill_chunk": prefill_chunk,
+                "shared_prefix_len": 48,
             },
         },
         "modes": {},
@@ -325,9 +407,31 @@ def main(argv=None) -> dict:
         max_len=max_len, fused=True, kv_layout="paged",
         page_size=page_size, num_blocks=num_blocks,
         prefill_chunk=prefill_chunk, aot=aot)
+    # the shared-prefix pair: identical trace, prefix cache off vs on —
+    # the prefill-token delta is the work the cache removes
+    report["modes"]["continuous_paged_shared"] = run_continuous(
+        cfg, mesh, rules, params, shared_trace, max_slots=max_slots,
+        max_len=max_len, fused=True, kv_layout="paged",
+        page_size=page_size, num_blocks=num_blocks, aot=aot)
+    report["modes"]["continuous_paged_prefix"] = run_continuous(
+        cfg, mesh, rules, params, shared_trace, max_slots=max_slots,
+        max_len=max_len, fused=True, kv_layout="paged",
+        page_size=page_size, num_blocks=num_blocks, prefix_cache=True,
+        aot=aot)
+    report["modes"]["continuous_paged_preempt"] = run_continuous(
+        cfg, mesh, rules, params, trace, max_slots=max_slots,
+        max_len=max_len, fused=True, kv_layout="paged",
+        page_size=page_size, num_blocks=preempt_blocks,
+        admission="preempt", aot=aot)
 
     st, cf = report["modes"]["static_batch"], report["modes"]["continuous_fused"]
     pg = report["modes"]["continuous_paged"]
+    px = report["modes"]["continuous_paged_prefix"]
+    shared = report["modes"]["continuous_paged_shared"]
+    parity = check_paged_parity(
+        cfg, mesh, rules, params, trace, max_slots=max_slots,
+        max_len=max_len, page_size=page_size, num_blocks=num_blocks,
+        preempt_blocks=preempt_blocks, prefill_chunk=prefill_chunk, aot=aot)
     report["headline"] = {
         "speedup_vs_static": cf["tokens_per_s"] / st["tokens_per_s"],
         "p99_ratio_vs_static": cf["p99_ms_per_token"] / st["p99_ms_per_token"],
@@ -338,12 +442,22 @@ def main(argv=None) -> dict:
         "paged_steady_builds_delta": max(
             pg["steady_builds_delta"],
             report["modes"]["continuous_paged_chunked"]["steady_builds_delta"]),
+        # ALL engine modes must dispatch purely from cache after warmup
+        "all_steady_builds_delta": max(
+            row["steady_builds_delta"]
+            for name, row in report["modes"].items()
+            if name != "static_batch"),
         "kv_reserved_ratio_paged_vs_slotted": (
             pg["kv_reserved_bytes"] / cf["kv_reserved_bytes"]),
-        "paged_greedy_parity": check_paged_parity(
-            cfg, mesh, rules, params, trace, max_slots=max_slots,
-            max_len=max_len, page_size=page_size, num_blocks=num_blocks,
-            prefill_chunk=prefill_chunk, aot=aot),
+        # prefix caching: timed-pass hit rate and the fraction of prefill
+        # tokens still computed vs the no-cache engine on the same trace
+        "prefix_cache_hit_rate": px["timed"]["prefix_hit_rate"],
+        "prefix_prefill_token_ratio": (
+            px["timed"]["prefill_tokens"]
+            / max(shared["timed"]["prefill_tokens"], 1)),
+        "preemptions_timed": (
+            report["modes"]["continuous_paged_preempt"]["timed"]["preemptions"]),
+        **parity,
     }
     text = json.dumps(report, indent=2)
     print(text)

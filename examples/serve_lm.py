@@ -29,6 +29,7 @@ def run_paged(cfg, mesh, rules, params, prompts, args):
         EngineConfig(
             max_slots=args.batch, max_len=max_len, kv_layout="paged",
             page_size=args.page_size, prefill_chunk=args.prefill_chunk,
+            prefix_cache=args.prefix_cache, admission=args.admission,
         ),
     )
     out = engine.run(list(prompts), max_new_tokens=args.new_tokens,
@@ -37,6 +38,12 @@ def run_paged(cfg, mesh, rules, params, prompts, args):
     print(f"kv[paged]: {s['kv_peak_used_bytes']} bytes peak used / "
           f"{s['kv_reserved_bytes']} reserved  "
           f"(chunks={s['prefill_chunks']}, builds={s['builds']})")
+    if args.prefix_cache:
+        print(f"prefix cache: {s['prefix_hit_tokens']}/"
+              f"{s['prefix_lookup_tokens']} prompt tokens served from cache "
+              f"({s['cow_copies']} COW copies)")
+    if args.admission == "preempt":
+        print(f"preemptions: {s['preemptions']} (resumed {s['resumed']})")
     return np.stack(out, axis=0)
 
 
@@ -52,6 +59,11 @@ def main():
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--prefill-chunk", type=int, default=0,
                     help=">0: chunked prefill (paged layout only)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="refcounted shared-prefix block reuse (paged only)")
+    ap.add_argument("--admission", choices=("deficit", "preempt"),
+                    default="deficit",
+                    help="paged admission policy (preempt: evict-and-requeue)")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch)

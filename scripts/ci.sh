@@ -12,8 +12,10 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-echo "== tier-1 suite (8 forced host devices) =="
-XLA_FLAGS="--xla_force_host_platform_device_count=8" python -m pytest -x -q "$@"
+echo "== tier-1 suite (8 forced host devices; 200-episode engine fuzz) =="
+XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+  ENGINE_FUZZ_EPISODES="${ENGINE_FUZZ_EPISODES:-200}" \
+  python -m pytest -x -q "$@"
 
 echo "== overlap bench (smoke) =="
 python benchmarks/overlap_bench.py --smoke --json BENCH_overlap.json >/dev/null
@@ -46,18 +48,38 @@ h = rep["headline"]
 print(f"  speedup_vs_static {h['speedup_vs_static']:.2f}x  "
       f"p99_ratio {h['p99_ratio_vs_static']:.2f}  "
       f"steady_builds_delta {h['steady_builds_delta']}  "
-      f"paged_builds_delta {h['paged_steady_builds_delta']}  "
-      f"kv_ratio {h['kv_reserved_ratio_paged_vs_slotted']:.2f}  "
-      f"paged_parity {h['paged_greedy_parity']}")
+      f"all_builds_delta {h['all_steady_builds_delta']}  "
+      f"kv_ratio {h['kv_reserved_ratio_paged_vs_slotted']:.2f}")
+print(f"  paged_parity {h['paged_greedy_parity']}  "
+      f"prefix_parity {h['prefix_greedy_parity']}  "
+      f"preempt_parity {h['preempt_greedy_parity']}  "
+      f"prefix_hit_rate {h['prefix_cache_hit_rate']:.2f}  "
+      f"prefill_ratio {h['prefix_prefill_token_ratio']:.2f}  "
+      f"preemptions {h['preemptions_timed']}+{h['parity_check_preemptions']}")
 if h["steady_builds_delta"] != 0:
     sys.exit("FAIL: serve decode built executables after warmup "
              "(AOT dispatch cache regression)")
-if h["paged_steady_builds_delta"] != 0:
-    sys.exit("FAIL: paged/chunked serving built executables after warmup "
-             "(chunked prefill must not reintroduce per-length rebuilds)")
+if h["all_steady_builds_delta"] != 0:
+    sys.exit("FAIL: an engine mode built executables after warmup — "
+             "prefix/preempt scheduling must dispatch purely from the "
+             "prebuilt AOT cache")
 if not h["paged_greedy_parity"]:
     sys.exit("FAIL: paged engine diverged from the slotted engine under "
              "greedy decoding")
+if not h["prefix_greedy_parity"]:
+    sys.exit("FAIL: prefix-cached engine diverged from the slotted engine "
+             "under greedy decoding")
+if not h["preempt_greedy_parity"]:
+    sys.exit("FAIL: preempting engine diverged from the slotted engine "
+             "under greedy decoding")
+if h["prefix_cache_hit_rate"] <= 0:
+    sys.exit("FAIL: shared-prefix workload produced no prefix-cache hits")
+if h["prefix_prefill_token_ratio"] >= 0.6:
+    sys.exit("FAIL: prefix caching computed >= 0.6x the no-cache prefill "
+             "tokens on the shared-prefix workload")
+if h["preemptions_timed"] + h["parity_check_preemptions"] <= 0:
+    sys.exit("FAIL: the preempt mode never preempted — its parity gate is "
+             "vacuous (pool sizing no longer squeezes the lanes)")
 paged = rep["modes"]["continuous_paged"]
 slotted = rep["modes"]["continuous_fused"]
 if paged["kv_reserved_bytes"] >= slotted["kv_reserved_bytes"]:

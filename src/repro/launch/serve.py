@@ -56,6 +56,8 @@ def run_stream(cfg, mesh, rules, params, args, rng):
             page_size=args.page_size,
             num_blocks=args.num_blocks,
             prefill_chunk=args.prefill_chunk,
+            prefix_cache=args.prefix_cache,
+            admission=args.admission,
         ),
     )
     arrivals = np.cumsum(rng.exponential(1.0 / args.rate, args.requests))
@@ -89,6 +91,12 @@ def run_stream(cfg, mesh, rules, params, args, rng):
     print(f"-- kv[{args.kv_layout}]: "
           f"{engine.stats['kv_peak_used_bytes'] / 2**20:.2f} MiB peak used / "
           f"{engine.kv_reserved_bytes / 2**20:.2f} MiB reserved")
+    if args.kv_layout == "paged":
+        s = engine.stats
+        print(f"-- prefix cache: hit_rate {s['prefix_hit_rate']:.2f} "
+              f"({s['prefix_hit_tokens']}/{s['prefix_lookup_tokens']} tokens, "
+              f"{s['cow_copies']} COW)  preemptions {s['preemptions']} "
+              f"(resumed {s['resumed']})")
     print(f"-- stats: {engine.stats}")
 
 
@@ -120,6 +128,15 @@ def main():
     ap.add_argument("--prefill-chunk", type=int, default=0,
                     help=">0: admit prompts in chunks of this many tokens "
                          "interleaved with decode (paged only)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="refcounted shared-prefix block reuse (paged): "
+                         "repeated prompt prefixes skip prefill")
+    ap.add_argument("--admission", choices=("deficit", "preempt"),
+                    default="deficit",
+                    help="deficit: gate admission on worst-case block "
+                         "commitments; preempt: run the pool near full and "
+                         "evict-and-requeue the lowest-priority lane when "
+                         "decode growth finds it empty (paged only)")
     args = ap.parse_args()
 
     mesh = {"production": make_production_mesh,

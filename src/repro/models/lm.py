@@ -398,6 +398,25 @@ def paged_cache_pspec(cfg: ArchConfig, mesh: Mesh, num_blocks: int = 0):
     return {"k": spec, "v": spec}
 
 
+def copy_paged_block(cfg: ArchConfig, cache, src, dst):
+    """Copy physical pool block ``src`` to ``dst`` in every cache leaf —
+    the copy-on-write step of prefix caching: when a new request's prompt
+    fully covers a shared block but must rewrite its tail position (the
+    sampling position is always recomputed), the engine clones the block
+    and hands the lane the private copy.
+
+    Leaves are (L[,2], NB, bs, Hk, dh); the block axis is ``ndim - 4``.
+    ``src``/``dst`` are traced scalars so ONE executable serves every
+    copy.
+    """
+    def cp(c):
+        axis = c.ndim - 4
+        row = jax.lax.dynamic_index_in_dim(c, src, axis, keepdims=False)
+        return jax.lax.dynamic_update_index_in_dim(c, row, dst, axis)
+
+    return {name: cp(c) for name, c in cache.items()}
+
+
 def prefill(cfg: ArchConfig, mesh: Mesh, rules: ShardRules, params, tokens,
             img_embeds=None, *, max_len: int | None = None):
     """Returns (cache {k,v}, last-token logits (B, V))."""

@@ -1,4 +1,10 @@
-from .cache import bucket_for, make_slot_state, prompt_buckets, slot_state_specs
+from .cache import (
+    KeyMirror,
+    bucket_for,
+    make_slot_state,
+    prompt_buckets,
+    slot_state_specs,
+)
 from .engine import Completion, EngineConfig, ServeEngine
 from .loop import ServeConfig, generate, generate_static
 from .paged import (
@@ -7,10 +13,12 @@ from .paged import (
     blocks_for,
     make_paged_state,
     paged_state_specs,
+    prefix_keys,
 )
 from .step import (
     jit_decode_step,
     jit_prefill,
+    paged_copy_program,
     paged_decode_program,
     paged_prefill_program,
     sample_tokens,
@@ -21,10 +29,11 @@ from .step import (
 __all__ = [
     "Completion", "EngineConfig", "ServeEngine",
     "ServeConfig", "generate", "generate_static",
-    "bucket_for", "make_slot_state", "prompt_buckets", "slot_state_specs",
+    "KeyMirror", "bucket_for", "make_slot_state", "prompt_buckets",
+    "slot_state_specs",
     "BlockAllocator", "SlotTables", "blocks_for", "make_paged_state",
-    "paged_state_specs",
+    "paged_state_specs", "prefix_keys",
     "jit_decode_step", "jit_prefill", "sample_tokens",
     "slot_decode_program", "slot_prefill_program",
-    "paged_decode_program", "paged_prefill_program",
+    "paged_copy_program", "paged_decode_program", "paged_prefill_program",
 ]

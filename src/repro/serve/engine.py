@@ -49,6 +49,7 @@ whenever a row changes.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import time
 from collections import deque
 from typing import Any, Callable, Sequence
@@ -63,7 +64,14 @@ from repro.core.aot import AotCache
 from repro.models import registry
 from repro.models.common import ShardRules
 from repro.train.step import shardings_for
-from .cache import bucket_for, make_slot_state, prompt_buckets, slot_state_specs, state_sds
+from .cache import (
+    KeyMirror,
+    bucket_for,
+    make_slot_state,
+    prompt_buckets,
+    slot_state_specs,
+    state_sds,
+)
 from .paged import (
     BlockAllocator,
     SlotTables,
@@ -71,10 +79,13 @@ from .paged import (
     cache_nbytes,
     make_paged_state,
     paged_state_specs,
+    prefix_keys,
 )
 from .step import (
+    paged_copy_program,
     paged_decode_program,
     paged_prefill_program,
+    sample_tokens,
     slot_decode_program,
     slot_prefill_program,
 )
@@ -105,6 +116,16 @@ class EngineConfig:
     # bucketed prefill)
     prefill_chunk: int = 0
     paged_attn: str = "ref"       # paged decode backend: "ref" | "pallas"
+    # paged only: refcounted shared-prefix block reuse — submit matches a
+    # new prompt against the published-block index and only prefills the
+    # unmatched suffix (COW on the partial tail block)
+    prefix_cache: bool = False
+    # "deficit": admission gated on worst-case block commitments (decode
+    # growth can never exhaust the pool).  "preempt": admit on immediate
+    # need only; when growth finds the pool empty, evict the lowest-
+    # priority lane back to the queue (tokens + sampling state requeued,
+    # table nulled, refs dropped) — the pool runs near full
+    admission: str = "deficit"
 
 
 @dataclasses.dataclass
@@ -119,6 +140,11 @@ class _Slot:
     chunk: int                    # prefill chunk size (== bucket when whole)
     prefilled: int = 0            # prompt positions prefilled so far
     generated: int = 0
+    pub_upto: int = 0             # leading blocks already published/matched
+    emit_from: int = 0            # first k generated tokens are a replay
+    #                               of already-emitted output: not re-appended
+    hasher: Any = None            # incremental chain hash (prefix_keys
+    hashed: int = 0               # equivalent); blocks digested so far
 
 
 @dataclasses.dataclass
@@ -141,6 +167,24 @@ class _Pending:
     top_k: int
     top_p: float
     submit_time: float
+    # preempt-and-requeue: a preempted lane requeues with its ORIGINAL
+    # prompt plus the tokens already emitted (``replay``).  On
+    # re-admission the prompt prefills as usual (prefill-origin KV is
+    # bitwise chunk-invariant) and the generated tokens REGENERATE through
+    # the decode path — decode-origin positions are only ever recomputed
+    # by decode, never by prefill, so the resumed stream is bitwise the
+    # original on any mesh/dtype (re-prefilling them is NOT bitwise-stable
+    # under sharded bf16 reductions).  Replayed tokens are suppressed from
+    # the output; a prefix-cache hit on the lane's own published chain
+    # skips the replay entirely (restored mid-decode).  ``limit`` pins the
+    # original budget; the live Completion is kept.
+    resume: bool = False
+    limit: int = 0
+    replay: tuple[int, ...] = ()
+    # set when the lane preempted ITSELF growing to this many blocks:
+    # don't re-admit until the pool can plausibly cover that need, else
+    # the same prefill chunks recompute every step until someone frees
+    min_free: int = 0
 
 
 class ServeEngine:
@@ -165,6 +209,12 @@ class ServeEngine:
         self.paged = engine.kv_layout == "paged"
         if not self.paged and engine.prefill_chunk:
             raise ValueError("prefill_chunk requires kv_layout='paged'")
+        if engine.admission not in ("deficit", "preempt"):
+            raise ValueError(f"unknown admission {engine.admission!r}")
+        if not self.paged and engine.prefix_cache:
+            raise ValueError("prefix_cache requires kv_layout='paged'")
+        if not self.paged and engine.admission != "deficit":
+            raise ValueError("admission='preempt' requires kv_layout='paged'")
         if self.paged and not registry.supports_paged_serving(cfg):
             raise ValueError(
                 f"family {cfg.family!r} does not support paged serving")
@@ -173,7 +223,10 @@ class ServeEngine:
         self.buckets = tuple(engine.prefill_buckets or prompt_buckets(engine.max_len))
         if max(self.buckets) > engine.max_len:
             raise ValueError("prefill bucket exceeds max_len")
-        self.aot = aot or AotCache("serve")
+        # NOT ``aot or ...``: AotCache defines __len__, so a freshly made
+        # (empty) shared cache is falsy and would be silently replaced —
+        # every caller would then compile privately
+        self.aot = aot if aot is not None else AotCache("serve")
         self.clock = clock
 
         self._p_sh = shardings_for(mesh, registry.param_pspecs(cfg, rules))
@@ -224,13 +277,19 @@ class ServeEngine:
         self.counters = {
             "prefills": 0, "prefill_chunks": 0, "decode_steps": 0,
             "admitted": 0, "evicted": 0, "dead_slot_steps": 0,
-            "kv_peak_used_bytes": 0,
+            "kv_peak_used_bytes": 0, "prefill_tokens": 0,
+            "prefix_lookup_tokens": 0, "prefix_hit_tokens": 0,
+            "cow_copies": 0, "preemptions": 0, "resumed": 0,
+            "replayed_tokens": 0,
         }
         self._next_rid = 0
-        self._host_rng = np.random.default_rng(engine.seed)
-        # host mirrors only needed when sampling is not fused
+        # host-sampling mode draws from a mirror of the device key stream
+        # so it samples the same tokens as the fused path at equal seed
+        self._key_mirror = KeyMirror(engine.seed)
         self._tok_mirror = np.zeros(engine.max_slots, np.int32)
         self._active_mirror = np.zeros(engine.max_slots, bool)
+        self._active_dirty = False
+        self._sched_dirty = False
 
     # ------------------------------------------------------------------
     # Executables (AOT via the shared cache)
@@ -308,6 +367,45 @@ class ServeEngine:
 
         return self.aot.get(key, build)
 
+    def _copy_exe(self):
+        """Block-copy executable for the prefix cache's COW tail."""
+        key = ("paged_copy",) + self._sampler_key()
+
+        def build():
+            fn = paged_copy_program(self.cfg, self.mesh, self.rules)
+            i32 = jax.ShapeDtypeStruct((), jnp.int32)
+            jitted = jax.jit(
+                fn,
+                in_shardings=(self._state_sh, self._rep, self._rep),
+                out_shardings=self._state_sh,
+                donate_argnums=(0,),
+            )
+            return jitted.lower(self._state_sds, i32, i32).compile()
+
+        return self.aot.get(key, build)
+
+    def prebuild(self) -> None:
+        """Compile every executable this engine can ever dispatch.
+
+        Prefix hits and preemption resumes make the prefill schedule
+        timing-dependent (a prompt that hit the cache in warmup may miss
+        in the timed pass and vice versa), so a warmup *trace* no longer
+        guarantees coverage — the bench calls this instead to keep
+        ``steady_builds_delta == 0`` an invariant rather than a race.
+        """
+        e = self.econ
+        self._decode_exe()
+        chunks = (e.prefill_chunk,) if (self.paged and e.prefill_chunk) \
+            else self.buckets
+        for C in chunks:
+            self._prefill_exe(C, first=True)
+            # continuation executables: chunked prefill always, and the
+            # suffix prefill of any prefix-cache hit
+            if self.paged and (e.prefill_chunk or e.prefix_cache):
+                self._prefill_exe(C, first=False)
+        if self.paged and e.prefix_cache:
+            self._copy_exe()
+
     # ------------------------------------------------------------------
     # Request lifecycle
     # ------------------------------------------------------------------
@@ -337,11 +435,6 @@ class ServeEngine:
                 )
         eff_k = int(self.econ.top_k if top_k is None else top_k)
         eff_p = float(self.econ.top_p if top_p is None else top_p)
-        if not self.econ.fused_sampling and (eff_k > 0 or 0.0 < eff_p < 1.0):
-            raise ValueError(
-                "top_k/top_p require fused_sampling=True (the host-sampling "
-                "ablation applies temperature only)"
-            )
         if rid is None:
             rid = self._next_rid
         self._next_rid = max(self._next_rid, rid) + 1
@@ -363,18 +456,96 @@ class ServeEngine:
     def _can_admit(self, req: _Pending) -> bool:
         if not self.paged:
             return True
-        wc = blocks_for(req.prompt.size + req.max_new_tokens - 1,
-                        self.econ.page_size)
+        bs = self.econ.page_size
+        if self.econ.admission == "preempt":
+            # immediate need only: blocks for the first prefill chunk (a
+            # prefix hit can only shrink it).  Growth past that preempts.
+            C = self.econ.prefill_chunk or bucket_for(
+                req.prompt.size, self.buckets)
+            need = max(blocks_for(min(C, int(req.prompt.size)), bs),
+                       req.min_free)
+            return self.alloc.available >= need
+        limit = req.limit if req.resume else \
+            req.prompt.size + req.max_new_tokens - 1
+        wc = blocks_for(limit, bs)
         # conservative: only admit when the pool can still cover every
         # live lane's worst case plus this one — decode growth can then
-        # never find the free list empty
-        return self.alloc.num_free - self._deficit >= wc
+        # never find the pool empty (cached blocks count: alloc reclaims
+        # them, and a prefix hit that revives one also releases a unit of
+        # commitment)
+        return self.alloc.available - self._deficit >= wc
 
-    def _map_blocks(self, slot: int, need: int) -> None:
+    def _pick_victim(self) -> int | None:
+        """Lowest-priority occupied lane (highest rid = last arrived)."""
+        best = None
+        for i, s in enumerate(self.slots):
+            if s is not None and (best is None or
+                                  s.rid > self.slots[best].rid):
+                best = i
+        return best
+
+    def _alloc_block(self, slot: int) -> int | None:
+        """One block for ``slot``; under ``admission='preempt'`` an empty
+        pool evicts the lowest-priority lane (possibly ``slot`` itself —
+        then returns None and the caller abandons the lane's step)."""
+        while True:
+            try:
+                return self.alloc.alloc()
+            except RuntimeError:
+                if self.econ.admission != "preempt":
+                    raise
+                victim = self._pick_victim()
+                if victim is None:
+                    raise
+                self._preempt(victim)
+                if victim == slot:
+                    return None
+
+    def _map_blocks(self, slot: int, need: int) -> bool:
+        """Grow ``slot``'s table to ``need`` blocks.  False iff the lane
+        itself was preempted to find room (it no longer exists)."""
         while self.tables.mapped(slot) < need:
-            self.tables.append(slot, self.alloc.alloc())
-            self._deficit -= 1
+            b = self._alloc_block(slot)
+            if b is None:
+                return False
+            self.tables.append(slot, b)
+            if self.econ.admission == "deficit":
+                self._deficit -= 1
             self._tables_dirty = True
+        return True
+
+    def _preempt(self, slot: int) -> None:
+        """Evict a live lane back to the host queue: its emitted tokens
+        and sampling state requeue as a resume request, the table row
+        nulls, and every block reference drops.  The resume replays the
+        stream bitwise (see :class:`_Pending`)."""
+        s = self.slots[slot]
+        comp = self.live[s.rid]
+        # resumes go to the FRONT: rid order (FCFS priority) is preserved
+        # because successive victims within a step have decreasing rids.
+        # min_free damps re-admission until the pool can cover one block
+        # MORE than the lane held — instantly re-admitting the victim into
+        # the slot it just vacated would recompute the same prefill chunks
+        # every step until the evictor actually frees something
+        wc = blocks_for(s.limit, self.econ.page_size)
+        self.queue.appendleft(_Pending(
+            s.rid, s.prompt, comp.max_new_tokens, s.temperature, s.top_k,
+            s.top_p, comp.submit_time, resume=True, limit=s.limit,
+            replay=tuple(comp.tokens),
+            # capped at the lane's worst case: mapped+1 on a fully-grown
+            # victim would otherwise exceed what an empty pool can offer
+            min_free=min(self.tables.mapped(slot) + 1, wc)))
+        self.slots[slot] = None
+        self._active_mirror[slot] = False
+        self._active_dirty = True
+        # preemption exists only under admission="preempt", which keeps no
+        # deficit ledger — _slot_wc is cleared purely for hygiene
+        assert self.econ.admission == "preempt"
+        self._slot_wc[slot] = 0
+        for b in self.tables.release(slot):
+            self.alloc.free(b)
+        self._tables_dirty = True
+        self.counters["preemptions"] += 1
 
     def _push_tables(self) -> None:
         """Re-push the host block-table mirror as the device state leaf.
@@ -385,34 +556,206 @@ class ServeEngine:
             self.state["tables"] = self._put(self.tables.table, jnp.int32)
             self._tables_dirty = False
 
+    def _push_active(self) -> None:
+        """Preemption clears a lane's ``active`` bit host-side (the device
+        can't know) — re-push the mirror before the next decode so the
+        evicted lane stops advancing."""
+        if self._active_dirty:
+            self.state["active"] = self._put(self._active_mirror, jnp.bool_)
+            self._active_dirty = False
+
+    def _push_sched(self) -> None:
+        """Push the whole host scheduling mirror to the device — the
+        lane-restore path seeds a mid-decode lane without running any
+        executable.  Values for free/mid-prefill lanes are don't-cares
+        (inactive lanes are masked; prefill re-seeds its own slot), so
+        rebuilding every vector from ``self.slots`` is exact."""
+        n = self.econ.max_slots
+        lengths = np.zeros(n, np.int32)
+        limits = np.zeros(n, np.int32)
+        temps = np.zeros(n, np.float32)
+        tks = np.zeros(n, np.int32)
+        tps = np.zeros(n, np.float32)
+        for i, s in enumerate(self.slots):
+            if s is None:
+                continue
+            lengths[i] = s.prefilled if s.generated == 0 \
+                else s.plen + s.generated - 1
+            limits[i] = s.limit
+            temps[i] = s.temperature
+            tks[i] = s.top_k
+            tps[i] = s.top_p
+        self.state["tokens"] = self._put(self._tok_mirror, jnp.int32)
+        self.state["lengths"] = self._put(lengths, jnp.int32)
+        self.state["limits"] = self._put(limits, jnp.int32)
+        self.state["temps"] = self._put(temps, jnp.float32)
+        self.state["top_ks"] = self._put(tks, jnp.int32)
+        self.state["top_ps"] = self._put(tps, jnp.float32)
+        self.state["active"] = self._put(self._active_mirror, jnp.bool_)
+        self._active_dirty = False
+
+    def _try_restore(self, slot: int, req: _Pending) -> bool:
+        """Resume fast path: if the prefix cache still holds a block chain
+        covering the whole prompt (typically the lane's own published
+        blocks), share it and restore the lane MID-DECODE — no prefill, no
+        replay, and bitwise-original KV for every covered position.  The
+        device sees the restored lane through a scheduling-vector push."""
+        k = len(req.replay)
+        plen = int(req.prompt.size)
+        bs = self.econ.page_size
+        seq = np.concatenate([req.prompt, np.asarray(req.replay, np.int32)])
+        written = seq[: plen + k - 1]        # positions whose KV existed
+        chain = self.alloc.lookup(prefix_keys(written, bs))
+        matched = len(chain) * bs
+        if matched < plen:
+            # prefill + decode-replay path; _match_prefix counts this
+            # admission's lookup so the hit rate stays per-admission
+            return False
+        for b in chain:
+            self.tables.append(slot, self.alloc.share(b))
+            if self.econ.admission == "deficit":
+                self._deficit -= 1
+            self._tables_dirty = True
+        s = self.slots[slot]
+        s.prefilled = plen
+        s.generated = matched - plen + 1     # pending input at pos ``matched``
+        s.pub_upto = len(chain)
+        self.counters["prefix_lookup_tokens"] += int(written.size)
+        self.counters["prefix_hit_tokens"] += matched
+        self._tok_mirror[slot] = int(seq[matched])
+        self._active_mirror[slot] = True
+        self._sched_dirty = True             # pushed before the next decode
+        return True
+
     # -- admission ------------------------------------------------------
+    def _match_prefix(self, slot: int, prompt: np.ndarray) -> int:
+        """Prefix-cache lookup for a fresh lane: share the longest cached
+        block chain, COW the tail block when the match would cover the
+        whole prompt (the sampling position is always recomputed), and
+        map everything into the lane's table.  Returns the number of
+        prompt positions the cache already holds (the prefill start)."""
+        bs = self.econ.page_size
+        plen = int(prompt.size)
+        self.counters["prefix_lookup_tokens"] += plen
+        chain = self.alloc.lookup(prefix_keys(prompt, bs))
+        if not chain:
+            return 0
+        # cap the match at plen - 1: the last prompt position is always
+        # recomputed (its forward pass produces the first sampled token)
+        cow = len(chain) * bs >= plen
+        shared = chain[:-1] if cow else chain
+        for b in shared:
+            self.tables.append(slot, self.alloc.share(b))
+            self._tables_dirty = True
+            if self.econ.admission == "deficit":
+                self._deficit -= 1
+        if cow:
+            src = chain[-1]
+            dst = self._alloc_block(slot)
+            if dst is None:       # preempt mode evicted the lane itself
+                return -1
+            self.state = self._copy_exe()(
+                self.state, self._put(src, jnp.int32),
+                self._put(dst, jnp.int32))
+            self.tables.append(slot, dst)
+            if self.econ.admission == "deficit":
+                self._deficit -= 1
+            self._tables_dirty = True
+            self.counters["cow_copies"] += 1
+        matched = len(shared) * bs + (bs if cow else 0)
+        start = plen - 1 if cow else matched
+        self.counters["prefix_hit_tokens"] += start
+        self.slots[slot].pub_upto = len(chain)
+        return start
+
     def _admit(self, req: _Pending, slot: int) -> None:
         plen = int(req.prompt.size)
-        limit = plen + req.max_new_tokens - 1
-        if self.paged and self.econ.prefill_chunk:
-            chunk = self.econ.prefill_chunk
+        limit = req.limit if req.resume else plen + req.max_new_tokens - 1
+        if not req.resume:
+            self.live[req.rid] = Completion(
+                rid=req.rid, prompt_len=plen,
+                max_new_tokens=req.max_new_tokens,
+                tokens=[], token_times=[], submit_time=req.submit_time,
+                finish_time=0.0,
+            )
+            self.counters["admitted"] += 1
         else:
-            chunk = bucket_for(plen, self.buckets)
-        self.live[req.rid] = Completion(
-            rid=req.rid, prompt_len=plen, max_new_tokens=req.max_new_tokens,
-            tokens=[], token_times=[], submit_time=req.submit_time,
-            finish_time=0.0,
-        )
+            self.counters["resumed"] += 1
         self.slots[slot] = _Slot(
             req.rid, plen, limit, req.temperature, req.top_k, req.top_p,
-            req.prompt, chunk,
+            req.prompt, 0, emit_from=len(req.replay),
         )
         if self.paged:
-            wc = blocks_for(limit, self.econ.page_size)
-            self._slot_wc[slot] = wc
-            self._deficit += wc
-        self.counters["admitted"] += 1
+            if self.econ.admission == "deficit":
+                wc = blocks_for(limit, self.econ.page_size)
+                self._slot_wc[slot] = wc
+                self._deficit += wc
+            if self.econ.prefix_cache:
+                if req.resume and req.replay and self._try_restore(slot, req):
+                    return            # restored mid-decode: nothing to prefill
+                start = self._match_prefix(slot, req.prompt)
+                if start < 0:
+                    return            # the lane preempted itself mapping COW
+                self.slots[slot].prefilled = start
+        s = self.slots[slot]
+        if self.paged and self.econ.prefill_chunk:
+            s.chunk = self.econ.prefill_chunk
+        else:
+            # a prefix hit prefills only the suffix: bucket THAT length so
+            # short suffixes of long prompts reuse the small executables
+            s.chunk = bucket_for(plen - s.prefilled, self.buckets)
         self._prefill_next_chunk(slot)
+
+    def _publish(self, slot: int) -> None:
+        """Index every newly-full block of the lane under its chain key.
+        A block is publishable once the lane's written KV covers it; keys
+        digest the lane's *full* token sequence (prompt + generated), so
+        decode-boundary blocks are shareable too — a later prompt that
+        extends this request's output (or this request resuming after a
+        preemption) rides the cached chain."""
+        if not self.econ.prefix_cache:
+            return
+        s = self.slots[slot]
+        bs = self.econ.page_size
+        # positions with KV written: the prefilled prompt prefix, then one
+        # per decode step (the newest sampled token is not yet written)
+        kv_len = s.prefilled if s.generated == 0 else s.plen + s.generated - 1
+        full = kv_len // bs
+        if full <= s.pub_upto:
+            return
+        comp = self.live[s.rid]
+
+        def block_tokens(j: int) -> bytes:
+            # tokens of logical positions [j*bs, (j+1)*bs).  comp.tokens
+            # is the rid's FULL emitted history (replay included), so
+            # generated position p >= plen always holds tokens[p - plen]
+            a, b = j * bs, (j + 1) * bs
+            parts = []
+            if a < s.plen:
+                parts.append(s.prompt[a: min(b, s.plen)])
+            if b > s.plen:
+                parts.append(np.asarray(
+                    comp.tokens[max(a - s.plen, 0): b - s.plen], np.int32))
+            chunk = np.concatenate(parts) if len(parts) > 1 else parts[0]
+            return np.ascontiguousarray(chunk, np.int32).tobytes()
+
+        # incremental rolling hash (byte-identical to ``prefix_keys``):
+        # each block costs O(bs), not a re-hash of the whole prefix
+        if s.hasher is None:
+            s.hasher = hashlib.sha256()
+        blocks = self.tables.blocks(slot)
+        for j in range(s.pub_upto, full):
+            while s.hashed <= j:
+                s.hasher.update(block_tokens(s.hashed))
+                s.hashed += 1
+            self.alloc.publish(blocks[j], s.hasher.digest())
+        s.pub_upto = full
 
     def _prefill_next_chunk(self, slot: int) -> None:
         """Run one prefill chunk for the lane (the whole bucketed prompt
-        when chunking is off).  The chunk covering the prompt's last
-        position samples the first token and activates the lane."""
+        when chunking is off; the unmatched suffix after a prefix hit).
+        The chunk covering the prompt's last position samples the first
+        token and activates the lane."""
         s = self.slots[slot]
         start = s.prefilled
         C = s.chunk
@@ -420,7 +763,8 @@ class ServeEngine:
         padded = np.zeros((1, C), np.int32)
         padded[0, : end - start] = s.prompt[start:end]
         if self.paged:
-            self._map_blocks(slot, blocks_for(end, self.econ.page_size))
+            if not self._map_blocks(slot, blocks_for(end, self.econ.page_size)):
+                return                          # lane preempted itself
             self._push_tables()
             exe = self._prefill_exe(C, first=(start == 0))
             self.state, out = exe(
@@ -439,8 +783,11 @@ class ServeEngine:
                 self._put(s.temperature, jnp.float32),
                 self._put(s.top_k, jnp.int32), self._put(s.top_p, jnp.float32),
             )
+        sub = None if self.econ.fused_sampling else self._key_mirror.split()
         s.prefilled = end
         self.counters["prefill_chunks"] += 1
+        self.counters["prefill_tokens"] += end - start
+        self._publish(slot)
         if end < s.plen:
             return                              # more chunks to come
         self.counters["prefills"] += 1
@@ -449,18 +796,31 @@ class ServeEngine:
             tok = int(np.asarray(out)[0])
         else:
             tok = int(self._host_sample(
-                np.asarray(out), np.array([s.temperature]))[0])
+                np.asarray(out), sub, np.array([s.temperature]),
+                np.array([s.top_k]), np.array([s.top_p]))[0])
         now = self.clock()
         comp = self.live[s.rid]
-        comp.tokens.append(tok)
-        comp.token_times.append(now)
         s.generated = 1
-        self._tok_mirror[slot] = tok
-        done = (s.plen >= s.limit) or (
-            self.econ.eos_id is not None and tok == self.econ.eos_id)
-        self._active_mirror[slot] = not done
-        if done:
-            self._finish(slot, now)
+        if s.emit_from >= 1:
+            # replaying a preempted lane: force the RECORDED first token
+            # as the next decode input.  Under greedy the regenerated
+            # token equals it bitwise; under temperature>0 the regenerated
+            # sample (drawn at a different key-stream position) must NOT
+            # fork the conditioning away from the already-emitted history.
+            # done stays False: the original run continued past here.
+            self._tok_mirror[slot] = int(comp.tokens[0])
+            self._active_mirror[slot] = True
+            self._sched_dirty = True
+            self.counters["replayed_tokens"] += 1
+        else:
+            comp.tokens.append(tok)
+            comp.token_times.append(now)
+            self._tok_mirror[slot] = tok
+            done = (s.plen >= s.limit) or (
+                self.econ.eos_id is not None and tok == self.econ.eos_id)
+            self._active_mirror[slot] = not done
+            if done:
+                self._finish(slot, now)
         if not self.econ.fused_sampling:
             self._writeback_sampled()
 
@@ -472,26 +832,26 @@ class ServeEngine:
         self.slots[slot] = None
         self._active_mirror[slot] = False
         if self.paged:
-            mapped = self.tables.mapped(slot)
-            self._deficit -= self._slot_wc[slot] - mapped
-            self._slot_wc[slot] = 0
+            if self.econ.admission == "deficit":
+                mapped = self.tables.mapped(slot)
+                self._deficit -= self._slot_wc[slot] - mapped
+                self._slot_wc[slot] = 0
             for b in self.tables.release(slot):
                 self.alloc.free(b)
             self._tables_dirty = True
         self.counters["evicted"] += 1
 
-    def _host_sample(self, logits: np.ndarray, temps: np.ndarray) -> np.ndarray:
-        """Benchmark baseline: sample on host from full logits (M, V)
-        (temperature only — per-slot top-k/top-p ride the fused path)."""
-        logits = np.asarray(logits, np.float32)
-        out = np.argmax(logits, axis=-1).astype(np.int32)
-        for i, t in enumerate(temps):
-            if t > 0:
-                z = logits[i] / t
-                z -= z.max()
-                p = np.exp(z)
-                out[i] = self._host_rng.choice(logits.shape[-1], p=p / p.sum())
-        return out
+    def _host_sample(self, logits, sub, temps, top_ks, top_ps) -> np.ndarray:
+        """Benchmark baseline: sample on host from full (M, V) logits with
+        the SAME fused sampler math (temperature + per-row top-k/top-p)
+        and a subkey from the device key-stream mirror — at a fixed seed
+        the ablation reproduces the fused path token-for-token."""
+        return np.asarray(sample_tokens(
+            jnp.asarray(logits, jnp.float32), sub,
+            jnp.asarray(temps, jnp.float32),
+            top_ks=jnp.asarray(top_ks, jnp.int32),
+            top_ps=jnp.asarray(top_ps, jnp.float32),
+        ))
 
     def _writeback_sampled(self) -> None:
         """Host-sampling mode: push tokens/active back to device state."""
@@ -526,33 +886,53 @@ class ServeEngine:
         can take, then advance all fully-prefilled lanes by one token.
         Returns False when idle."""
         progressed = False
-        for slot, s in enumerate(self.slots):
+        for slot in range(self.econ.max_slots):
+            s = self.slots[slot]
             if s is not None and s.prefilled < s.plen:
                 self._prefill_next_chunk(slot)
                 progressed = True
 
         for slot in self.free_slots():
+            if self.slots[slot] is not None:    # refilled by a resume
+                continue
             if not self.queue or not self._can_admit(self.queue[0]):
                 break
             self._admit(self.queue.popleft(), slot)
             progressed = True
 
-        active_slots = [
-            i for i, s in enumerate(self.slots)
-            if s is not None and s.prefilled >= s.plen
-        ]
+        def active():
+            return [
+                i for i, s in enumerate(self.slots)
+                if s is not None and s.prefilled >= s.plen
+            ]
+
+        active_slots = active()
+        if active_slots and self.paged:
+            # map the block each lane's next token lands in BEFORE the
+            # step — the device never allocates.  Highest-priority lanes
+            # map first, so a preemption pass evicts strictly later
+            # arrivals (possibly a mapper itself, which then skips).
+            for i in sorted(active_slots, key=lambda i: self.slots[i].rid):
+                s = self.slots[i]
+                if s is None:
+                    continue                    # preempted by an earlier map
+                next_pos = s.plen + s.generated - 1
+                self._map_blocks(i, next_pos // self.econ.page_size + 1)
+            self._push_tables()
+            active_slots = active()
         if active_slots:
-            if self.paged:
-                # map the block each lane's next token lands in BEFORE the
-                # step — the device never allocates
-                for i in active_slots:
-                    s = self.slots[i]
-                    next_pos = s.plen + s.generated - 1
-                    self._map_blocks(
-                        i, next_pos // self.econ.page_size + 1)
-                self._push_tables()
+            if self._sched_dirty:
+                # lane restore or replay forcing rewrote the scheduling
+                # mirror (tokens/active/lengths) — push it whole before
+                # the device advances
+                self._push_sched()
+                self._sched_dirty = False
+            else:
+                self._push_active()
             exe = self._decode_exe()
             self.state, out = exe(self.params, self.state)
+            sub = None if self.econ.fused_sampling \
+                else self._key_mirror.split()
             self._note_kv_usage(frozenset(active_slots))
             self.counters["decode_steps"] += 1
             self.counters["dead_slot_steps"] += (
@@ -560,19 +940,40 @@ class ServeEngine:
             if self.econ.fused_sampling:
                 toks = np.asarray(out)          # the one per-step host sync
             else:
-                temps = np.array([
-                    s.temperature if s is not None else 0.0 for s in self.slots
-                ])
-                toks = self._host_sample(np.asarray(out), temps)
+                arr = lambda f, d, dt: np.array([
+                    f(s) if s is not None else d for s in self.slots
+                ], dtype=dt)
+                toks = self._host_sample(
+                    np.asarray(out), sub,
+                    arr(lambda s: s.temperature, 0.0, np.float32),
+                    arr(lambda s: s.top_k, 0, np.int32),
+                    arr(lambda s: s.top_p, 0.0, np.float32))
             now = self.clock()
             for i in active_slots:
                 s = self.slots[i]
                 tok = int(toks[i])
                 s.generated += 1
                 comp = self.live[s.rid]
-                comp.tokens.append(tok)
-                comp.token_times.append(now)
-                self._tok_mirror[i] = tok
+                replaying = s.generated <= s.emit_from
+                if replaying:
+                    # preemption replay: force the RECORDED token as the
+                    # next input (== the regenerated one under greedy; a
+                    # stochastic resample at a different key-stream
+                    # position must not fork the conditioning away from
+                    # the emitted history).  No re-emission, no done: the
+                    # original run continued past every replayed position.
+                    self._tok_mirror[i] = int(comp.tokens[s.generated - 1])
+                    self._sched_dirty = True
+                    self.counters["replayed_tokens"] += 1
+                else:
+                    comp.tokens.append(tok)
+                    comp.token_times.append(now)
+                    self._tok_mirror[i] = tok
+                if self.paged and \
+                        (s.plen + s.generated - 1) % self.econ.page_size == 0:
+                    self._publish(i)
+                if replaying:
+                    continue
                 done = (s.plen + s.generated - 1 >= s.limit) or (
                     self.econ.eos_id is not None and tok == self.econ.eos_id)
                 if done:
@@ -599,12 +1000,52 @@ class ServeEngine:
         self.drain()
         return [np.asarray(self.completions[r].tokens, np.int32) for r in rids]
 
+    # ------------------------------------------------------------------
+    # Invariants + stats
+    # ------------------------------------------------------------------
+    def check_invariants(self) -> None:
+        """Allocator/table conservation sweep — the fuzz harness runs this
+        after every step.  Paged only (the slotted layout has no block
+        state): free + live + cached partitions the pool, refcounts cover
+        every mapping, every lane's written KV lies inside its mapped
+        region (so no write can ever route to the null block while live),
+        and deficit admission never over-commits."""
+        if not self.paged:
+            return
+        self.alloc.check()
+        shared = self.econ.prefix_cache
+        self.tables.check(refcount=self.alloc.refcount if shared else None)
+        bs = self.econ.page_size
+        for i, s in enumerate(self.slots):
+            if s is None:
+                assert self.tables.mapped(i) == 0, f"freed slot {i} maps blocks"
+                continue
+            kv_len = s.prefilled if s.generated == 0 \
+                else s.plen + s.generated - 1
+            assert kv_len <= self.tables.mapped(i) * bs, (
+                f"slot {i}: {kv_len} KV positions written but only "
+                f"{self.tables.mapped(i)} blocks mapped")
+            for b in self.tables.blocks(i):
+                assert self.alloc.refcount(b) >= 1, (
+                    f"slot {i} maps non-live block {b}")
+        if self.econ.admission == "deficit":
+            assert self.alloc.available >= self._deficit >= 0, (
+                f"deficit {self._deficit} exceeds available "
+                f"{self.alloc.available}")
+
     @property
     def stats(self) -> dict:
         """Engine + dispatch counters (mirrors ``SynkFunction.stats``)."""
-        return {
+        out = {
             **self.counters, **self.aot.stats,
             "executables": len(self.aot),
             "kv_layout": self.econ.kv_layout,
             "kv_reserved_bytes": self.kv_reserved_bytes,
         }
+        if self.paged:
+            out["prefix_cached_blocks"] = self.alloc.num_cached
+            out["prefix_cache_evictions"] = self.alloc.cache_evictions
+            looked = self.counters["prefix_lookup_tokens"]
+            out["prefix_hit_rate"] = (
+                self.counters["prefix_hit_tokens"] / looked if looked else 0.0)
+        return out

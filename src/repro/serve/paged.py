@@ -26,8 +26,30 @@ engine mirrors scheduling state anyway, so block accounting adds zero
 device syncs.  The device sees only the ``tables`` array, re-pushed as a
 state leaf whenever a row changes (a few hundred bytes, amortised over
 many steps).
+
+**Prefix caching** rides on two extensions of the allocator:
+
+* every live block carries a **refcount** — a block a prompt prefix
+  shares is mapped by several lanes at once and only returns to the free
+  list when the last lane releases it;
+* a **prefix-hash index** keyed by a block-aligned rolling hash of the
+  token sequence (``prefix_keys``): when a full block's KV has been
+  written, the owning lane *publishes* it, and a later request whose
+  prompt starts with the same tokens *shares* the cached chain instead of
+  recomputing it.  A published block whose refcount drops to 0 parks in a
+  **cached** LRU set — still indexed, revivable by a future hit, and
+  reclaimed (evicted from the index) only when the free list runs dry.
+
+So each allocatable block is in exactly one of three states — *free*,
+*live* (ref >= 1), or *cached* (ref == 0, indexed) — and
+``free + live + cached == capacity`` is the conservation invariant the
+property tests and the fuzz harness sweep after every step.
 """
 from __future__ import annotations
+
+import bisect
+import hashlib
+from collections import OrderedDict
 
 import jax
 import jax.numpy as jnp
@@ -47,14 +69,40 @@ def blocks_for(positions: int, block_size: int) -> int:
     return -(-positions // block_size)
 
 
+def prefix_keys(tokens, block_size: int) -> list[bytes]:
+    """Chain keys for every full block-aligned prefix of ``tokens``.
+
+    Key ``j`` digests tokens ``[0, (j+1)*block_size)`` through a rolling
+    sha256 — a collision-free stand-in for a rolling hash, so two chains
+    share a key iff their token prefixes are identical (a polynomial hash
+    collision here would silently splice one prompt's KV into another).
+    The chain structure means key ``j`` commits to the *whole* history,
+    not just block ``j``'s tokens: block contents depend on every earlier
+    position through attention.
+    """
+    t = np.ascontiguousarray(np.asarray(tokens, np.int32))
+    h = hashlib.sha256()
+    out: list[bytes] = []
+    for j in range(t.size // block_size):
+        h.update(t[j * block_size:(j + 1) * block_size].tobytes())
+        out.append(h.digest())
+    return out
+
+
 class BlockAllocator:
-    """Fixed pool of KV blocks with a free list.
+    """Fixed pool of KV blocks: free list + per-block refcounts + a
+    prefix-hash index of published (fully written, content-addressed)
+    blocks.
 
     Block 0 is reserved as the null/write-sink block and is never handed
     out.  ``alloc`` pops the lowest free id (deterministic across runs so
     block layouts — and therefore the bytes the bench reports — are
-    reproducible); ``free`` returns a block.  ``peak_in_use`` tracks the
-    high-water mark for the bench's ``kv_used_bytes``.
+    reproducible), falling back to evicting the LRU *cached* block when
+    the free list is empty; ``free`` drops one reference, parking
+    published blocks in the cached set and returning unpublished ones to
+    the free list at refcount 0; ``share`` takes a reference on a live or
+    cached block (a prefix-cache hit).  ``peak_in_use`` tracks the
+    live-block high-water mark for the bench's ``kv_used_bytes``.
     """
 
     def __init__(self, num_blocks: int, block_size: int):
@@ -69,8 +117,14 @@ class BlockAllocator:
         self.block_size = block_size
         # sorted free list, popped from the front: lowest ids first
         self._free = list(range(1, num_blocks))
-        self._allocated: set[int] = set()
+        self._ref: dict[int, int] = {}          # live blocks -> refcount >= 1
+        self._cached: OrderedDict[int, None] = OrderedDict()  # LRU, ref == 0
+        self._index: dict[bytes, int] = {}      # chain key -> block
+        self._block_key: dict[int, bytes] = {}  # published block -> its key
         self.peak_in_use = 0
+        self.hits = 0          # lookup chains that matched at least a block
+        self.misses = 0
+        self.cache_evictions = 0
 
     @property
     def capacity(self) -> int:
@@ -82,33 +136,117 @@ class BlockAllocator:
         return len(self._free)
 
     @property
+    def num_cached(self) -> int:
+        """Published blocks with refcount 0 (revivable, reclaimable)."""
+        return len(self._cached)
+
+    @property
+    def available(self) -> int:
+        """Blocks an ``alloc`` can hand out: free + reclaimable cached."""
+        return len(self._free) + len(self._cached)
+
+    @property
     def in_use(self) -> int:
-        return len(self._allocated)
+        """Live blocks (refcount >= 1)."""
+        return len(self._ref)
+
+    def refcount(self, block: int) -> int:
+        return self._ref.get(block, 0)
+
+    def _forget(self, block: int) -> None:
+        """Drop a block's index entry (cache eviction / reclamation)."""
+        key = self._block_key.pop(block, None)
+        if key is not None and self._index.get(key) == block:
+            del self._index[key]
 
     def alloc(self) -> int:
-        if not self._free:
+        if self._free:
+            b = self._free.pop(0)
+        elif self._cached:
+            b, _ = self._cached.popitem(last=False)   # evict LRU cached
+            self._forget(b)
+            self.cache_evictions += 1
+        else:
             raise RuntimeError("KV block pool exhausted")
-        b = self._free.pop(0)
-        self._allocated.add(b)
-        self.peak_in_use = max(self.peak_in_use, len(self._allocated))
+        self._ref[b] = 1
+        self.peak_in_use = max(self.peak_in_use, len(self._ref))
         return b
+
+    def share(self, block: int) -> int:
+        """Take one more reference on a live or cached block (prefix hit).
+        Returns the block for chaining."""
+        if block in self._ref:
+            self._ref[block] += 1
+        elif block in self._cached:
+            del self._cached[block]                   # revive
+            self._ref[block] = 1
+            self.peak_in_use = max(self.peak_in_use, len(self._ref))
+        else:
+            raise ValueError(f"block {block} is not allocated or cached")
+        return block
 
     def free(self, block: int) -> None:
         if block == NULL_BLOCK:
             raise ValueError("cannot free the null block")
-        if block not in self._allocated:
+        if block not in self._ref:
             raise ValueError(f"block {block} is not allocated")
-        self._allocated.remove(block)
-        # keep the free list sorted so allocation order is deterministic
-        import bisect
-        bisect.insort(self._free, block)
+        self._ref[block] -= 1
+        if self._ref[block]:
+            return
+        del self._ref[block]
+        if block in self._block_key:
+            self._cached[block] = None                # park, MRU end
+        else:
+            # keep the free list sorted so allocation order is deterministic
+            bisect.insort(self._free, block)
+
+    # -- prefix index ---------------------------------------------------
+    def publish(self, block: int, key: bytes) -> bool:
+        """Index a fully written live block under its chain ``key``.
+        Idempotent: if the key is already indexed (another lane produced
+        the same chain first), the existing entry wins and this block
+        stays unpublished.  Returns True if the block was indexed."""
+        if block not in self._ref:
+            raise ValueError(f"cannot publish non-live block {block}")
+        if key in self._index or block in self._block_key:
+            return False
+        self._index[key] = block
+        self._block_key[block] = key
+        return True
+
+    def lookup(self, keys: list[bytes]) -> list[int]:
+        """Longest indexed chain prefix of ``keys`` (no refs taken —
+        callers ``share`` the blocks they actually map)."""
+        out: list[int] = []
+        for k in keys:
+            b = self._index.get(k)
+            if b is None:
+                break
+            out.append(b)
+        if out:
+            self.hits += 1
+        elif keys:
+            self.misses += 1
+        return out
 
     def check(self) -> None:
-        """Invariant sweep (used by the property tests)."""
-        assert len(self._free) + len(self._allocated) == self.capacity
-        assert not (set(self._free) & self._allocated)
-        assert NULL_BLOCK not in self._allocated and NULL_BLOCK not in self._free
+        """Invariant sweep (property tests + the cross-engine fuzzer):
+        free/live/cached partition the pool, refcounts are positive,
+        every cached block is indexed, and every index entry points at a
+        live-or-cached block."""
+        free, live, cached = set(self._free), set(self._ref), set(self._cached)
+        assert len(free) + len(live) + len(cached) == self.capacity, \
+            "free + live + cached != pool"
+        assert not (free & live) and not (free & cached) and not (live & cached)
+        assert NULL_BLOCK not in free | live | cached
         assert self._free == sorted(self._free)
+        assert all(r >= 1 for r in self._ref.values())
+        for b in cached:
+            assert b in self._block_key, f"cached block {b} has no key"
+        for b, key in self._block_key.items():
+            assert self._index.get(key) == b
+            assert b in live or b in cached, f"indexed block {b} was freed"
+        assert len(self._block_key) == len(self._index)
 
 
 class SlotTables:
@@ -151,17 +289,29 @@ class SlotTables:
         self.table[slot, :] = NULL_BLOCK
         return out
 
-    def check(self) -> None:
-        """Compaction + uniqueness invariants (property tests)."""
-        seen: set[int] = set()
+    def check(self, *, refcount=None) -> None:
+        """Compaction + uniqueness invariants (property tests).
+
+        Default: no block may be mapped by two slots.  With ``refcount``
+        (a callable, e.g. ``BlockAllocator.refcount``), prefix-cache
+        sharing is legal and the check instead demands every block's
+        refcount covers its mapping multiplicity (and is live at all).
+        """
+        counts: dict[int, int] = {}
         for slot, row in enumerate(self._blocks):
             n = len(row)
             assert list(self.table[slot, :n]) == row
             assert not self.table[slot, n:].any(), "non-contiguous table row"
             assert NULL_BLOCK not in row
-            dup = seen & set(row)
-            assert not dup, f"blocks {dup} mapped in two slots"
-            seen |= set(row)
+            if refcount is None:
+                dup = set(counts) & set(row)
+                assert not dup, f"blocks {dup} mapped in two slots"
+            for b in row:
+                counts[b] = counts.get(b, 0) + 1
+        if refcount is not None:
+            for b, n in counts.items():
+                assert refcount(b) >= n, (
+                    f"block {b} mapped {n}x but refcount {refcount(b)}")
 
 
 # ---------------------------------------------------------------------------

@@ -217,6 +217,23 @@ def paged_decode_program(cfg: ArchConfig, mesh: Mesh, rules: ShardRules, *,
     return _decode_program(decode_fn, eos_id=eos_id, fused=fused)
 
 
+def paged_copy_program(cfg: ArchConfig, mesh: Mesh, rules: ShardRules):
+    """Copy one physical KV block of the paged pool — the prefix cache's
+    copy-on-write step (see :func:`repro.models.lm.copy_paged_block`).
+
+    ``fn(state, src, dst) -> state'`` with ``src``/``dst`` traced scalars:
+    one AOT executable serves every COW regardless of which blocks are
+    involved.
+    """
+    mod = registry.get_module(cfg)
+
+    def fn(state, src, dst):
+        cache = mod.copy_paged_block(cfg, state["cache"], src, dst)
+        return {**state, "cache": cache}
+
+    return fn
+
+
 def slot_prefill_program(cfg: ArchConfig, mesh: Mesh, rules: ShardRules, *,
                          eos_id: int | None = None, fused: bool = True):
     """Admit one prompt into lane ``slot``: prefill its KV into the lane

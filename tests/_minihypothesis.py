@@ -14,6 +14,10 @@ from __future__ import annotations
 import inspect
 import random
 
+# marker for the wiring test: distinguishes this stand-in from the real
+# package after conftest aliases it into sys.modules["hypothesis"]
+IS_MINI = True
+
 
 class _Strategy:
     def __init__(self, draw):

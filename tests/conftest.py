@@ -6,6 +6,12 @@ import sys
 import jax
 import pytest
 
+# Prefer the REAL hypothesis whenever the image ships it; only fall back
+# to the deterministic mini stand-in when the import fails.  The property
+# tests use only the surface both implement (given/settings/strategies),
+# so the same tests get shrinking + health checks for free once the
+# package lands.  tests/test_engine_fuzz.py::test_hypothesis_selection
+# asserts the selection matches what's installed.
 try:
     import hypothesis  # noqa: F401
 except ImportError:  # image without hypothesis: install the mini stand-in

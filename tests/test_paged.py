@@ -67,6 +67,118 @@ def test_allocator_roundtrip_invariants(ops):
     assert alloc.peak_in_use <= alloc.capacity
 
 
+@settings(max_examples=25)
+@given(ops=st.lists(st.integers(min_value=0, max_value=99), min_size=0,
+                    max_size=100))
+def test_refcount_allocator_interleavings(ops):
+    """Arbitrary interleavings of alloc / share / free / preempt (bulk
+    free) / publish / lookup: no double-free, no leak, no block freed
+    while references live, and prefix-index lookups never return a block
+    that sits on the free list."""
+    alloc = BlockAllocator(num_blocks=9, block_size=4)
+    refs: dict[int, int] = {}                  # shadow refcounts
+    published: dict[int, bytes] = {}
+    next_key = [0]
+    for op in ops:
+        kind = op % 6
+        if kind in (0, 1):                      # alloc (bias)
+            if alloc.available:
+                b = alloc.alloc()
+                assert refs.get(b, 0) == 0, "double assignment"
+                refs[b] = 1
+                published.pop(b, None)          # reclaimed cached block
+        elif kind == 2 and refs:                # share a live block
+            b = sorted(refs)[op % len(refs)]
+            alloc.share(b)
+            refs[b] += 1
+        elif kind == 3 and refs:                # free one reference
+            b = sorted(refs)[op % len(refs)]
+            alloc.free(b)
+            refs[b] -= 1
+            if not refs[b]:
+                del refs[b]
+        elif kind == 4 and refs:                # publish a live block
+            b = sorted(refs)[op % len(refs)]
+            key = next_key[0].to_bytes(4, "big")
+            next_key[0] += 1
+            if alloc.publish(b, key):
+                published[b] = key
+        elif kind == 5 and refs:                # preempt: bulk release
+            for b in list(refs):
+                for _ in range(refs[b]):
+                    alloc.free(b)
+            refs.clear()
+        alloc.check()
+        assert alloc.in_use == len(refs)
+        for b, n in refs.items():
+            assert alloc.refcount(b) == n
+        # a published key either resolves to a live/cached block or was
+        # evicted — never to a block on the free list
+        for b, key in list(published.items()):
+            got = alloc.lookup([key])
+            if not got:
+                del published[b]                # evicted or superseded
+                continue
+            assert got == [b]
+            assert alloc.refcount(b) >= 1 or alloc.num_cached > 0
+    for b in list(refs):
+        for _ in range(refs.pop(b)):
+            alloc.free(b)
+    alloc.check()
+    assert alloc.in_use == 0
+    assert alloc.num_free + alloc.num_cached == alloc.capacity
+
+
+def test_refcount_share_and_cached_lifecycle():
+    """share() stacks references; free() only releases at refcount 0;
+    published blocks park in the cached set instead of the free list and
+    revive on the next hit; the LRU cached block is reclaimed when the
+    free list runs dry."""
+    alloc = BlockAllocator(num_blocks=4, block_size=2)
+    a = alloc.alloc()
+    alloc.share(a)
+    alloc.free(a)
+    assert alloc.refcount(a) == 1 and alloc.in_use == 1   # still live
+    with pytest.raises(ValueError):
+        alloc.share(99)
+    assert alloc.publish(a, b"ka")
+    assert not alloc.publish(a, b"kb")                    # one key per block
+    alloc.free(a)
+    assert alloc.in_use == 0 and alloc.num_cached == 1    # parked, not freed
+    assert alloc.lookup([b"ka"]) == [a]
+    alloc.share(a)                                        # revive from cache
+    assert alloc.refcount(a) == 1 and alloc.num_cached == 0
+    alloc.free(a)
+
+    # exhaust the free list: the LRU cached block gets reclaimed and its
+    # index entry dropped
+    b = alloc.alloc()
+    c = alloc.alloc()
+    assert {b, c} == {2, 3}    # cached block a skipped while free ids remain
+    d = alloc.alloc()          # free list empty -> evicts cached block a
+    assert d == a
+    assert alloc.lookup([b"ka"]) == []
+    assert alloc.cache_evictions == 1
+    alloc.check()
+
+
+def test_prefix_keys_chain():
+    from repro.serve import prefix_keys
+
+    t = np.arange(20, dtype=np.int32)
+    keys = prefix_keys(t, 8)
+    assert len(keys) == 2                       # only full blocks
+    # chain keys commit to the whole history, not just the block's tokens
+    t2 = t.copy()
+    t2[0] = 99
+    keys2 = prefix_keys(t2, 8)
+    assert keys[0] != keys2[0] and keys[1] != keys2[1]
+    # equal prefixes share keys
+    assert prefix_keys(t[:16], 8) == keys
+    assert prefix_keys(t, 8)[0] == keys[0]
+    assert prefix_keys(np.asarray([], np.int32), 8) == []
+
+
 def test_allocator_exhaustion_and_errors():
     alloc = BlockAllocator(num_blocks=4, block_size=2)
     got = [alloc.alloc() for _ in range(3)]
@@ -346,3 +458,179 @@ def test_paged_engine_validation(setup):
     with pytest.raises(ValueError):   # max_len not a multiple of page_size
         ServeEngine(cfg, mesh, rules, params,
                     EngineConfig(max_len=30, kv_layout="paged", page_size=8))
+    with pytest.raises(ValueError):   # prefix caching needs block tables
+        ServeEngine(cfg, mesh, rules, params,
+                    EngineConfig(kv_layout="slotted", prefix_cache=True))
+    with pytest.raises(ValueError):   # so does preemption
+        ServeEngine(cfg, mesh, rules, params,
+                    EngineConfig(kv_layout="slotted", admission="preempt"))
+    with pytest.raises(ValueError):
+        ServeEngine(cfg, mesh, rules, params,
+                    EngineConfig(kv_layout="paged", admission="bogus"))
+
+
+# ---------------------------------------------------------------------------
+# Prefix caching + preemption (engine level)
+# ---------------------------------------------------------------------------
+
+
+def test_prefix_cache_skips_shared_prefill(setup):
+    """Two requests sharing a 16-token system prompt: the second admission
+    matches the published block chain, prefills only its suffix, and still
+    emits exactly the no-cache engine's greedy tokens."""
+    cfg, mesh, rules, params = setup
+    rng = np.random.default_rng(10)
+    sysp = rng.integers(0, cfg.vocab, 16).astype(np.int32)
+    prompts = [np.concatenate([sysp, rng.integers(0, cfg.vocab, n)
+                               .astype(np.int32)]) for n in (5, 7)]
+
+    def run(prefix):
+        eng = ServeEngine(
+            cfg, mesh, rules, params,
+            EngineConfig(max_slots=1, max_len=32, kv_layout="paged",
+                         page_size=8, prefix_cache=prefix))
+        out = eng.run(prompts, max_new_tokens=4)
+        return [t.tolist() for t in out], eng
+
+    want, plain = run(prefix=False)
+    got, cached = run(prefix=True)
+    assert got == want
+    # max_slots=1 serializes the two requests, so the second's 16 shared
+    # positions come from the cache: exactly 16 fewer tokens prefilled
+    assert cached.counters["prefix_hit_tokens"] == 16
+    assert cached.counters["prefill_tokens"] \
+        == plain.counters["prefill_tokens"] - 16
+    assert cached.stats["prefix_hit_rate"] > 0.3
+    # drained: every block is free or parked in the prefix cache
+    assert cached.alloc.in_use == 0
+    assert cached.alloc.num_cached > 0
+    cached.check_invariants()
+
+
+def test_prefix_cache_cow_tail(setup):
+    """A prompt that is EXACTLY a published block chain (plen % bs == 0)
+    must copy-on-write the tail block — the sampling position is
+    recomputed in a private copy, never written into the shared block —
+    and match the no-cache stream."""
+    cfg, mesh, rules, params = setup
+    rng = np.random.default_rng(11)
+    prompt = rng.integers(0, cfg.vocab, 16).astype(np.int32)  # 2 full blocks
+
+    def run(prefix):
+        eng = ServeEngine(
+            cfg, mesh, rules, params,
+            EngineConfig(max_slots=1, max_len=32, kv_layout="paged",
+                         page_size=8, prefix_cache=prefix))
+        out = eng.run([prompt, prompt.copy()], max_new_tokens=4)
+        return [t.tolist() for t in out], eng
+
+    want, _ = run(prefix=False)
+    got, eng = run(prefix=True)
+    assert got == want
+    assert got[0] == got[1]                     # identical prompts agree
+    assert eng.counters["cow_copies"] == 1
+    # COW recomputes exactly one position: the 15 before it are hits
+    assert eng.counters["prefix_hit_tokens"] == 15
+    eng.check_invariants()
+
+
+def test_preempt_requeue_completes_with_parity(setup):
+    """A pool too small for every lane's worst case under
+    admission='preempt': lanes are admitted on immediate need, decode
+    growth preempts the lowest-priority lane back to the queue, and every
+    request still finishes with the slotted engine's exact tokens."""
+    cfg, mesh, rules, params = setup
+    rng = np.random.default_rng(12)
+    prompts = _prompts(cfg, rng, [9, 12, 7])
+    budgets = [8, 6, 7]
+
+    def run(ec):
+        eng = ServeEngine(cfg, mesh, rules, params, ec)
+        rids = [eng.submit(p, max_new_tokens=b)
+                for p, b in zip(prompts, budgets)]
+        while eng.has_work():
+            eng.step()
+            eng.check_invariants()
+        return [list(eng.completions[r].tokens) for r in rids], eng
+
+    want, _ = run(EngineConfig(max_slots=3, max_len=32))
+    got, eng = run(EngineConfig(
+        max_slots=3, max_len=32, kv_layout="paged", page_size=8,
+        num_blocks=7, admission="preempt"))       # 6 usable blocks for 3 lanes
+    assert got == want
+    assert eng.counters["preemptions"] > 0
+    assert eng.counters["resumed"] == eng.counters["preemptions"]
+    assert eng.counters["admitted"] == eng.counters["evicted"] == len(prompts)
+    assert eng.alloc.in_use == 0
+
+
+def test_preempt_stochastic_resume_is_coherent(setup):
+    """Preempting a temperature>0 lane must not fork its stream: during
+    the resume replay the engine forces the RECORDED tokens as decode
+    inputs (a re-sample at a different key-stream position would diverge
+    from the emitted history and poison the prefix index).  Completions
+    keep exactly their budget, runs are seed-deterministic, and the
+    replay machinery demonstrably fired."""
+    cfg, mesh, rules, params = setup
+    rng = np.random.default_rng(15)
+    prompts = _prompts(cfg, rng, [9, 12, 7])
+    budgets = [8, 6, 7]
+
+    def run():
+        eng = ServeEngine(cfg, mesh, rules, params, EngineConfig(
+            max_slots=3, max_len=32, kv_layout="paged", page_size=8,
+            num_blocks=7, admission="preempt", seed=11))
+        rids = [eng.submit(p, max_new_tokens=b, temperature=1.5)
+                for p, b in zip(prompts, budgets)]
+        while eng.has_work():
+            eng.step()
+            eng.check_invariants()
+        return [list(eng.completions[r].tokens) for r in rids], eng
+
+    a, eng = run()
+    assert eng.counters["preemptions"] > 0
+    assert eng.counters["replayed_tokens"] > 0
+    for tokens, b in zip(a, budgets):
+        assert len(tokens) == b
+    b_, _ = run()
+    assert a == b_                               # seed-deterministic
+
+
+def test_preempt_single_lane_never_livelocks(setup):
+    """A single request whose worst case fits the pool exactly must run
+    to completion alone — preemption never evicts the only lane into an
+    infinite requeue loop."""
+    cfg, mesh, rules, params = setup
+    rng = np.random.default_rng(13)
+    prompt = _prompts(cfg, rng, [9])[0]
+    eng = ServeEngine(
+        cfg, mesh, rules, params,
+        EngineConfig(max_slots=2, max_len=16, kv_layout="paged",
+                     page_size=4, num_blocks=5, admission="preempt"))
+    rid = eng.submit(prompt, max_new_tokens=8)    # needs all 4 usable blocks
+    for _ in range(200):
+        if not eng.step():
+            break
+        eng.check_invariants()
+    assert len(eng.completions[rid].tokens) == 8
+
+
+def test_prebuild_covers_prefix_and_preempt_dispatch(setup):
+    """After ``prebuild()``, no schedule — prefix hits, misses, COW,
+    preemption resumes — may compile another executable (the builds-flat
+    guarantee CI leans on)."""
+    cfg, mesh, rules, params = setup
+    rng = np.random.default_rng(14)
+    eng = ServeEngine(
+        cfg, mesh, rules, params,
+        EngineConfig(max_slots=2, max_len=32, kv_layout="paged",
+                     page_size=8, num_blocks=9, prefix_cache=True,
+                     admission="preempt"))
+    eng.prebuild()
+    builds = eng.stats["builds"]
+    sysp = rng.integers(0, cfg.vocab, 16).astype(np.int32)
+    prompts = [np.concatenate([sysp, t]) for t in _prompts(cfg, rng, [4, 6])]
+    prompts += [sysp.copy()] + _prompts(cfg, rng, [11, 3])
+    eng.run(prompts, max_new_tokens=6)
+    assert eng.counters["prefix_hit_tokens"] > 0
+    assert eng.stats["builds"] == builds
