@@ -51,6 +51,22 @@ Modes:
                       priority lane back to the queue (exact greedy
                       parity still required — ``headline.preempt_greedy_
                       parity``).
+    continuous_recurrent
+                      the SAME engine serving the ``ssm`` family (xLSTM
+                      smoke config): lanes are per-lane recurrent state
+                      with no seq axis — admission snapshots the state at
+                      the prompt end, eviction zeroes the lane.  Greedy
+                      parity vs solo ``generate_static`` and a preempt-
+                      and-requeue resume parity are asserted into
+                      ``headline.recurrent_greedy_parity`` /
+                      ``recurrent_preempt_parity`` (ci.sh gates both).
+                      f32 compute so the engine-vs-static comparison is
+                      exact.
+    continuous_hybrid the engine serving zamba2 (``hybrid``): each lane
+                      composes a slotted KV segment (shared attention
+                      block) with recurrent mamba leaves — one cache
+                      dict, same admission/eviction flow
+                      (``headline.hybrid_greedy_parity``).
 
 Every continuous mode reports ``kv_reserved_bytes`` (cache HBM actually
 allocated) and ``kv_peak_used_bytes`` (high-water mark of positions/blocks
@@ -274,6 +290,60 @@ def run_continuous(cfg, mesh, rules, params, trace: list[_Req], *,
                     timed=timed, stats=engine.stats)
 
 
+def check_recurrent_parity(cfg, trace: list[_Req], *, max_slots: int,
+                           max_len: int, preempt_tick: int = 3) -> dict:
+    """Greedy parity of the recurrent/hybrid slot engine vs the legacy
+    ``generate_static`` loop (each request solo), staggered through fewer
+    lanes than requests — plus a preempt-and-requeue drive whose resumed
+    streams must still match.  Runs on a single-device mesh (the tested
+    exact-parity configuration; the throughput modes use the full local
+    mesh)."""
+    from repro.launch.mesh import single_device_mesh
+    from repro.models import registry
+    from repro.models.common import ShardRules
+    from repro.serve import EngineConfig, ServeConfig, ServeEngine, \
+        generate_static
+
+    mesh = single_device_mesh()
+    rules = ShardRules.for_mesh(mesh)
+    params = registry.get_module(cfg).init(cfg, jax.random.PRNGKey(0))
+    reqs = trace[: 2 * max_slots + 1]           # lanes get reused
+    solo = [
+        list(generate_static(cfg, mesh, rules, params, r.prompt[None],
+                             serve=ServeConfig(max_new_tokens=r.budget))[0])
+        for r in reqs
+    ]
+
+    def drive(preempts: bool):
+        eng = ServeEngine(cfg, mesh, rules, params,
+                          EngineConfig(max_slots=max_slots, max_len=max_len))
+        rids = [eng.submit(r.prompt, max_new_tokens=r.budget) for r in reqs]
+        steps = 0
+        # a bounded preemption schedule (not periodic: a replay that spans
+        # the period would requeue forever and never make progress)
+        schedule = {preempt_tick, 3 * preempt_tick + 2} if preempts else set()
+        while eng.has_work():
+            eng.step()
+            steps += 1
+            assert steps < 5000, "parity drive failed to drain"
+            if steps in schedule:
+                victim = next((i for i, s in enumerate(eng.slots)
+                               if s is not None), None)
+                if victim is not None:
+                    eng.preempt(victim)
+        return [list(eng.completions[r].tokens) for r in rids], eng
+
+    plain, _ = drive(preempts=False)
+    resumed, peng = drive(preempts=True)
+    want = [[int(t) for t in row] for row in solo]
+    return {
+        "greedy_parity": plain == want,
+        "preempt_parity": resumed == want,
+        "parity_check_preemptions": peng.counters["preemptions"],
+        "replayed_tokens": peng.counters["replayed_tokens"],
+    }
+
+
 def check_paged_parity(cfg, mesh, rules, params, trace: list[_Req], *,
                        max_slots: int, max_len: int, page_size: int,
                        num_blocks: int, preempt_blocks: int,
@@ -424,6 +494,27 @@ def main(argv=None) -> dict:
         page_size=page_size, num_blocks=preempt_blocks,
         admission="preempt", aot=aot)
 
+    # --- recurrent state kinds: the SAME engine over ssm + hybrid ------
+    # f32 compute so the engine-vs-generate_static parity checks are
+    # exact; the smoke vocabs stay native (these modes measure the family
+    # axis + dispatch flatness, not sampler-fetch bandwidth)
+    rec_parity = {}
+    for mode_name, arch in (("continuous_recurrent", "xlstm-1.3b"),
+                            ("continuous_hybrid", "zamba2-1.2b")):
+        fcfg = dataclasses.replace(
+            get_smoke_config(arch), compute_dtype="float32")
+        fparams = registry.get_module(fcfg).init(fcfg, jax.random.PRNGKey(0))
+        ftrace = make_trace(max(n_requests // 2, 8), fcfg.vocab,
+                            long_budget=32)
+        fmax_len = max(r.prompt.size + r.budget for r in ftrace) + 8
+        faot = AotCache(mode_name)
+        report["modes"][mode_name] = run_continuous(
+            fcfg, mesh, ShardRules.for_mesh(mesh), fparams, ftrace,
+            max_slots=max_slots, max_len=fmax_len, fused=True, aot=faot)
+        rec_parity[mode_name] = check_recurrent_parity(
+            fcfg, ftrace, max_slots=max(max_slots // 4, 2),
+            max_len=fmax_len)
+
     st, cf = report["modes"]["static_batch"], report["modes"]["continuous_fused"]
     pg = report["modes"]["continuous_paged"]
     px = report["modes"]["continuous_paged_prefix"]
@@ -457,6 +548,22 @@ def main(argv=None) -> dict:
             / max(shared["timed"]["prefill_tokens"], 1)),
         "preemptions_timed": (
             report["modes"]["continuous_paged_preempt"]["timed"]["preemptions"]),
+        # recurrent/hybrid: slot serving generalized beyond the lm
+        # families — engine-vs-static greedy parity, preempt-resume
+        # parity (ssm), and dispatch flatness across both new modes
+        "recurrent_greedy_parity":
+            rec_parity["continuous_recurrent"]["greedy_parity"],
+        "recurrent_preempt_parity":
+            rec_parity["continuous_recurrent"]["preempt_parity"],
+        "recurrent_preemptions":
+            rec_parity["continuous_recurrent"]["parity_check_preemptions"],
+        "hybrid_greedy_parity":
+            rec_parity["continuous_hybrid"]["greedy_parity"],
+        "hybrid_preempt_parity":
+            rec_parity["continuous_hybrid"]["preempt_parity"],
+        "recurrent_steady_builds_delta": max(
+            report["modes"]["continuous_recurrent"]["steady_builds_delta"],
+            report["modes"]["continuous_hybrid"]["steady_builds_delta"]),
         **parity,
     }
     text = json.dumps(report, indent=2)

@@ -4,10 +4,17 @@ sequence-sharded KV cache path (the same decode_step the dry-run lowers).
 Run:  PYTHONPATH=src python examples/serve_lm.py --arch gemma2-27b
 (uses the reduced smoke config on CPU; greedy decoding is deterministic).
 
+Slot serving is state-kind generic — recurrent families route through
+the same engine:
+
+    PYTHONPATH=src python examples/serve_lm.py --arch xlstm-1.3b
+    PYTHONPATH=src python examples/serve_lm.py --arch zamba2-1.2b
+
 ``--kv-layout paged`` serves the same batch through the block-table KV
 cache (optionally with ``--prefill-chunk N`` chunked admission) and
 prints the reserved-vs-used KV bytes next to the tokens — greedy output
-is identical to the slotted default.
+is identical to the slotted default.  Paged is KV-only: recurrent state
+has no seq axis to page.
 """
 import argparse
 
@@ -83,8 +90,10 @@ def main():
                                  cfg.d_model)).astype(np.float32)
 
     if args.kv_layout == "paged":
-        if extra is not None:
-            raise SystemExit("paged serving covers the lm families only")
+        if extra is not None or not registry.supports_paged_serving(cfg):
+            raise SystemExit(
+                "paged serving covers the lm KV families only (recurrent "
+                "state has no seq axis to page)")
         out = run_paged(cfg, mesh, rules, params, prompts, args)
     else:
         out = generate(cfg, mesh, rules, params, prompts, extra,

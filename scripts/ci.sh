@@ -56,6 +56,11 @@ print(f"  paged_parity {h['paged_greedy_parity']}  "
       f"prefix_hit_rate {h['prefix_cache_hit_rate']:.2f}  "
       f"prefill_ratio {h['prefix_prefill_token_ratio']:.2f}  "
       f"preemptions {h['preemptions_timed']}+{h['parity_check_preemptions']}")
+print(f"  recurrent_parity {h['recurrent_greedy_parity']}  "
+      f"recurrent_preempt_parity {h['recurrent_preempt_parity']} "
+      f"(x{h['recurrent_preemptions']})  "
+      f"hybrid_parity {h['hybrid_greedy_parity']}  "
+      f"recurrent_builds_delta {h['recurrent_steady_builds_delta']}")
 if h["steady_builds_delta"] != 0:
     sys.exit("FAIL: serve decode built executables after warmup "
              "(AOT dispatch cache regression)")
@@ -85,5 +90,37 @@ slotted = rep["modes"]["continuous_fused"]
 if paged["kv_reserved_bytes"] >= slotted["kv_reserved_bytes"]:
     sys.exit("FAIL: paged layout did not reserve less KV HBM than the "
              "slotted max_slots*max_len layout")
+if not h["recurrent_greedy_parity"]:
+    sys.exit("FAIL: the recurrent (ssm/xlstm) slot engine diverged from "
+             "generate_static under greedy decoding")
+if not h["hybrid_greedy_parity"]:
+    sys.exit("FAIL: the hybrid (zamba) slot engine diverged from "
+             "generate_static under greedy decoding")
+if not h["recurrent_preempt_parity"] or h["recurrent_preemptions"] <= 0:
+    sys.exit("FAIL: recurrent preempt-and-requeue resume is not "
+             "token-for-token (or the parity drive never preempted)")
+if h["recurrent_steady_builds_delta"] != 0:
+    sys.exit("FAIL: a recurrent/hybrid engine mode built executables "
+             "after warmup (AOT dispatch cache regression)")
+EOF
+
+echo "== docs link check =="
+python - <<'EOF'
+import os, re, sys
+paths = ["README.md"] + sorted(
+    os.path.join("docs", f) for f in os.listdir("docs") if f.endswith(".md"))
+bad = []
+for path in paths:
+    base = os.path.dirname(path)
+    text = open(path).read()
+    for m in re.finditer(r"\[[^\]]*\]\(([^)\s#]+)(#[^)]*)?\)", text):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        if not os.path.exists(os.path.normpath(os.path.join(base, target))):
+            bad.append(f"{path}: {target}")
+if bad:
+    sys.exit("FAIL: broken relative links:\n  " + "\n  ".join(bad))
+print(f"  {len(paths)} files, all relative links resolve")
 EOF
 echo "CI OK — BENCH_overlap.json + BENCH_serve.json written"

@@ -27,6 +27,12 @@ class AotCache:
     caller must show a flat ``builds`` counter — CI asserts this for the
     serve engine (scripts/ci.sh) and the overlap bench tracks it for
     ``SynkFunction``.
+
+    Invariants: ``builds == len(self)`` (every miss stores exactly one
+    entry, nothing is ever evicted); ``builds + cache_hits`` == total
+    ``get`` calls; a key's entry is immutable once stored (``get`` never
+    re-runs ``build`` for a present key, so sharing one cache across
+    engines/benches can never recompile behind a caller's back).
     """
 
     def __init__(self, name: str = "aot"):

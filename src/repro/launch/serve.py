@@ -5,6 +5,17 @@ Continuous-batching engine under a Poisson request stream (the default):
     python -m repro.launch.serve --arch smollm-360m --smoke \
         --requests 16 --rate 20 --max-slots 8
 
+The engine serves every slot-capable family — lm KV caches and the
+recurrent state kinds alike (xlstm's per-lane recurrent state, zamba's
+composed hybrid cache):
+
+    python -m repro.launch.serve --arch xlstm-1.3b --smoke --requests 8
+    python -m repro.launch.serve --arch zamba2-1.2b --smoke --requests 8
+
+The paged-layout knobs (--kv-layout paged, --prefill-chunk,
+--prefix-cache, --admission preempt) are KV-only: recurrent state is
+O(1) in sequence length, so there is no seq axis to page.
+
 Legacy static batch (one fixed batch to completion):
 
     python -m repro.launch.serve --arch gemma2-27b --smoke --engine static
@@ -43,6 +54,12 @@ def run_static(cfg, mesh, rules, params, args, rng):
 
 def run_stream(cfg, mesh, rules, params, args, rng):
     """Drive the continuous-batching engine with a Poisson arrival trace."""
+    kind = registry.state_kind(cfg)
+    if args.kv_layout == "paged" and kind != "kv":
+        raise SystemExit(
+            f"--kv-layout paged: family {cfg.family!r} has state kind "
+            f"{kind!r} — recurrent state has no seq axis to page; "
+            "drop the flag to serve on the slotted layout")
     max_len = args.prompt_len + args.new_tokens + 8
     if args.kv_layout == "paged":
         max_len = -(-max_len // args.page_size) * args.page_size
@@ -88,7 +105,7 @@ def run_stream(cfg, mesh, rules, params, args, rng):
         print(f"req{rid}: plen={c.prompt_len} new={len(c.tokens)} "
               f"{lat:.1f} ms/tok  {c.tokens}")
     print(f"-- {tokens} tokens in {wall:.2f}s = {tokens / wall:.1f} tok/s")
-    print(f"-- kv[{args.kv_layout}]: "
+    print(f"-- state[{engine.stats['state_kind']}/{args.kv_layout}]: "
           f"{engine.stats['kv_peak_used_bytes'] / 2**20:.2f} MiB peak used / "
           f"{engine.kv_reserved_bytes / 2**20:.2f} MiB reserved")
     if args.kv_layout == "paged":

@@ -33,17 +33,50 @@ def get_module(cfg: ArchConfig):
 
 
 def supports_slot_serving(cfg: ArchConfig) -> bool:
-    """Whether the family works with the continuous-batching serve engine
-    (needs ``prefill_slot`` + vector-``cur_index`` decode; the modality
-    frontends feed extra per-request inputs the slot path doesn't carry)."""
-    return cfg.family in ("dense", "moe") and hasattr(get_module(cfg), "prefill_slot")
+    """Whether the family works with the continuous-batching serve engine.
+
+    A family qualifies by exposing ``prefill_slot`` (write one lane of the
+    slotted cache at a traced lane id) and a ``decode_step`` that accepts
+    a vector ``cur_index`` — the cache *contents* don't matter: the lm
+    families serve a seq-axis KV cache, ``ssm`` (xLSTM) a pure per-lane
+    recurrent state, and ``hybrid`` (Zamba) a composed cache carrying
+    both (see :func:`state_kind`).  Only the modality frontends (vlm /
+    audio) are excluded — they feed extra per-request inputs the slot
+    path doesn't carry yet — and fall back to
+    ``serve.loop.generate_static``.
+    """
+    return cfg.family in ("dense", "moe", "ssm", "hybrid") and hasattr(
+        get_module(cfg), "prefill_slot")
 
 
 def supports_paged_serving(cfg: ArchConfig) -> bool:
     """Whether the family supports the paged (block-table) KV layout —
-    needs the paged decode/prefill entry points on top of slot serving."""
+    needs the paged decode/prefill entry points on top of slot serving.
+    Recurrent state kinds never qualify: their per-lane state is O(1) in
+    sequence length, so there is no seq axis to page."""
     return supports_slot_serving(cfg) and hasattr(
         get_module(cfg), "decode_step_paged")
+
+
+def state_kind(cfg: ArchConfig) -> str:
+    """Per-lane decode-state kind the serve engine must manage:
+
+    ``"kv"``         a seq-axis KV cache (lm families) — pageable,
+                     prefix-shareable, lazily overwritten.
+    ``"recurrent"``  O(1)-in-seq per-lane state (ssm/xlstm) — slotted
+                     only, hard-reset at admission, zeroed at eviction.
+    ``"hybrid"``     both at once (zamba): each lane composes a slotted
+                     KV segment with recurrent leaves in one cache dict.
+    """
+    return getattr(get_module(cfg), "STATE_KIND", "kv")
+
+
+def recurrent_leaf_axes(cfg: ArchConfig) -> dict:
+    """{cache leaf name -> lane axis} for the *recurrent* leaves of the
+    family's slot cache (empty for pure-KV families).  The serve engine's
+    decode program zeroes these leaves for inactive lanes."""
+    fn = getattr(get_module(cfg), "recurrent_leaf_axes", None)
+    return fn(cfg) if fn else {}
 
 
 def abstract_params(cfg: ArchConfig):

@@ -179,10 +179,14 @@ def _split_proj(cfg: ArchConfig, proj):
     return z, xs, b, c, dt
 
 
-def _causal_conv(x, w, b, state=None):
+def _causal_conv(x, w, b, state=None, state_len=None):
     """Depthwise causal conv.  x: (B,T,C); w: (K,C); state: (B,K-1,C)|None.
 
-    Returns (y, new_state) — new_state is the last K-1 inputs.
+    Returns (y, new_state) — new_state is the last K-1 inputs.  With
+    ``state_len`` (a traced position, 1 <= state_len <= T) the state is
+    instead the K-1 inputs *preceding position state_len*: the slotted
+    serve engine prefills a right-padded length bucket, and the carried
+    conv state must snapshot the real prompt end, not the padded tail.
     """
     K = w.shape[0]
     if state is None:
@@ -191,13 +195,29 @@ def _causal_conv(x, w, b, state=None):
     y = sum(
         xp[:, i : i + x.shape[1]] * w[i][None, None, :] for i in range(K)
     ) + b[None, None, :]
-    new_state = xp[:, -(K - 1):] if K > 1 else state
+    if K <= 1:
+        new_state = state
+    elif state_len is None:
+        new_state = xp[:, -(K - 1):]
+    else:
+        # xp[state_len : state_len + K - 1] = inputs at positions
+        # [state_len - (K-1), state_len) — bitwise what an exact-length
+        # (T == state_len) prefill would have carried
+        new_state = jax.lax.dynamic_slice_in_dim(xp, state_len, K - 1, axis=1)
     return y, new_state
 
 
 def mamba_block_fwd(cfg: ArchConfig, rules: ShardRules, x, bp, *,
-                    return_state: bool = False):
-    """x: (B,T,D).  Returns x + mamba(x) (and (ssm, conv) final states)."""
+                    return_state: bool = False, valid=None, state_len=None):
+    """x: (B,T,D).  Returns x + mamba(x) (and (ssm, conv) final states).
+
+    ``valid`` ((B,T) bool) marks real positions of a right-padded prompt
+    bucket (slotted serve prefill): padded steps get ``dt = 0``, which is
+    an *exact* identity on the SSD recurrence (decay ``exp(0) = 1``,
+    input weight 0) — the same mechanism ``ssd_chunked`` uses for its own
+    chunk padding — so the carried state is bitwise the state at the end
+    of the real prompt.  ``state_len`` snapshots the conv state there too.
+    """
     s = cfg.ssm
     d_inner, H, _ = mamba_dims(cfg)
     cdt = jnp.dtype(cfg.compute_dtype)
@@ -206,7 +226,8 @@ def mamba_block_fwd(cfg: ArchConfig, rules: ShardRules, x, bp, *,
     z, xs, bmat, cmat, dt = _split_proj(cfg, proj)
     conv_in = jnp.concatenate([xs, bmat, cmat], axis=-1)
     conv_out, conv_state = _causal_conv(
-        conv_in, bp["conv_w"].astype(cdt), bp["conv_b"].astype(cdt)
+        conv_in, bp["conv_w"].astype(cdt), bp["conv_b"].astype(cdt),
+        state_len=state_len,
     )
     conv_out = jax.nn.silu(conv_out)
     xs, bmat, cmat = jnp.split(conv_out, [d_inner, d_inner + s.n_groups * s.state], axis=-1)
@@ -216,6 +237,8 @@ def mamba_block_fwd(cfg: ArchConfig, rules: ShardRules, x, bp, *,
     bm = bmat.reshape(B_, T, s.n_groups, s.state)
     cm = cmat.reshape(B_, T, s.n_groups, s.state)
     dtv = jax.nn.softplus(dt.astype(jnp.float32) + bp["dt_bias"].astype(jnp.float32))
+    if valid is not None:
+        dtv = jnp.where(valid[..., None], dtv, 0.0)
     A = -jnp.exp(bp["A_log"].astype(jnp.float32))
     y, ssm_state = ssd_chunked(xh, dtv, A, bm, cm, chunk=s.chunk, return_state=True)
     y = y + bp["D_skip"].astype(jnp.float32)[None, None, :, None] * xh.astype(jnp.float32)

@@ -159,10 +159,17 @@ def mlstm_decode_step(state, qt, kt, vt, i_pre, f_pre):
 # ---------------------------------------------------------------------------
 
 
-def slstm_scan(x_z, x_i, x_f, x_o, r_z, r_i, r_f, r_o, h0, c0, n0, m0):
+def slstm_scan(x_z, x_i, x_f, x_o, r_z, r_i, r_f, r_o, h0, c0, n0, m0,
+               valid=None):
     """x_*: (B,T,H,Dh) pre-activations from the input path;
     r_*: (H,Dh,Dh) recurrent (block-diagonal head mixing) weights.
     Returns (h (B,T,H,Dh), final_state).
+
+    ``valid`` ((B,T) bool): steps where it is False leave the carried
+    state untouched (``where`` keeps the old carry bitwise), so a
+    right-padded prompt bucket carries out exactly the state at the end
+    of the real prompt — what the slotted serve engine's bucketed prefill
+    needs.
 
     NOTE (EXPERIMENTS.md §Perf E): under SPMD the scan transpose reduces
     dR = h x delta across the batch axes EVERY step. Passing R through the
@@ -172,7 +179,10 @@ def slstm_scan(x_z, x_i, x_f, x_o, r_z, r_i, r_f, r_o, h0, c0, n0, m0):
 
     def step(carry, inp):
         h, c, n, m = carry
-        xz, xi, xf, xo = inp
+        if valid is None:
+            xz, xi, xf, xo = inp
+        else:
+            xz, xi, xf, xo, vt = inp
         zt = jnp.tanh(xz + jnp.einsum("bhd,hde->bhe", h, r_z))
         it = xi + jnp.einsum("bhd,hde->bhe", h, r_i)
         ft = xf + jnp.einsum("bhd,hde->bhe", h, r_f)
@@ -180,12 +190,20 @@ def slstm_scan(x_z, x_i, x_f, x_o, r_z, r_i, r_f, r_o, h0, c0, n0, m0):
         m_new = jnp.maximum(ft + m, it)
         i_s = jnp.exp(it - m_new)
         f_s = jnp.exp(ft + m - m_new)
-        c = f_s * c + i_s * zt
-        n = f_s * n + i_s
-        h = ot * c / jnp.maximum(n, 1e-6)
-        return (h, c, n, m_new), h
+        c_new = f_s * c + i_s * zt
+        n_new = f_s * n + i_s
+        h_new = ot * c_new / jnp.maximum(n_new, 1e-6)
+        if valid is not None:
+            keep = vt[:, None, None]
+            h_new = jnp.where(keep, h_new, h)
+            c_new = jnp.where(keep, c_new, c)
+            n_new = jnp.where(keep, n_new, n)
+            m_new = jnp.where(keep, m_new, m)
+        return (h_new, c_new, n_new, m_new), h_new
 
     xs = tuple(a.transpose(1, 0, 2, 3).astype(jnp.float32) for a in (x_z, x_i, x_f, x_o))
+    if valid is not None:
+        xs = xs + (valid.T,)
     # unroll: gives XLA's AllReduceReassociate a window to merge the
     # per-step dR reductions in the transpose (8 psums -> 1 per window)
     T = x_z.shape[1]
@@ -252,8 +270,18 @@ def slstm_block_specs(cfg: ArchConfig, n: int) -> dict:
 
 
 def mlstm_block_fwd(cfg, rules, x, bp, *, chunk: int = 128, conv_state=None,
-                    cell_state=None, decode: bool = False):
-    """x: (B,T,D) (T=1 with states for decode).  Returns (x', states)."""
+                    cell_state=None, decode: bool = False, valid=None,
+                    state_len=None):
+    """x: (B,T,D) (T=1 with states for decode).  Returns (x', states).
+
+    ``valid`` ((B,T) bool) marks the real positions of a right-padded
+    prompt bucket (slotted serve prefill).  Padded steps are forced to an
+    *exact* cell identity: ``i_pre -> -1e30`` (input contribution
+    ``exp(-1e30 - m) == 0``) and ``f_pre -> 1e30`` (``log_sigmoid == -0.0``,
+    so the log-decay cumsum is bit-unchanged) — the carried (C, n, m) is
+    bitwise the state at the end of the real prompt.  ``state_len``
+    snapshots the conv state at that position.
+    """
     cdt = jnp.dtype(cfg.compute_dtype)
     d_inner, dh, _ = xlstm_dims(cfg)
     H = cfg.n_heads
@@ -261,13 +289,18 @@ def mlstm_block_fwd(cfg, rules, x, bp, *, chunk: int = 128, conv_state=None,
     h = rms_norm(x, bp["ln"], cfg.norm_eps)
     up = jnp.einsum("btd,dk->btk", h, bp["w_up"].astype(cdt))
     a, z = jnp.split(up, 2, axis=-1)
-    c, conv_state = _causal_conv(a, bp["conv_w"].astype(cdt), bp["conv_b"].astype(cdt), conv_state)
+    c, conv_state = _causal_conv(
+        a, bp["conv_w"].astype(cdt), bp["conv_b"].astype(cdt), conv_state,
+        state_len=state_len)
     c = jax.nn.silu(c)
     q = jnp.einsum("btk,kj->btj", c, bp["wq"].astype(cdt)).reshape(B, T, H, dh)
     k = jnp.einsum("btk,kj->btj", c, bp["wk"].astype(cdt)).reshape(B, T, H, dh)
     v = jnp.einsum("btk,kj->btj", a, bp["wv"].astype(cdt)).reshape(B, T, H, dh)
     gates = jnp.einsum("btk,kj->btj", a, bp["w_gates"].astype(cdt)) + bp["b_gates"].astype(cdt)
     i_pre, f_pre = jnp.split(gates, 2, axis=-1)          # (B,T,H)
+    if valid is not None:
+        i_pre = jnp.where(valid[..., None], i_pre, -1e30)
+        f_pre = jnp.where(valid[..., None], f_pre, 1e30)
 
     if decode:
         cell_state, y = mlstm_decode_step(
@@ -285,14 +318,18 @@ def mlstm_block_fwd(cfg, rules, x, bp, *, chunk: int = 128, conv_state=None,
 
 
 def slstm_block_fwd(cfg, rules, x, bp, *, conv_state=None, cell_state=None,
-                    decode: bool = False):
+                    decode: bool = False, valid=None, state_len=None):
+    """``valid``/``state_len``: see :func:`mlstm_block_fwd` — the sLSTM
+    scan freezes its carry on padded steps instead of gate overrides."""
     cdt = jnp.dtype(cfg.compute_dtype)
     D = cfg.d_model
     H = cfg.n_heads
     dh = D // H
     B, T = x.shape[:2]
     h = rms_norm(x, bp["ln"], cfg.norm_eps)
-    c, conv_state = _causal_conv(h, bp["conv_w"].astype(cdt), bp["conv_b"].astype(cdt), conv_state)
+    c, conv_state = _causal_conv(
+        h, bp["conv_w"].astype(cdt), bp["conv_b"].astype(cdt), conv_state,
+        state_len=state_len)
     c = jax.nn.silu(c)
     pre = jnp.einsum("btd,dk->btk", c, bp["w_in"].astype(cdt)) + bp["b_in"].astype(cdt)
     xz, xi, xf, xo = [p.reshape(B, T, H, dh) for p in jnp.split(pre, 4, axis=-1)]
@@ -305,7 +342,8 @@ def slstm_block_fwd(cfg, rules, x, bp, *, conv_state=None, cell_state=None,
     else:
         h0, c0, n0, m0 = cell_state
     rz, ri, rf, ro = (bp[k_].astype(jnp.float32) for k_ in ("r_z", "r_i", "r_f", "r_o"))
-    hs, cell_state = slstm_scan(xz, xi, xf, xo, rz, ri, rf, ro, h0, c0, n0, m0)
+    hs, cell_state = slstm_scan(xz, xi, xf, xo, rz, ri, rf, ro, h0, c0, n0, m0,
+                                valid=valid)
     y = hs.reshape(B, T, D).astype(cdt)
     y = rms_norm(y, bp["out_ln"], cfg.norm_eps)
     g = jnp.einsum("btd,df->btf", y, bp["w_up1"].astype(cdt))

@@ -49,8 +49,19 @@ def _embed(cfg, params, tokens):
     return jnp.take(params["embed"].astype(cdt), tokens, axis=0)
 
 
-def forward(cfg, mesh, rules, params, tokens, *, remat=True, collect=False):
+def forward(cfg, mesh, rules, params, tokens, *, remat=True, collect=False,
+            plen=None):
+    """``plen`` (traced scalar, slot-serving prefill only): tokens beyond
+    position ``plen`` are right-padding of a length bucket.  Hidden states
+    at positions ``< plen`` are untouched (the recurrence is causal); the
+    *collected* states are forced to snapshot position ``plen`` exactly —
+    each block treats padded steps as a cell identity and carries its conv
+    state from the real prompt end (see xlstm.py)."""
     x = _embed(cfg, params, tokens)
+    valid = None
+    if plen is not None:
+        valid = (jnp.arange(tokens.shape[1]) < plen)[None, :]
+        x = jnp.where(valid[..., None], x, 0.0)  # pad activations stay finite
     x = constrain(x, rules, "dp", "sp", None)
     segs, per, _ = _layout(cfg)
     m_states, s_states = [], []
@@ -61,7 +72,8 @@ def forward(cfg, mesh, rules, params, tokens, *, remat=True, collect=False):
             )
 
             def body(x, bp):
-                x, st = mlstm_block_fwd(cfg, rules, x, bp)
+                x, st = mlstm_block_fwd(cfg, rules, x, bp, valid=valid,
+                                        state_len=plen)
                 return x, (st if collect else None)
 
             from .common import remat_wrap
@@ -69,7 +81,8 @@ def forward(cfg, mesh, rules, params, tokens, *, remat=True, collect=False):
             x, st = jax.lax.scan(body, x, seg_bp)
             m_states.append(st)
         sbp = jax.tree.map(lambda p: p[si], params["slstm"])
-        x, sst = slstm_block_fwd(cfg, rules, x, sbp)
+        x, sst = slstm_block_fwd(cfg, rules, x, sbp, valid=valid,
+                                 state_len=plen)
         s_states.append(sst if collect else None)
     x = rms_norm(x, params["ln_f"], cfg.norm_eps)
     if collect:
@@ -95,6 +108,23 @@ def loss_fn(cfg, mesh, rules, params, batch, *, remat=True):
 # ---------------------------------------------------------------------------
 # Serving (stateful, cache = recurrent states; no KV)
 # ---------------------------------------------------------------------------
+
+# serve-engine state kind: every cache leaf is a per-lane recurrent state
+# (O(1) in sequence length — nothing to page, nothing to prefix-share)
+STATE_KIND = "recurrent"
+
+
+def recurrent_leaf_axes(cfg: ArchConfig) -> dict:
+    """Cache leaves that are per-lane *recurrent* state -> their lane axis.
+    The serve engine zeroes these for inactive lanes (recurrent state is
+    overwritten wholesale at admission, so unlike KV it can — and for
+    numerical hygiene should — be hard-reset rather than lazily
+    overwritten)."""
+    return {
+        name: 1
+        for name in ("m_conv", "m_C", "m_n", "m_m",
+                     "s_conv", "s_h", "s_c", "s_n", "s_m")
+    }
 
 
 def make_cache_specs(cfg: ArchConfig, batch: int, max_len: int):
@@ -201,3 +231,32 @@ def decode_step(cfg, mesh, rules, params, cache, tokens, cur_index):
         "s_n": scat[3], "s_m": scat[4],
     }
     return logits, new_cache
+
+
+def prefill_slot(cfg, mesh, rules, params, cache, tokens, slot, plen):
+    """Prefill ONE prompt into lane ``slot`` of the slotted recurrent cache.
+
+    tokens: (1, S_bucket) int32 right-padded to a length bucket; ``plen``
+    (traced scalar) is the real prompt length and ``slot`` (traced scalar)
+    the lane index.  Unlike a KV cache there is no position axis to make
+    padding lazily inert — instead the forward *freezes every recurrence
+    at position plen* (identity gates on padded steps, conv state sliced
+    at plen; see xlstm.py), so the lane's written state is bitwise the
+    exact-length prefill state.  Returns (cache', logits (1, V) at
+    position plen - 1).
+    """
+    hidden, (mst, sst) = forward(
+        cfg, mesh, rules, params, tokens, remat=False, collect=True,
+        plen=plen,
+    )
+    new = _pack_cache(mst, sst)
+
+    def write(c, n):
+        start = (0, slot) + (0,) * (c.ndim - 2)
+        return jax.lax.dynamic_update_slice(c, n.astype(c.dtype), start)
+
+    cache = {name: write(cache[name], new[name]) for name in cache}
+    last = jax.lax.dynamic_index_in_dim(hidden, plen - 1, 1, keepdims=False)
+    cdt = jnp.dtype(cfg.compute_dtype)
+    logits = jnp.einsum("bd,dv->bv", last, params["unembed"].astype(cdt))
+    return cache, logits

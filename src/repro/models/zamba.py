@@ -17,7 +17,8 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from .attention import DecodeSharding, chunked_attention, decode_attention, rope
 from .common import (
-    ParamSpec, ShardRules, constrain, cross_entropy_loss, init_tree, rms_norm,
+    ParamSpec, ShardRules, constrain, cross_entropy_loss, decode_positions,
+    init_tree, rms_norm,
 )
 from .ssm import (
     mamba_block_decode, mamba_block_fwd, mamba_block_specs, mamba_dims,
@@ -106,7 +107,9 @@ def _shared_decode(cfg, mesh, rules, x, x0, sp, kc, vc, cur_index, dec):
     q = jnp.einsum("bd,dk->bk", u, sp["wq"].astype(cdt)).reshape(B, H, dh)
     k = jnp.einsum("bd,dk->bk", u, sp["wk"].astype(cdt)).reshape(B, Hk, dh)
     v = jnp.einsum("bd,dk->bk", u, sp["wv"].astype(cdt)).reshape(B, Hk, dh)
-    pos = jnp.full((B, 1), cur_index, jnp.int32)
+    # scalar (aligned batch) or (B,) vector (slotted serve: per-lane
+    # positions) — decode_attention handles both
+    pos = decode_positions(cur_index, B)
     q = rope(q[:, None], pos, cfg.rope_theta)[:, 0].reshape(B, Hk, H // Hk, dh)
     k = rope(k[:, None], pos, cfg.rope_theta)[:, 0]
     attn, kc, vc = decode_attention(q, kc, vc, k, v, cur_index, sharding=dec)
@@ -124,9 +127,23 @@ def _embed(cfg, params, tokens):
     return jnp.take(params["embed"].astype(cdt), tokens, axis=0)
 
 
-def forward(cfg, mesh, rules, params, tokens, *, remat=True, collect=False):
-    """Returns (hidden, shared_kv list, mamba final states or None)."""
+def forward(cfg, mesh, rules, params, tokens, *, remat=True, collect=False,
+            plen=None):
+    """Returns (hidden, cache dict or None): with ``collect=True`` the
+    second element is ``{"k", "v", "ssm", "conv"}`` — the shared block's
+    stacked KV plus the mamba final states — else ``None``.
+
+    ``plen`` (traced scalar, slot-serving prefill only): positions beyond
+    it are right-padding of a length bucket.  The attention KV of padded
+    positions is inert by causality (standard slotted-cache argument);
+    the *mamba* states are forced to snapshot position ``plen`` exactly
+    (``dt = 0`` identity steps + conv state sliced at plen, see ssm.py).
+    """
     x = _embed(cfg, params, tokens)
+    valid = None
+    if plen is not None:
+        valid = (jnp.arange(tokens.shape[1]) < plen)[None, :]
+        x = jnp.where(valid[..., None], x, 0.0)  # pad activations stay finite
     x0 = x
     x = constrain(x, rules, "dp", "sp", None)
     segs = _segments(cfg)
@@ -139,7 +156,8 @@ def forward(cfg, mesh, rules, params, tokens, *, remat=True, collect=False):
 
         def body(x, bp):
             if collect:
-                x, st = mamba_block_fwd(cfg, rules, x, bp, return_state=True)
+                x, st = mamba_block_fwd(cfg, rules, x, bp, return_state=True,
+                                        valid=valid, state_len=plen)
                 return x, st
             return mamba_block_fwd(cfg, rules, x, bp), None
 
@@ -173,6 +191,18 @@ def loss_fn(cfg, mesh, rules, params, batch, *, remat=True):
 # ---------------------------------------------------------------------------
 # Serving
 # ---------------------------------------------------------------------------
+
+# serve-engine state kind: each lane carries BOTH a slotted KV segment
+# (the shared attention block, seq axis, lazily-overwritten) and per-lane
+# recurrent mamba leaves (no seq axis, hard-reset) — the engine composes
+# the two through one cache dict
+STATE_KIND = "hybrid"
+
+
+def recurrent_leaf_axes(cfg: ArchConfig) -> dict:
+    """The mamba leaves are per-lane recurrent state (lane axis 1); ``k``
+    and ``v`` stay on the KV lifecycle (lazy overwrite)."""
+    return {"ssm": 1, "conv": 1}
 
 
 def make_cache_specs(cfg: ArchConfig, batch: int, max_len: int):
@@ -250,3 +280,30 @@ def decode_step(cfg, mesh, rules, params, cache, tokens, cur_index):
         "conv": jnp.concatenate(conv_out, axis=0),
     }
     return logits, new_cache
+
+
+def prefill_slot(cfg, mesh, rules, params, cache, tokens, slot, plen):
+    """Prefill ONE prompt into lane ``slot`` of the composed hybrid cache.
+
+    tokens: (1, S_bucket) right-padded; ``plen``/``slot`` traced scalars.
+    The lane write covers both state kinds at once: the shared block's
+    K/V land in the lane's seq slice ``[0, S_bucket)`` (padded tail inert
+    by causality + lazy overwrite, exactly the lm slotted argument) and
+    the mamba ``ssm``/``conv`` leaves land as the lane's O(1) recurrent
+    snapshot at position ``plen`` (dt=0 identity padding, see ssm.py).
+    Returns (cache', logits (1, V) at position plen - 1).
+    """
+    hidden, col = forward(
+        cfg, mesh, rules, params, tokens, remat=False, collect=True,
+        plen=plen,
+    )
+
+    def write(c, n):
+        start = (0, slot) + (0,) * (c.ndim - 2)
+        return jax.lax.dynamic_update_slice(c, n.astype(c.dtype), start)
+
+    cache = {name: write(cache[name], col[name]) for name in cache}
+    last = jax.lax.dynamic_index_in_dim(hidden, plen - 1, 1, keepdims=False)
+    cdt = jnp.dtype(cfg.compute_dtype)
+    logits = jnp.einsum("bd,dv->bv", last, params["unembed"].astype(cdt))
+    return cache, logits

@@ -1,5 +1,6 @@
 from .cache import (
     KeyMirror,
+    RecurrentCache,
     bucket_for,
     make_slot_state,
     prompt_buckets,
@@ -29,8 +30,8 @@ from .step import (
 __all__ = [
     "Completion", "EngineConfig", "ServeEngine",
     "ServeConfig", "generate", "generate_static",
-    "KeyMirror", "bucket_for", "make_slot_state", "prompt_buckets",
-    "slot_state_specs",
+    "KeyMirror", "RecurrentCache", "bucket_for", "make_slot_state",
+    "prompt_buckets", "slot_state_specs",
     "BlockAllocator", "SlotTables", "blocks_for", "make_paged_state",
     "paged_state_specs", "prefix_keys",
     "jit_decode_step", "jit_prefill", "sample_tokens",

@@ -1,13 +1,23 @@
-"""Slotted KV cache for the continuous-batching serve engine.
+"""Slotted cache for the continuous-batching serve engine.
 
-The cache is a fixed tensor of ``max_slots`` lanes x ``max_len`` positions
-(per layer/head as the model family dictates).  A *slot* is one lane:
-admission prefills a prompt into a free lane, decode advances every active
-lane by one token per step, and eviction just clears the lane's ``active``
-bit — the lane's stale KV is overwritten lazily (positions are only ever
-attended at ``pos <= length`` and each position is rewritten by the decode
-step before the sequence first attends it, so garbage left by a previous
-occupant is never read).
+For the KV families the cache is a fixed tensor of ``max_slots`` lanes x
+``max_len`` positions (per layer/head as the model family dictates).  A
+*slot* is one lane: admission prefills a prompt into a free lane, decode
+advances every active lane by one token per step, and eviction just
+clears the lane's ``active`` bit — the lane's stale KV is overwritten
+lazily (positions are only ever attended at ``pos <= length`` and each
+position is rewritten by the decode step before the sequence first
+attends it, so garbage left by a previous occupant is never read).
+
+For the *recurrent* state kinds (ssm/xlstm; zamba's mamba leaves) there
+is no position axis — each lane's state is O(1) in sequence length, and
+the lazy-overwrite argument doesn't apply (decode rewrites the WHOLE
+state every step, so an evicted lane's stale state would keep evolving).
+:class:`RecurrentCache` manages those leaves: admission hard-resets a
+lane (``prefill_slot`` writes the complete state snapshot), and the
+decode/prefill programs zero every inactive lane's leaves
+(:meth:`RecurrentCache.freeze`), so "inactive lane state == 0" is an
+invariant the tests sweep.
 
 All per-slot scheduling state lives **on device** in small vectors so the
 decode loop's only host sync is the sampled-token fetch:
@@ -19,6 +29,10 @@ decode loop's only host sync is the sampled-token fetch:
     temps    (N,) f32    per-slot sampling temperature (0 = greedy)
     top_ks   (N,) int32  per-slot top-k mask (0 = off)
     top_ps   (N,) f32    per-slot nucleus threshold (<=0 or >=1 = off)
+    replay   (N,) bool   lane is replaying a preemption resume: its next
+                         decode input is host-forced, so on-device "done"
+                         verdicts are advisory (recurrent freeze must not
+                         zero the lane's state)
     key      PRNG key    split once per engine step (deterministic per seed)
 
 Prompt lengths are **bucketed** (powers of two by default) so one prefill
@@ -68,6 +82,71 @@ def bucket_for(plen: int, buckets: tuple[int, ...]) -> int:
     )
 
 
+class RecurrentCache:
+    """Per-lane recurrent-state manager for the slotted serve engine.
+
+    Wraps :func:`repro.models.registry.recurrent_leaf_axes`: ``leaf_axes``
+    maps each recurrent cache leaf (e.g. xlstm's ``m_C`` or zamba's
+    ``ssm``) to its lane axis.  Falsy for pure-KV families, so engine and
+    program builders can gate on ``if rec:``.
+
+    Lifecycle invariants (asserted in tests/test_serve_engine.py):
+
+    * **admit-time reset** — ``prefill_slot`` overwrites the lane's
+      recurrent leaves wholesale with the state snapshot at the prompt
+      end; nothing of a previous occupant survives.
+    * **evict-time zeroing** — every decode/prefill program passes its
+      post-step ``active`` vector through :meth:`freeze`, which zeroes
+      the recurrent leaves of every inactive lane *in the same
+      executable* (a lane finishing on-device is zeroed in the step that
+      finishes it).  So after any fused-sampling step, an inactive
+      lane's recurrent state is exactly zero — no stale recurrence ever
+      advances, and no inf/NaN can accumulate in dead lanes.
+    """
+
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        self.leaf_axes: dict[str, int] = registry.recurrent_leaf_axes(cfg)
+
+    def __bool__(self) -> bool:
+        return bool(self.leaf_axes)
+
+    def _bcast(self, active, leaf, axis: int):
+        shape = [1] * leaf.ndim
+        shape[axis] = active.shape[0]
+        return active.reshape(shape)
+
+    def freeze(self, cache: dict, active) -> dict:
+        """Zero the recurrent leaves of every lane whose ``active`` bit is
+        False (``(max_slots,)`` bool).  Active lanes pass through bitwise
+        (``where`` with a True predicate)."""
+        out = dict(cache)
+        for name, axis in self.leaf_axes.items():
+            leaf = cache[name]
+            out[name] = jnp.where(
+                self._bcast(active, leaf, axis), leaf,
+                jnp.zeros((), leaf.dtype))
+        return out
+
+    def lane_is_zero(self, cache: dict, slot: int) -> bool:
+        """Host-side check: lane ``slot``'s recurrent leaves are all
+        exactly zero (the evict-time-zeroing invariant)."""
+        return self.lanes_are_zero(cache, [slot])
+
+    def lanes_are_zero(self, cache: dict, slots) -> bool:
+        """``lane_is_zero`` over several lanes with ONE host fetch per
+        leaf (the invariant sweep runs after every fuzzer step — per-lane
+        fetches of whole leaves would multiply transfers)."""
+        slots = list(slots)
+        if not slots:
+            return True
+        for name, axis in self.leaf_axes.items():
+            lanes = np.take(np.asarray(cache[name]), slots, axis=axis)
+            if np.any(lanes != 0):
+                return False
+        return True
+
+
 class KeyMirror:
     """Host-side mirror of the device PRNG key stream.
 
@@ -103,6 +182,7 @@ def sched_specs(mesh, max_slots: int):
         "temps": jax.ShapeDtypeStruct((n,), jnp.float32),
         "top_ks": jax.ShapeDtypeStruct((n,), jnp.int32),
         "top_ps": jax.ShapeDtypeStruct((n,), jnp.float32),
+        "replay": jax.ShapeDtypeStruct((n,), jnp.bool_),
         "key": jax.ShapeDtypeStruct((2,), jnp.uint32),
     }
     sh = {k: rep for k in sds}

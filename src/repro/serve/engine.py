@@ -1,4 +1,4 @@
-"""Continuous-batching serve engine over the slotted or paged KV cache.
+"""Continuous-batching serve engine over slotted or paged per-lane state.
 
 The engine runs one fixed-shape decode executable over ``max_slots`` cache
 lanes.  Requests are admitted into free lanes at *any* decode step (prefill
@@ -6,6 +6,16 @@ through a length-bucketed executable), finished sequences are evicted
 immediately (EOS or token budget), and sampling is fused into the decode
 program — the per-step host sync is a single ``(max_slots,)`` int32 token
 fetch instead of a logits round-trip.
+
+"Per-lane decode state" is an abstraction, not a KV assumption
+(``registry.state_kind``): the lm families carry a seq-axis KV cache,
+``ssm``/xlstm carry pure per-lane recurrent state (O(1) in sequence
+length — admission hard-resets a lane, eviction zeroes it), and zamba's
+``hybrid`` lanes compose BOTH kinds in one cache dict (a slotted KV
+segment for the shared attention block next to recurrent mamba leaves).
+Admission, eviction, preempt-and-requeue, and ``prebuild()`` are
+state-kind-agnostic; only the paged layout below is KV-only (recurrent
+state has no seq axis to page).
 
 Two cache layouts (``EngineConfig.kv_layout``):
 
@@ -66,6 +76,7 @@ from repro.models.common import ShardRules
 from repro.train.step import shardings_for
 from .cache import (
     KeyMirror,
+    RecurrentCache,
     bucket_for,
     make_slot_state,
     prompt_buckets,
@@ -93,6 +104,18 @@ from .step import (
 
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
+    """Static engine configuration.
+
+    Fields that change a *lowered program* (shape/layout/sampler fusion)
+    are folded into the AOT cache key (``ServeEngine._sampler_key``), so
+    engines differing there never share executables; host-side policies
+    (``prefix_cache``, ``admission``) deliberately are not — they reuse
+    the same compiled programs.  Layout fields (``kv_layout`` and below)
+    apply to the ``"kv"`` state kind only; recurrent/hybrid families
+    serve on the slotted layout and reject paged-only options with a
+    ``ValueError`` at construction.
+    """
+
     max_slots: int = 8            # cache lanes decoded per step
     max_len: int = 256            # max per-lane sequence length
     eos_id: int | None = None     # None: budget-only eviction
@@ -188,6 +211,26 @@ class _Pending:
 
 
 class ServeEngine:
+    """Continuous-batching serve engine (see the module docstring).
+
+    Core invariants (swept by :meth:`check_invariants` and the fuzzer):
+
+    * Slot conservation: ``admitted - evicted == len(live)`` == occupied
+      lanes; a lane is owned by at most one request.
+    * Paged block conservation: ``free + live + cached == capacity`` in
+      the :class:`~repro.serve.paged.BlockAllocator`; every mapped block's
+      refcount covers its mapping multiplicity; every written KV position
+      lies inside its lane's mapped region.
+    * Dispatch flatness: after :meth:`prebuild`, the AOT ``builds``
+      counter never grows (CI gates ``steady_builds_delta == 0``).
+    * Recurrent zeroing (non-``kv`` state kinds, fused sampling): an
+      inactive lane's recurrent leaves are exactly zero after the next
+      executable runs — admission hard-resets, eviction zeroes.
+    * Host mirror coherence: the scheduling vectors the host keeps are
+      advanced by the same rules the device applies; the only per-step
+      device read is the sampled-token fetch.
+    """
+
     def __init__(
         self,
         cfg: ArchConfig,
@@ -206,6 +249,8 @@ class ServeEngine:
             )
         if engine.kv_layout not in ("slotted", "paged"):
             raise ValueError(f"unknown kv_layout {engine.kv_layout!r}")
+        self.kind = registry.state_kind(cfg)
+        self.rec = RecurrentCache(cfg)
         self.paged = engine.kv_layout == "paged"
         if not self.paged and engine.prefill_chunk:
             raise ValueError("prefill_chunk requires kv_layout='paged'")
@@ -216,6 +261,11 @@ class ServeEngine:
         if not self.paged and engine.admission != "deficit":
             raise ValueError("admission='preempt' requires kv_layout='paged'")
         if self.paged and not registry.supports_paged_serving(cfg):
+            if self.kind != "kv":
+                raise ValueError(
+                    f"family {cfg.family!r} has state kind {self.kind!r}: "
+                    "per-lane recurrent state is O(1) in sequence length — "
+                    "there is no seq axis to page; use kv_layout='slotted'")
             raise ValueError(
                 f"family {cfg.family!r} does not support paged serving")
         self.cfg, self.mesh, self.rules = cfg, mesh, rules
@@ -290,6 +340,14 @@ class ServeEngine:
         self._active_mirror = np.zeros(engine.max_slots, bool)
         self._active_dirty = False
         self._sched_dirty = False
+        # lanes whose NEXT decode input is a host-forced replay token: the
+        # device's done verdict is advisory there, and the recurrent
+        # freeze must not zero the lane's state (see serve/step.py)
+        self._replay_mirror = np.zeros(engine.max_slots, bool)
+        # last engine operation ("prefill" | "decode" | "preempt") — the
+        # recurrent zeroing invariant is only checkable right after a
+        # decode (host-side evictions zero one executable later)
+        self._last_op: str | None = None
 
     # ------------------------------------------------------------------
     # Executables (AOT via the shared cache)
@@ -514,37 +572,62 @@ class ServeEngine:
             self._tables_dirty = True
         return True
 
+    def preempt(self, slot: int) -> None:
+        """Host-initiated preempt-and-requeue of the live lane ``slot``
+        (any layout / state kind) — the hook an external priority
+        scheduler uses to reclaim a lane for more urgent work.
+
+        Same policy as the paged engine's pool-pressure preemption: the
+        request requeues at the queue FRONT with its prompt, emitted
+        tokens, and sampling state; resume re-prefills ONLY the prompt
+        (prefill-origin state is deterministic given the same bucket
+        executable — bitwise for KV *and* recurrent kinds) and replays
+        the emitted tokens through decode, so the resumed stream is
+        bitwise the unpreempted one (asserted for the ssm family in
+        tests and the serve bench)."""
+        if self.slots[slot] is None:
+            raise ValueError(f"slot {slot} is not serving a request")
+        self._preempt(slot)
+
     def _preempt(self, slot: int) -> None:
         """Evict a live lane back to the host queue: its emitted tokens
         and sampling state requeue as a resume request, the table row
-        nulls, and every block reference drops.  The resume replays the
-        stream bitwise (see :class:`_Pending`)."""
+        nulls (paged), and every block reference drops.  The resume
+        replays the stream bitwise (see :class:`_Pending`)."""
         s = self.slots[slot]
         comp = self.live[s.rid]
+        if self.paged:
+            # min_free damps re-admission until the pool can cover one
+            # block MORE than the lane held — instantly re-admitting the
+            # victim into the slot it just vacated would recompute the
+            # same prefill chunks every step until the evictor actually
+            # frees something.  Capped at the lane's worst case: mapped+1
+            # on a fully-grown victim would otherwise exceed what an
+            # empty pool can offer.
+            wc = blocks_for(s.limit, self.econ.page_size)
+            min_free = min(self.tables.mapped(slot) + 1, wc)
+        else:
+            min_free = 0        # slotted lanes hold no pool resources
         # resumes go to the FRONT: rid order (FCFS priority) is preserved
-        # because successive victims within a step have decreasing rids.
-        # min_free damps re-admission until the pool can cover one block
-        # MORE than the lane held — instantly re-admitting the victim into
-        # the slot it just vacated would recompute the same prefill chunks
-        # every step until the evictor actually frees something
-        wc = blocks_for(s.limit, self.econ.page_size)
+        # because successive victims within a step have decreasing rids
         self.queue.appendleft(_Pending(
             s.rid, s.prompt, comp.max_new_tokens, s.temperature, s.top_k,
             s.top_p, comp.submit_time, resume=True, limit=s.limit,
-            replay=tuple(comp.tokens),
-            # capped at the lane's worst case: mapped+1 on a fully-grown
-            # victim would otherwise exceed what an empty pool can offer
-            min_free=min(self.tables.mapped(slot) + 1, wc)))
+            replay=tuple(comp.tokens), min_free=min_free))
         self.slots[slot] = None
         self._active_mirror[slot] = False
         self._active_dirty = True
-        # preemption exists only under admission="preempt", which keeps no
-        # deficit ledger — _slot_wc is cleared purely for hygiene
-        assert self.econ.admission == "preempt"
-        self._slot_wc[slot] = 0
-        for b in self.tables.release(slot):
-            self.alloc.free(b)
-        self._tables_dirty = True
+        if self.paged:
+            if self.econ.admission == "deficit":
+                # host-initiated preemption under deficit admission: give
+                # back the lane's unallocated commitment (mapped blocks
+                # free below; re-admission re-commits the worst case)
+                self._deficit -= self._slot_wc[slot] - self.tables.mapped(slot)
+            self._slot_wc[slot] = 0
+            for b in self.tables.release(slot):
+                self.alloc.free(b)
+            self._tables_dirty = True
+        self._last_op = "preempt"
         self.counters["preemptions"] += 1
 
     def _push_tables(self) -> None:
@@ -578,6 +661,7 @@ class ServeEngine:
         tps = np.zeros(n, np.float32)
         for i, s in enumerate(self.slots):
             if s is None:
+                self._replay_mirror[i] = False
                 continue
             lengths[i] = s.prefilled if s.generated == 0 \
                 else s.plen + s.generated - 1
@@ -585,12 +669,15 @@ class ServeEngine:
             temps[i] = s.temperature
             tks[i] = s.top_k
             tps[i] = s.top_p
+            # the NEXT decode of this lane forces a recorded replay token
+            self._replay_mirror[i] = s.generated < s.emit_from
         self.state["tokens"] = self._put(self._tok_mirror, jnp.int32)
         self.state["lengths"] = self._put(lengths, jnp.int32)
         self.state["limits"] = self._put(limits, jnp.int32)
         self.state["temps"] = self._put(temps, jnp.float32)
         self.state["top_ks"] = self._put(tks, jnp.int32)
         self.state["top_ps"] = self._put(tps, jnp.float32)
+        self.state["replay"] = self._put(self._replay_mirror, jnp.bool_)
         self.state["active"] = self._put(self._active_mirror, jnp.bool_)
         self._active_dirty = False
 
@@ -785,6 +872,7 @@ class ServeEngine:
             )
         sub = None if self.econ.fused_sampling else self._key_mirror.split()
         s.prefilled = end
+        self._last_op = "prefill"
         self.counters["prefill_chunks"] += 1
         self.counters["prefill_tokens"] += end - start
         self._publish(slot)
@@ -859,21 +947,27 @@ class ServeEngine:
         self.state["active"] = self._put(self._active_mirror, jnp.bool_)
 
     def _note_kv_usage(self, decoding: frozenset = frozenset()) -> None:
-        """Update the KV high-water mark.  Paged reads the allocator's
-        monotone peak (same-step evictions can't hide it); slotted is
-        sampled right after the decode write (``decoding`` = lanes whose
-        new token's KV is on device but not yet in the ``generated``
-        mirror) so eviction-step usage isn't under-counted."""
+        """Update the cache-usage high-water mark.  Paged reads the
+        allocator's monotone peak (same-step evictions can't hide it);
+        slotted KV is sampled right after the decode write (``decoding`` =
+        lanes whose new token's KV is on device but not yet in the
+        ``generated`` mirror) so eviction-step usage isn't under-counted.
+        Recurrent/hybrid lanes cost a fixed per-lane share — their state
+        is O(1) in sequence length — so usage is occupancy-proportional
+        (the hybrid KV segment is folded into that per-lane constant)."""
         if self.paged:
             used = self.alloc.peak_in_use * (
                 self.kv_reserved_bytes // self._num_blocks)
-        else:
+        elif self.kind == "kv":
             per_tok = self.kv_reserved_bytes // (
                 self.econ.max_slots * self.econ.max_len)
             used = per_tok * sum(
                 s.prefilled + max(0, s.generated - 1) + (i in decoding)
                 for i, s in enumerate(self.slots) if s is not None
             )
+        else:
+            per_lane = self.kv_reserved_bytes // self.econ.max_slots
+            used = per_lane * sum(s is not None for s in self.slots)
         self.counters["kv_peak_used_bytes"] = max(
             self.counters["kv_peak_used_bytes"], used)
 
@@ -931,6 +1025,7 @@ class ServeEngine:
                 self._push_active()
             exe = self._decode_exe()
             self.state, out = exe(self.params, self.state)
+            self._last_op = "decode"
             sub = None if self.econ.fused_sampling \
                 else self._key_mirror.split()
             self._note_kv_usage(frozenset(active_slots))
@@ -1004,12 +1099,21 @@ class ServeEngine:
     # Invariants + stats
     # ------------------------------------------------------------------
     def check_invariants(self) -> None:
-        """Allocator/table conservation sweep — the fuzz harness runs this
-        after every step.  Paged only (the slotted layout has no block
-        state): free + live + cached partitions the pool, refcounts cover
-        every mapping, every lane's written KV lies inside its mapped
-        region (so no write can ever route to the null block while live),
-        and deficit admission never over-commits."""
+        """Conservation sweep — the fuzz harness runs this after every
+        step.  Paged engines: free + live + cached partitions the pool,
+        refcounts cover every mapping, every lane's written KV lies
+        inside its mapped region (so no write can ever route to the null
+        block while live), and deficit admission never over-commits.
+        Recurrent/hybrid engines: every unoccupied lane's recurrent
+        leaves are exactly zero (evict-time zeroing), checked when the
+        last executable was a decode step — host-side evictions between
+        executables (preemption, instant-finish prefills) zero one
+        executable later."""
+        if self.rec and self.econ.fused_sampling \
+                and self._last_op == "decode":
+            free = [i for i, s in enumerate(self.slots) if s is None]
+            assert self.rec.lanes_are_zero(self.state["cache"], free), (
+                f"an evicted lane in {free} holds non-zero recurrent state")
         if not self.paged:
             return
         self.alloc.check()
@@ -1040,6 +1144,7 @@ class ServeEngine:
             **self.counters, **self.aot.stats,
             "executables": len(self.aot),
             "kv_layout": self.econ.kv_layout,
+            "state_kind": self.kind,
             "kv_reserved_bytes": self.kv_reserved_bytes,
         }
         if self.paged:

@@ -103,6 +103,13 @@ class BlockAllocator:
     the free list at refcount 0; ``share`` takes a reference on a live or
     cached block (a prefix-cache hit).  ``peak_in_use`` tracks the
     live-block high-water mark for the bench's ``kv_used_bytes``.
+
+    Invariants (swept by :meth:`check` after every fuzzer step): each of
+    the ``capacity`` allocatable blocks is in exactly one of the three
+    states, so ``free + live + cached == capacity``; live refcounts are
+    ``>= 1``; every cached block is indexed and every index entry points
+    at a live-or-cached block (a lookup can never return a freed block);
+    the free list stays sorted (allocation order is deterministic).
     """
 
     def __init__(self, num_blocks: int, block_size: int):

@@ -147,7 +147,8 @@ def sample_tokens(logits, key, temps, top_k: int = 0, top_ks=None, top_ps=None):
 # ---------------------------------------------------------------------------
 
 
-def _decode_program(decode_fn, *, eos_id: int | None, fused: bool):
+def _decode_program(decode_fn, *, eos_id: int | None, fused: bool,
+                    freeze=None):
     """Wrap a cache-layout-specific ``decode_fn(params, state) ->
     (logits, cache')`` with the shared scheduling/sampling bookkeeping.
 
@@ -159,6 +160,11 @@ def _decode_program(decode_fn, *, eos_id: int | None, fused: bool):
     fused=False (benchmark baseline): ``fn(params, state) -> (state', logits)``
     — full logits round-trip to the host, which samples and writes
     ``tokens``/``active`` back before the next step (the old loop's cost).
+
+    ``freeze(cache, active) -> cache`` (recurrent state kinds): applied to
+    the post-step cache with the post-step ``active`` vector, zeroing the
+    recurrent leaves of inactive lanes — evict-time zeroing fused into
+    the decode executable (see :class:`repro.serve.cache.RecurrentCache`).
     """
 
     def fn(params, state):
@@ -167,6 +173,10 @@ def _decode_program(decode_fn, *, eos_id: int | None, fused: bool):
         active = state["active"]
         new_len = state["lengths"] + active.astype(jnp.int32)
         if not fused:
+            # host sampling: eviction lands by host push before the next
+            # step, so inactive lanes zero one executable later
+            if freeze is not None:
+                cache = freeze(cache, active | state["replay"])
             new_state = {**state, "cache": cache, "lengths": new_len, "key": key}
             return new_state, logits
         tok = sample_tokens(
@@ -177,9 +187,15 @@ def _decode_program(decode_fn, *, eos_id: int | None, fused: bool):
         done = active & (new_len >= state["limits"])
         if eos_id is not None:
             done |= active & (tok == eos_id)
+        act_new = active & ~done
+        if freeze is not None:
+            # a replaying lane's "done" is advisory (the host forces the
+            # RECORDED token and may keep the lane alive — e.g. a spurious
+            # EOS resampled at a different key position): keep its state
+            cache = freeze(cache, act_new | state["replay"])
         new_state = {
             **state, "cache": cache, "tokens": tok, "lengths": new_len,
-            "active": active & ~done, "key": key,
+            "active": act_new, "key": key,
         }
         return new_state, tok
 
@@ -188,8 +204,17 @@ def _decode_program(decode_fn, *, eos_id: int | None, fused: bool):
 
 def slot_decode_program(cfg: ArchConfig, mesh: Mesh, rules: ShardRules, *,
                         eos_id: int | None = None, fused: bool = True):
-    """One decode step over every lane of the slotted cache."""
+    """One decode step over every lane of the slotted cache.
+
+    Family-generic: ``mod.decode_step`` advances a KV cache (lm), a pure
+    per-lane recurrent state (ssm/xlstm — ``lengths`` rides along as the
+    logical position but the state is O(1) in it), or zamba's composed
+    hybrid cache.  Recurrent leaves of inactive lanes are zeroed on the
+    way out (:class:`~repro.serve.cache.RecurrentCache.freeze`)."""
+    from .cache import RecurrentCache
+
     mod = registry.get_module(cfg)
+    rec = RecurrentCache(cfg)
 
     def decode_fn(params, state):
         return mod.decode_step(
@@ -197,7 +222,8 @@ def slot_decode_program(cfg: ArchConfig, mesh: Mesh, rules: ShardRules, *,
             state["tokens"], state["lengths"],
         )
 
-    return _decode_program(decode_fn, eos_id=eos_id, fused=fused)
+    return _decode_program(decode_fn, eos_id=eos_id, fused=fused,
+                           freeze=rec.freeze if rec else None)
 
 
 def paged_decode_program(cfg: ArchConfig, mesh: Mesh, rules: ShardRules, *,
@@ -245,8 +271,18 @@ def slot_prefill_program(cfg: ArchConfig, mesh: Mesh, rules: ShardRules, *,
     top_k, top_p) -> (state', tok (1,))`` with fused sampling, or
     ``-> (state', logits)`` when ``fused=False`` (host samples and writes
     tokens/active back).
+
+    Family-generic like :func:`slot_decode_program`: ``mod.prefill_slot``
+    writes a KV lane slice (lm), a per-lane recurrent snapshot at
+    position ``plen`` (ssm/xlstm), or both (zamba).  Recurrent leaves are
+    re-zeroed for inactive lanes on the way out, so a request that
+    finishes *at admission* (budget 1 / instant EOS) leaves its lane
+    clean.
     """
+    from .cache import RecurrentCache
+
     mod = registry.get_module(cfg)
+    rec = RecurrentCache(cfg)
 
     def fn(params, state, prompt, slot, plen, limit, temp, top_k, top_p):
         key, sub = jax.random.split(state["key"])
@@ -264,8 +300,25 @@ def slot_prefill_program(cfg: ArchConfig, mesh: Mesh, rules: ShardRules, *,
             "top_ps": upd(state["top_ps"], top_p),
             "key": key,
         }
+        # evict-time zeroing for OTHER lanes only: the slot being prefilled
+        # must keep its fresh state even if its sampled token reads as done
+        # — a preempted lane's resume forces the RECORDED token host-side
+        # and keeps decoding, so zeroing on a (possibly resampled) EOS here
+        # would destroy the state the replay is about to advance.  A lane
+        # that really finishes at admission is zeroed by the next
+        # executable's freeze instead (one-executable lag).  ``replay``
+        # lanes are protected here exactly as in the decode program: a
+        # mid-replay lane's device ``active`` bit can be stale-False (a
+        # spurious EOS the host overrides only at the next sched push,
+        # which happens AFTER admissions run), and an admission prefill
+        # in that window must not zero the state the replay will advance.
+        keep_self = jnp.arange(state["active"].shape[0]) == slot
+        keep = state["replay"] | keep_self
         if not fused:
             new_state["active"] = upd(state["active"], plen < limit)
+            if rec:
+                new_state["cache"] = rec.freeze(
+                    new_state["cache"], new_state["active"] | keep)
             return new_state, logits
         tok = sample_tokens(
             logits, sub, jnp.reshape(temp, (1,)),
@@ -276,6 +329,9 @@ def slot_prefill_program(cfg: ArchConfig, mesh: Mesh, rules: ShardRules, *,
             alive &= tok[0] != eos_id
         new_state["tokens"] = upd(state["tokens"], tok[0])
         new_state["active"] = upd(state["active"], alive)
+        if rec:
+            new_state["cache"] = rec.freeze(
+                new_state["cache"], new_state["active"] | keep)
         return new_state, tok
 
     return fn

@@ -14,6 +14,7 @@ from repro.core.aot import AotCache
 from repro.models import registry
 from repro.serve import (
     EngineConfig,
+    RecurrentCache,
     ServeConfig,
     ServeEngine,
     bucket_for,
@@ -35,6 +36,30 @@ def setup():
         get_smoke_config("smollm-360m"), compute_dtype="float32")
     params = registry.get_module(cfg).init(cfg, jax.random.PRNGKey(0))
     return cfg, mesh, rules, params
+
+
+def _family_setup(arch: str):
+    from repro.launch.mesh import single_device_mesh
+    from repro.models.common import ShardRules
+
+    mesh = single_device_mesh()
+    rules = ShardRules.for_mesh(mesh)
+    cfg = dataclasses.replace(
+        get_smoke_config(arch), compute_dtype="float32")
+    params = registry.get_module(cfg).init(cfg, jax.random.PRNGKey(0))
+    return cfg, mesh, rules, params
+
+
+@pytest.fixture(scope="module")
+def rec_setup():
+    """xLSTM smoke config — the ``ssm`` family, state kind 'recurrent'."""
+    return _family_setup("xlstm-1.3b")
+
+
+@pytest.fixture(scope="module")
+def hyb_setup():
+    """Zamba2 smoke config — the ``hybrid`` family (KV + recurrent)."""
+    return _family_setup("zamba2-1.2b")
 
 
 def _prompts(cfg, rng, lens):
@@ -387,3 +412,174 @@ def test_host_vs_fused_sampler_parity(setup):
                        EngineConfig(max_slots=2, max_len=32, seed=4))
     greedy = [list(t) for t in solo.run(prompts[:2], max_new_tokens=5)]
     assert fused[:2] != greedy
+
+
+# ---------------------------------------------------------------------------
+# Recurrent state kinds: ssm (xLSTM) + hybrid (Zamba)
+# ---------------------------------------------------------------------------
+
+
+def _staggered_vs_solo(cfg, mesh, rules, params):
+    """Shared body: 3 requests through 2 lanes (the third admitted only
+    when a lane frees, its batchmate mid-sequence at a different length)
+    must reproduce each request's solo ``generate_static`` stream."""
+    rng = np.random.default_rng(1)
+    lens = [5, 11, 8]
+    budgets = [7, 3, 5]
+    prompts = _prompts(cfg, rng, lens)
+    solo = [
+        generate_static(cfg, mesh, rules, params, p[None],
+                        serve=ServeConfig(max_new_tokens=b))[0]
+        for p, b in zip(prompts, budgets)
+    ]
+    eng = ServeEngine(cfg, mesh, rules, params,
+                      EngineConfig(max_slots=2, max_len=32))
+    rids = [eng.submit(p, max_new_tokens=b) for p, b in zip(prompts, budgets)]
+    eng.drain()
+    for r, want in zip(rids, solo):
+        np.testing.assert_array_equal(
+            np.asarray(eng.completions[r].tokens), np.asarray(want))
+    return eng
+
+
+def test_recurrent_staggered_matches_solo_static(rec_setup):
+    """The continuous-batching property for a RECURRENT cache: lanes are
+    per-lane (ssm_state, conv_state)/mLSTM-state leaves with no seq axis,
+    admission snapshots the state at the real prompt end despite bucket
+    padding, and staggered decode matches solo static token-for-token."""
+    eng = _staggered_vs_solo(*rec_setup)
+    assert eng.kind == "recurrent"
+    assert eng.stats["state_kind"] == "recurrent"
+
+
+def test_hybrid_staggered_matches_solo_static(hyb_setup):
+    """Zamba lanes compose BOTH state kinds — a slotted KV segment for the
+    shared attention block and recurrent mamba leaves — through one cache
+    dict; the engine serves them with the same admission/eviction flow."""
+    eng = _staggered_vs_solo(*hyb_setup)
+    assert eng.kind == "hybrid"
+    # the composed cache really holds both kinds
+    assert set(eng.rec.leaf_axes) == {"ssm", "conv"}
+    assert "k" in eng.state["cache"] and "v" in eng.state["cache"]
+
+
+@pytest.mark.parametrize("fixture", ["rec_setup", "hyb_setup"])
+def test_recurrent_cache_admit_evict_zeroing(fixture, request):
+    """RecurrentCache lifecycle invariants: admission hard-resets a lane
+    (fresh snapshot, nothing of the previous occupant), decode freezes
+    inactive lanes at zero (evict-time zeroing fused into the decode
+    executable), and a drained engine's recurrent leaves are all-zero."""
+    cfg, mesh, rules, params = request.getfixturevalue(fixture)
+    rng = np.random.default_rng(2)
+    eng = ServeEngine(cfg, mesh, rules, params,
+                      EngineConfig(max_slots=2, max_len=32))
+    assert eng.rec and set(eng.rec.leaf_axes) == set(
+        registry.recurrent_leaf_axes(cfg))
+
+    # all lanes start zero
+    for i in range(2):
+        assert eng.rec.lane_is_zero(eng.state["cache"], i)
+
+    # run a short request next to a long one: the short lane evicts while
+    # the long one keeps decoding — its lane must read exactly zero while
+    # the survivor's state is non-zero
+    p_long, p_short = _prompts(cfg, rng, [6, 4])
+    rid_long = eng.submit(p_long, max_new_tokens=10)
+    rid_short = eng.submit(p_short, max_new_tokens=2)
+    steps = 0
+    while rid_short not in eng.completions:
+        assert eng.step()
+        eng.check_invariants()
+        steps += 1
+        assert steps < 50
+    assert rid_long in eng.live                 # the long lane still decodes
+    short_slot = next(i for i, s in enumerate(eng.slots) if s is None)
+    live_slot = 1 - short_slot
+    assert eng.rec.lane_is_zero(eng.state["cache"], short_slot)
+    assert not eng.rec.lane_is_zero(eng.state["cache"], live_slot)
+
+    # admit-time reset: a new request takes over the freed lane and its
+    # stream matches solo static — no state of the previous occupant leaks
+    p_new = _prompts(cfg, rng, [7])[0]
+    want = generate_static(cfg, mesh, rules, params, p_new[None],
+                           serve=ServeConfig(max_new_tokens=4))[0]
+    rid_new = eng.submit(p_new, max_new_tokens=4)
+    eng.drain()
+    np.testing.assert_array_equal(
+        np.asarray(eng.completions[rid_new].tokens), np.asarray(want))
+
+    # evict-time zeroing: a drained engine holds all-zero recurrent state
+    for i in range(2):
+        assert eng.rec.lane_is_zero(eng.state["cache"], i)
+    assert eng.counters["evicted"] == 3
+
+
+def test_recurrent_preempt_resume_parity(rec_setup):
+    """Preempt-and-requeue for the ssm family: a lane preempted mid-decode
+    resumes by re-prefilling ONLY the prompt (bucketed prefill of a
+    recurrent state is deterministic, so the snapshot is bitwise) and
+    replaying its emitted tokens through decode — the PR-4 policy — and
+    the resumed stream equals the unpreempted one token-for-token."""
+    cfg, mesh, rules, params = rec_setup
+    rng = np.random.default_rng(3)
+    prompts = _prompts(cfg, rng, [6, 9])
+
+    def run(preempt_at):
+        eng = ServeEngine(cfg, mesh, rules, params,
+                          EngineConfig(max_slots=2, max_len=32))
+        rids = [eng.submit(p, max_new_tokens=b)
+                for p, b in zip(prompts, [8, 5])]
+        steps = 0
+        while eng.has_work():
+            eng.step()
+            eng.check_invariants()
+            steps += 1
+            if steps == preempt_at and eng.slots[0] is not None:
+                eng.preempt(0)
+        return [list(eng.completions[r].tokens) for r in rids], eng
+
+    want, _ = run(preempt_at=0)
+    got, eng = run(preempt_at=3)
+    assert eng.counters["preemptions"] == 1
+    assert eng.counters["resumed"] == 1
+    assert eng.counters["replayed_tokens"] > 0
+    assert got == want
+    # the preempted request's completion is one stream (no re-emission of
+    # replayed tokens)
+    assert len(got[0]) == 8
+
+
+def test_recurrent_rejects_paged_options(rec_setup):
+    """Recurrent state has no seq axis: every paged-only option must fail
+    loudly at engine construction."""
+    cfg, mesh, rules, params = rec_setup
+    with pytest.raises(ValueError, match="no seq axis"):
+        ServeEngine(cfg, mesh, rules, params,
+                    EngineConfig(max_slots=1, max_len=32, kv_layout="paged"))
+    for bad in (dict(prefill_chunk=8), dict(prefix_cache=True),
+                dict(admission="preempt")):
+        with pytest.raises(ValueError, match="paged"):
+            ServeEngine(cfg, mesh, rules, params,
+                        EngineConfig(max_slots=1, max_len=32, **bad))
+
+
+def test_recurrent_generate_wrapper_and_bucket_reuse(rec_setup):
+    """generate() routes the ssm family through the engine now (it used to
+    fall back to the static loop) and matches it token-for-token; repeat
+    admissions in the same bucket build nothing new."""
+    cfg, mesh, rules, params = rec_setup
+    rng = np.random.default_rng(4)
+    prompts = np.stack(_prompts(cfg, rng, [8, 8, 8]))
+    a = generate(cfg, mesh, rules, params, prompts,
+                 serve=ServeConfig(max_new_tokens=5))
+    b = generate_static(cfg, mesh, rules, params, prompts,
+                        serve=ServeConfig(max_new_tokens=5))
+    np.testing.assert_array_equal(a, b)
+
+    eng = ServeEngine(cfg, mesh, rules, params,
+                      EngineConfig(max_slots=2, max_len=64))
+    eng.run(_prompts(cfg, rng, [3, 9, 14]), max_new_tokens=2)
+    builds = eng.stats["builds"]
+    assert builds == 2                          # decode + prefill@16
+    eng.run(_prompts(cfg, rng, [5, 12, 7, 2]), max_new_tokens=3)
+    assert eng.stats["builds"] == builds        # steady state: no builds
