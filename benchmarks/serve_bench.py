@@ -67,6 +67,16 @@ Modes:
                       block) with recurrent mamba leaves — one cache
                       dict, same admission/eviction flow
                       (``headline.hybrid_greedy_parity``).
+    continuous_chaos  the paged engine under a seeded ``FaultPlan``
+                      (injected non-finite logits, failed allocs, prefill
+                      and sched-push faults) with a generous retry budget:
+                      every request must still terminate ``ok`` with
+                      greedy tokens identical to the fault-free drive of
+                      the same trace, while dispatching purely from the
+                      prebuilt cache.  Reports ``recovery_overhead`` (wall
+                      vs the fault-free drive) — the cost of quarantine +
+                      preempt-and-replay recovery (ci.sh gates faults
+                      fired > 0, parity, and builds-flat).
 
 Every continuous mode reports ``kv_reserved_bytes`` (cache HBM actually
 allocated) and ``kv_peak_used_bytes`` (high-water mark of positions/blocks
@@ -290,6 +300,56 @@ def run_continuous(cfg, mesh, rules, params, trace: list[_Req], *,
                     timed=timed, stats=engine.stats)
 
 
+def run_chaos(cfg, mesh, rules, params, trace: list[_Req], *,
+              max_slots: int, max_len: int, page_size: int,
+              num_blocks: int, aot=None) -> dict:
+    """Fault-injected drive of the paged engine vs the identical fault-
+    free drive: all requests must recover to ``ok`` with bitwise greedy
+    tokens (quarantine + preempt-and-replay), and the recovery overhead
+    is the walls' ratio.  ``max_retries`` is generous so injected faults
+    exhaust the budget only with astronomically bad luck."""
+    from repro.serve import EngineConfig, FaultPlan, ServeEngine
+
+    ec = EngineConfig(max_slots=max_slots, max_len=max_len,
+                      kv_layout="paged", page_size=page_size,
+                      num_blocks=num_blocks, max_retries=8)
+
+    def drive(faults):
+        eng = ServeEngine(cfg, mesh, rules, params, ec, aot=aot,
+                          faults=faults)
+        eng.prebuild()
+        b0 = eng.stats["builds"]
+        rids = [eng.submit(r.prompt, max_new_tokens=r.budget)
+                for r in trace]
+        t0 = time.perf_counter()
+        eng.drain()
+        return eng, rids, time.perf_counter() - t0, \
+            eng.stats["builds"] - b0
+
+    clean_eng, rids, clean_wall, _ = drive(None)
+    plan = FaultPlan(0, {"decode_logits": 0.02, "prefill": 0.05,
+                         "alloc": 0.02, "sched_push": 0.05})
+    eng, rids2, wall, builds_delta = drive(plan)
+
+    want = [list(clean_eng.completions[r].tokens) for r in rids]
+    got = [list(eng.completions[r].tokens) for r in rids2]
+    statuses = [eng.completions[r].status for r in rids2]
+    tokens = sum(len(t) for t in got)
+    return {
+        "tokens_per_s": tokens / wall, "useful_tokens": tokens,
+        "wall_s": wall, "clean_wall_s": clean_wall,
+        "recovery_overhead": wall / clean_wall,
+        "faults_fired": plan.total_fired,
+        "fault_sites": plan.stats(),
+        "faults_detected": eng.counters["faults_detected"],
+        "retries": eng.counters["retries"],
+        "preemptions": eng.counters["preemptions"],
+        "all_ok": all(s == "ok" for s in statuses),
+        "token_parity": got == want,
+        "steady_builds_delta": builds_delta,
+    }
+
+
 def check_recurrent_parity(cfg, trace: list[_Req], *, max_slots: int,
                            max_len: int, preempt_tick: int = 3) -> dict:
     """Greedy parity of the recurrent/hybrid slot engine vs the legacy
@@ -493,6 +553,10 @@ def main(argv=None) -> dict:
         max_len=max_len, fused=True, kv_layout="paged",
         page_size=page_size, num_blocks=preempt_blocks,
         admission="preempt", aot=aot)
+    report["modes"]["continuous_chaos"] = run_chaos(
+        cfg, mesh, rules, params, trace, max_slots=max_slots,
+        max_len=max_len, page_size=page_size, num_blocks=num_blocks,
+        aot=aot)
 
     # --- recurrent state kinds: the SAME engine over ssm + hybrid ------
     # f32 compute so the engine-vs-generate_static parity checks are
@@ -548,6 +612,17 @@ def main(argv=None) -> dict:
             / max(shared["timed"]["prefill_tokens"], 1)),
         "preemptions_timed": (
             report["modes"]["continuous_paged_preempt"]["timed"]["preemptions"]),
+        # chaos: injected faults must all recover — same greedy tokens as
+        # the fault-free drive, no retraces, bounded overhead
+        "chaos_faults_fired": (
+            report["modes"]["continuous_chaos"]["faults_fired"]),
+        "chaos_all_ok": report["modes"]["continuous_chaos"]["all_ok"],
+        "chaos_token_parity": (
+            report["modes"]["continuous_chaos"]["token_parity"]),
+        "chaos_recovery_overhead": (
+            report["modes"]["continuous_chaos"]["recovery_overhead"]),
+        "chaos_steady_builds_delta": (
+            report["modes"]["continuous_chaos"]["steady_builds_delta"]),
         # recurrent/hybrid: slot serving generalized beyond the lm
         # families — engine-vs-static greedy parity, preempt-resume
         # parity (ssm), and dispatch flatness across both new modes

@@ -15,6 +15,7 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 echo "== tier-1 suite (8 forced host devices; 200-episode engine fuzz) =="
 XLA_FLAGS="--xla_force_host_platform_device_count=8" \
   ENGINE_FUZZ_EPISODES="${ENGINE_FUZZ_EPISODES:-200}" \
+  CHAOS_FUZZ_EPISODES="${CHAOS_FUZZ_EPISODES:-6}" \
   python -m pytest -x -q "$@"
 
 echo "== overlap bench (smoke) =="
@@ -61,6 +62,10 @@ print(f"  recurrent_parity {h['recurrent_greedy_parity']}  "
       f"(x{h['recurrent_preemptions']})  "
       f"hybrid_parity {h['hybrid_greedy_parity']}  "
       f"recurrent_builds_delta {h['recurrent_steady_builds_delta']}")
+print(f"  chaos: faults {h['chaos_faults_fired']}  all_ok {h['chaos_all_ok']}  "
+      f"parity {h['chaos_token_parity']}  "
+      f"overhead {h['chaos_recovery_overhead']:.2f}x  "
+      f"builds_delta {h['chaos_steady_builds_delta']}")
 if h["steady_builds_delta"] != 0:
     sys.exit("FAIL: serve decode built executables after warmup "
              "(AOT dispatch cache regression)")
@@ -102,6 +107,18 @@ if not h["recurrent_preempt_parity"] or h["recurrent_preemptions"] <= 0:
 if h["recurrent_steady_builds_delta"] != 0:
     sys.exit("FAIL: a recurrent/hybrid engine mode built executables "
              "after warmup (AOT dispatch cache regression)")
+if h["chaos_faults_fired"] <= 0:
+    sys.exit("FAIL: the chaos mode injected no faults — its recovery "
+             "gates are vacuous (FaultPlan rates/seed no longer fire)")
+if not h["chaos_all_ok"]:
+    sys.exit("FAIL: a fault-injected request did not recover to status "
+             "'ok' (retry/quarantine path regression)")
+if not h["chaos_token_parity"]:
+    sys.exit("FAIL: fault recovery changed greedy tokens — preempt-and-"
+             "replay resume is no longer bitwise")
+if h["chaos_steady_builds_delta"] != 0:
+    sys.exit("FAIL: fault recovery built new executables — retries must "
+             "reuse the prebuilt bucketed programs")
 EOF
 
 echo "== docs link check =="

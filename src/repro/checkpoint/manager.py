@@ -52,6 +52,15 @@ class CheckpointManager:
         self.keep_k = keep_k
         os.makedirs(directory, exist_ok=True)
         self._thread: threading.Thread | None = None
+        # a failed async _write parks its exception here; wait() (and so
+        # the next save()) re-raises it instead of letting the trainer
+        # believe the checkpoint exists
+        self._error: BaseException | None = None
+        # a .tmp-<step> dir is a save that died before its atomic rename:
+        # never restorable, only wasted disk — sweep on init
+        for d in os.listdir(directory):
+            if d.startswith(".tmp-"):
+                shutil.rmtree(os.path.join(directory, d), ignore_errors=True)
 
     # ------------------------------------------------------------------
     def save(self, step: int, state: dict, *, blocking: bool = True,
@@ -66,14 +75,26 @@ class CheckpointManager:
             self._write(step, host, meta)
         else:
             self._thread = threading.Thread(
-                target=self._write, args=(step, host, meta), daemon=True
+                target=self._write_guarded, args=(step, host, meta),
+                daemon=True
             )
             self._thread.start()
 
     def wait(self) -> None:
+        """Join any in-flight async save; re-raise its failure if it had
+        one (a daemon thread's exception is otherwise silently lost)."""
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise RuntimeError("async checkpoint save failed") from err
+
+    def _write_guarded(self, step: int, host: dict, meta: dict) -> None:
+        try:
+            self._write(step, host, meta)
+        except BaseException as e:  # noqa: BLE001 - surfaced at wait()
+            self._error = e
 
     def _write(self, step: int, host: dict, meta: dict) -> None:
         tmp = os.path.join(self.dir, f".tmp-{step}")
@@ -106,6 +127,20 @@ class CheckpointManager:
     def latest_step(self) -> int | None:
         steps = self.all_steps()
         return steps[-1] if steps else None
+
+    def load_meta(self, step: int | None = None) -> tuple[int, dict]:
+        """Read a checkpoint's ``meta.json`` (latest when ``step`` is
+        None) without touching its array groups — the host-state side
+        channel ``save(extra_meta=...)`` rides (engine snapshots, flat-
+        optimizer layout).  Returns ``(step, meta)``."""
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        path = os.path.join(self.dir, f"step_{step:010d}")
+        with open(os.path.join(path, "meta.json")) as f:
+            meta = json.load(f)
+        return meta["step"], meta
 
     def restore(self, template: dict, step: int | None = None,
                 shard_fn: Callable[[Any], Any] | None = None) -> tuple[int, dict]:

@@ -32,7 +32,10 @@ from repro.configs import ARCH_IDS, get_config, get_smoke_config
 from repro.launch.mesh import local_mesh, make_production_mesh, single_device_mesh
 from repro.models import registry
 from repro.models.common import ShardRules
-from repro.serve import EngineConfig, ServeConfig, ServeEngine, generate_static
+from repro.serve import (
+    FAULT_SITES, EngineConfig, FaultPlan, ServeConfig, ServeEngine,
+    generate_static,
+)
 
 
 def run_static(cfg, mesh, rules, params, args, rng):
@@ -63,6 +66,10 @@ def run_stream(cfg, mesh, rules, params, args, rng):
     max_len = args.prompt_len + args.new_tokens + 8
     if args.kv_layout == "paged":
         max_len = -(-max_len // args.page_size) * args.page_size
+    faults = None
+    if args.chaos_rate > 0:
+        faults = FaultPlan(args.chaos_seed,
+                           {site: args.chaos_rate for site in FAULT_SITES})
     engine = ServeEngine(
         cfg, mesh, rules, params,
         EngineConfig(
@@ -75,7 +82,9 @@ def run_stream(cfg, mesh, rules, params, args, rng):
             prefill_chunk=args.prefill_chunk,
             prefix_cache=args.prefix_cache,
             admission=args.admission,
+            max_retries=args.max_retries,
         ),
+        faults=faults,
     )
     arrivals = np.cumsum(rng.exponential(1.0 / args.rate, args.requests))
     prompts = [
@@ -91,7 +100,8 @@ def run_stream(cfg, mesh, rules, params, args, rng):
         now = time.perf_counter() - t0
         while i < len(prompts) and arrivals[i] <= now:
             engine.submit(prompts[i], max_new_tokens=int(budgets[i]),
-                          temperature=args.temperature, rid=i)
+                          temperature=args.temperature, rid=i,
+                          deadline_s=args.deadline_s)
             i += 1
         if not engine.step() and i < len(prompts):
             time.sleep(max(0.0, t0 + arrivals[i] - time.perf_counter()))
@@ -101,9 +111,11 @@ def run_stream(cfg, mesh, rules, params, args, rng):
     for rid in range(len(prompts)):
         c = engine.completions[rid]
         tokens += len(c.tokens)
-        lat = (c.finish_time - c.submit_time) / len(c.tokens) * 1e3
-        print(f"req{rid}: plen={c.prompt_len} new={len(c.tokens)} "
-              f"{lat:.1f} ms/tok  {c.tokens}")
+        lat = (f"{(c.finish_time - c.submit_time) / len(c.tokens) * 1e3:.1f}"
+               " ms/tok" if c.tokens else "-")
+        note = f"  [{c.error}]" if c.error else ""
+        print(f"req{rid}: {c.status:9s} plen={c.prompt_len} "
+              f"new={len(c.tokens)} {lat}  {c.tokens}{note}")
     print(f"-- {tokens} tokens in {wall:.2f}s = {tokens / wall:.1f} tok/s")
     print(f"-- state[{engine.stats['state_kind']}/{args.kv_layout}]: "
           f"{engine.stats['kv_peak_used_bytes'] / 2**20:.2f} MiB peak used / "
@@ -114,6 +126,14 @@ def run_stream(cfg, mesh, rules, params, args, rng):
               f"({s['prefix_hit_tokens']}/{s['prefix_lookup_tokens']} tokens, "
               f"{s['cow_copies']} COW)  preemptions {s['preemptions']} "
               f"(resumed {s['resumed']})")
+    s = engine.stats
+    print(f"-- status: ok {s['status_ok']} timeout {s['status_timeout']} "
+          f"cancelled {s['status_cancelled']} failed {s['status_failed']}  "
+          f"retries {s['retries']}")
+    if faults is not None:
+        print(f"-- chaos[seed {args.chaos_seed}]: injected "
+              f"{s['faults_injected']} detected {s['faults_detected']}  "
+              f"{faults.stats()}")
     print(f"-- stats: {engine.stats}")
 
 
@@ -148,6 +168,20 @@ def main():
     ap.add_argument("--prefix-cache", action="store_true",
                     help="refcounted shared-prefix block reuse (paged): "
                          "repeated prompt prefixes skip prefill")
+    # robustness knobs (continuous engine)
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="per-request TTL from submission; expired requests "
+                         "finish with status 'timeout' keeping emitted "
+                         "tokens")
+    ap.add_argument("--max-retries", type=int, default=2,
+                    help="bounded retries (preempt-and-replay) before a "
+                         "faulting request terminates 'failed'")
+    ap.add_argument("--chaos-rate", type=float, default=0.0,
+                    help=">0: inject seeded faults at every fault site "
+                         "with this per-consult probability (exercises "
+                         "quarantine + retry recovery)")
+    ap.add_argument("--chaos-seed", type=int, default=0,
+                    help="FaultPlan seed (reproducible fault schedules)")
     ap.add_argument("--admission", choices=("deficit", "preempt"),
                     default="deficit",
                     help="deficit: gate admission on worst-case block "

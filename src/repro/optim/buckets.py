@@ -35,6 +35,7 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro import compat
 from .flat import FlatLayout, flat_adam_update
@@ -242,6 +243,72 @@ def scatter_flat(buf, buckets: BucketLayout, index):
         )
         pieces.append(part)
     return jnp.concatenate(pieces) if len(pieces) > 1 else pieces[0]
+
+
+# ---------------------------------------------------------------------------
+# Elastic restore: host-side reshard of scattered buffers across dp sizes
+# ---------------------------------------------------------------------------
+# A checkpointed ZeRO m/v buffer is the GLOBAL scattered array: worker-
+# major segments (each ``local_total`` long), every segment bucket-major
+# with piece ``w`` of each padded bucket.  That layout bakes in ``(bucket
+# boundaries, n_shards)``, so restoring a dp=8 checkpoint onto dp=4 must
+# first undo the old scatter and re-apply the new one.  Pure host-numpy
+# data movement — bitwise, no arithmetic.
+
+
+def unscatter_flat(buf, buckets: BucketLayout) -> np.ndarray:
+    """Global scattered buffer -> the canonical flat buffer (length
+    ``buckets.total``), dropping per-bucket padding."""
+    buf = np.asarray(buf)
+    if buf.shape != (buckets.scattered_total,):
+        raise ValueError(
+            f"scattered buffer has shape {buf.shape}, layout wants "
+            f"({buckets.scattered_total},)")
+    n = buckets.n_shards
+    workers = buf.reshape(n, buckets.local_total)
+    parts, off = [], 0
+    for size, pad_to in zip(buckets.sizes, buckets.padded):
+        k = pad_to // n
+        # worker-major concat of each worker's piece == the padded bucket
+        parts.append(workers[:, off: off + k].reshape(-1)[:size])
+        off += k
+    return np.concatenate(parts) if parts else buf[:0]
+
+
+def rescatter_flat(flat, buckets: BucketLayout) -> np.ndarray:
+    """Canonical flat buffer -> the global scattered buffer (length
+    ``buckets.scattered_total``), zero-filling per-bucket padding —
+    the host inverse of :func:`unscatter_flat`."""
+    flat = np.asarray(flat)
+    if flat.shape != (buckets.total,):
+        raise ValueError(
+            f"flat buffer has shape {flat.shape}, layout wants "
+            f"({buckets.total},)")
+    n = buckets.n_shards
+    segs: list[list[np.ndarray]] = [[] for _ in range(n)]
+    for start, size, pad_to in zip(buckets.starts, buckets.sizes, buckets.padded):
+        part = flat[start: start + size]
+        if pad_to != size:
+            part = np.concatenate(
+                [part, np.zeros(pad_to - size, flat.dtype)])
+        k = pad_to // n
+        for w in range(n):
+            segs[w].append(part[w * k: (w + 1) * k])
+    if not segs[0]:
+        return flat[:0]
+    return np.concatenate([np.concatenate(s) for s in segs])
+
+
+def reshard_scattered(buf, old: BucketLayout, new: BucketLayout) -> np.ndarray:
+    """Re-lay a scattered buffer saved under ``old`` (its dp size and
+    bucket boundaries) for a job running under ``new``.  Adam's moment
+    padding lanes are identically zero (their gradient is always the
+    scatter pad), so dropping and re-zero-filling them is bitwise."""
+    if old.total != new.total:
+        raise ValueError(
+            f"bucket layouts cover different flat buffers: "
+            f"{old.total} vs {new.total} elements")
+    return rescatter_flat(unscatter_flat(buf, old), new)
 
 
 # ---------------------------------------------------------------------------

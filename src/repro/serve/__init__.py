@@ -6,7 +6,8 @@ from .cache import (
     prompt_buckets,
     slot_state_specs,
 )
-from .engine import Completion, EngineConfig, ServeEngine
+from .engine import STATUSES, Completion, EngineConfig, ServeEngine
+from .faults import FAULT_SITES, NONFINITE_TOKEN, FaultPlan
 from .loop import ServeConfig, generate, generate_static
 from .paged import (
     BlockAllocator,
@@ -28,7 +29,8 @@ from .step import (
 )
 
 __all__ = [
-    "Completion", "EngineConfig", "ServeEngine",
+    "Completion", "EngineConfig", "ServeEngine", "STATUSES",
+    "FaultPlan", "FAULT_SITES", "NONFINITE_TOKEN",
     "ServeConfig", "generate", "generate_static",
     "KeyMirror", "RecurrentCache", "bucket_for", "make_slot_state",
     "prompt_buckets", "slot_state_specs",

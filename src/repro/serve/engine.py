@@ -60,6 +60,7 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import json
 import time
 from collections import deque
 from typing import Any, Callable, Sequence
@@ -74,6 +75,7 @@ from repro.core.aot import AotCache
 from repro.models import registry
 from repro.models.common import ShardRules
 from repro.train.step import shardings_for
+from .faults import NONFINITE_TOKEN, FaultPlan
 from .cache import (
     KeyMirror,
     RecurrentCache,
@@ -149,6 +151,11 @@ class EngineConfig:
     # priority lane back to the queue (tokens + sampling state requeued,
     # table nulled, refs dropped) — the pool runs near full
     admission: str = "deficit"
+    # bounded retry budget per request: how many times a faulted lane
+    # (non-finite logits, failed prefill dispatch, failed block alloc) is
+    # quarantined and requeued through the preempt-and-requeue path
+    # before the request goes terminal with status "failed"
+    max_retries: int = 2
 
 
 @dataclasses.dataclass
@@ -168,6 +175,12 @@ class _Slot:
     #                               of already-emitted output: not re-appended
     hasher: Any = None            # incremental chain hash (prefix_keys
     hashed: int = 0               # equivalent); blocks digested so far
+    deadline: float | None = None # absolute clock() time the request expires
+
+
+# Terminal per-request statuses (Completion.status).  Failures are data,
+# not exceptions: step() never raises for a request-level fault.
+STATUSES = ("ok", "timeout", "cancelled", "failed")
 
 
 @dataclasses.dataclass
@@ -179,6 +192,12 @@ class Completion:
     token_times: list[float]      # clock() when each token reached the host
     submit_time: float
     finish_time: float
+    # "ok" | "timeout" | "cancelled" | "failed" — non-ok completions hold
+    # the tokens emitted before termination (a prefix of the fault-free
+    # stream under greedy decoding)
+    status: str = "ok"
+    error: str | None = None      # terminal failure reason (status "failed")
+    retries: int = 0              # fault retries consumed (quarantine count)
 
 
 @dataclasses.dataclass
@@ -190,6 +209,7 @@ class _Pending:
     top_k: int
     top_p: float
     submit_time: float
+    deadline: float | None = None # absolute expiry (submit_time + deadline_s)
     # preempt-and-requeue: a preempted lane requeues with its ORIGINAL
     # prompt plus the tokens already emitted (``replay``).  On
     # re-admission the prompt prefills as usual (prefill-origin KV is
@@ -241,6 +261,7 @@ class ServeEngine:
         *,
         aot: AotCache | None = None,
         clock: Callable[[], float] = time.perf_counter,
+        faults: FaultPlan | None = None,
     ):
         if not registry.supports_slot_serving(cfg):
             raise ValueError(
@@ -278,6 +299,10 @@ class ServeEngine:
         # every caller would then compile privately
         self.aot = aot if aot is not None else AotCache("serve")
         self.clock = clock
+        # deterministic fault injection (serve/faults.py); None = off, and
+        # every consult site is behind an ``is not None`` so the default
+        # engine pays nothing
+        self.faults = faults
 
         self._p_sh = shardings_for(mesh, registry.param_pspecs(cfg, rules))
         self._rep = NamedSharding(mesh, P())
@@ -331,8 +356,20 @@ class ServeEngine:
             "prefix_lookup_tokens": 0, "prefix_hit_tokens": 0,
             "cow_copies": 0, "preemptions": 0, "resumed": 0,
             "replayed_tokens": 0,
+            # fault-tolerance lifecycle
+            "status_ok": 0, "status_timeout": 0, "status_cancelled": 0,
+            "status_failed": 0, "retries": 0, "faults_injected": 0,
+            "faults_detected": 0, "snapshot_restores": 0,
         }
         self._next_rid = 0
+        # lanes barred from admission for this many more steps after a
+        # fault (quarantine): the faulted occupant has already requeued,
+        # and one cooldown step keeps a hot fault site from re-admitting
+        # into the same lane within the same engine step
+        self._quarantine = [0] * engine.max_slots
+        # deadline sweep is O(queue + slots) per step; skip it entirely
+        # until some request actually carries a deadline
+        self._has_deadlines = False
         # host-sampling mode draws from a mirror of the device key stream
         # so it samples the same tokens as the fused path at equal seed
         self._key_mirror = KeyMirror(engine.seed)
@@ -469,9 +506,15 @@ class ServeEngine:
     # ------------------------------------------------------------------
     def submit(self, prompt, *, max_new_tokens: int = 16,
                temperature: float = 0.0, top_k: int | None = None,
-               top_p: float | None = None, rid: int | None = None) -> int:
+               top_p: float | None = None, rid: int | None = None,
+               deadline_s: float | None = None) -> int:
         """Queue a request; returns its request id.  ``top_k``/``top_p``
-        default to the engine-wide ``EngineConfig`` values."""
+        default to the engine-wide ``EngineConfig`` values.
+
+        ``deadline_s`` is a per-request TTL measured from submission: a
+        request still queued (or still decoding) when the deadline passes
+        terminates with status ``"timeout"``, keeping whatever tokens it
+        had emitted."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if prompt.size < 1:
             raise ValueError("empty prompt")
@@ -493,13 +536,41 @@ class ServeEngine:
                 )
         eff_k = int(self.econ.top_k if top_k is None else top_k)
         eff_p = float(self.econ.top_p if top_p is None else top_p)
+        if deadline_s is not None and deadline_s <= 0:
+            raise ValueError("deadline_s must be positive")
         if rid is None:
             rid = self._next_rid
         self._next_rid = max(self._next_rid, rid) + 1
+        now = self.clock()
+        deadline = None if deadline_s is None else now + float(deadline_s)
+        if deadline is not None:
+            self._has_deadlines = True
         self.queue.append(_Pending(
             rid, prompt, max_new_tokens, float(temperature), eff_k, eff_p,
-            self.clock()))
+            now, deadline=deadline))
         return rid
+
+    def cancel(self, rid: int) -> bool:
+        """Cancel a request wherever it is.
+
+        Queued: removed from the queue.  Mid-decode (or mid-prefill): the
+        lane is evicted — block refs drop, the deficit commitment refunds
+        — exactly like a finish.  Either way the request completes with
+        status ``"cancelled"`` and whatever tokens it had emitted.
+        Returns False (no-op) if the request already completed; raises
+        ``KeyError`` for an unknown rid."""
+        if rid in self.completions:
+            return False
+        for idx, req in enumerate(self.queue):
+            if req.rid == rid:
+                del self.queue[idx]
+                self._terminate_queued(req, "cancelled")
+                return True
+        for slot, s in enumerate(self.slots):
+            if s is not None and s.rid == rid:
+                self._terminate(slot, "cancelled")
+                return True
+        raise KeyError(f"unknown rid {rid}")
 
     def free_slots(self) -> list[int]:
         return [i for i, s in enumerate(self.slots) if s is None]
@@ -546,6 +617,13 @@ class ServeEngine:
         """One block for ``slot``; under ``admission='preempt'`` an empty
         pool evicts the lowest-priority lane (possibly ``slot`` itself —
         then returns None and the caller abandons the lane's step)."""
+        if self.faults is not None and self.faults.fire("alloc"):
+            # injected transient pool exhaustion: the requesting lane
+            # retries through the same preempt-and-requeue path a real
+            # fault would use, so invariants (refs, deficit) hold
+            self.counters["faults_injected"] += 1
+            self._retry_lane(slot, "injected block-alloc fault")
+            return None
         while True:
             try:
                 return self.alloc.alloc()
@@ -612,8 +690,8 @@ class ServeEngine:
         # because successive victims within a step have decreasing rids
         self.queue.appendleft(_Pending(
             s.rid, s.prompt, comp.max_new_tokens, s.temperature, s.top_k,
-            s.top_p, comp.submit_time, resume=True, limit=s.limit,
-            replay=tuple(comp.tokens), min_free=min_free))
+            s.top_p, comp.submit_time, deadline=s.deadline, resume=True,
+            limit=s.limit, replay=tuple(comp.tokens), min_free=min_free))
         self.slots[slot] = None
         self._active_mirror[slot] = False
         self._active_dirty = True
@@ -671,14 +749,22 @@ class ServeEngine:
             tps[i] = s.top_p
             # the NEXT decode of this lane forces a recorded replay token
             self._replay_mirror[i] = s.generated < s.emit_from
-        self.state["tokens"] = self._put(self._tok_mirror, jnp.int32)
-        self.state["lengths"] = self._put(lengths, jnp.int32)
-        self.state["limits"] = self._put(limits, jnp.int32)
-        self.state["temps"] = self._put(temps, jnp.float32)
-        self.state["top_ks"] = self._put(tks, jnp.int32)
-        self.state["top_ps"] = self._put(tps, jnp.float32)
-        self.state["replay"] = self._put(self._replay_mirror, jnp.bool_)
-        self.state["active"] = self._put(self._active_mirror, jnp.bool_)
+        pushes = 1
+        if self.faults is not None and self.faults.fire("sched_push"):
+            # injected lost push: the host mirror (not device state) is
+            # the scheduling truth, so recovery is re-running the same
+            # push — exercised here by pushing twice, first one "lost"
+            self.counters["faults_injected"] += 1
+            pushes = 2
+        for _ in range(pushes):
+            self.state["tokens"] = self._put(self._tok_mirror, jnp.int32)
+            self.state["lengths"] = self._put(lengths, jnp.int32)
+            self.state["limits"] = self._put(limits, jnp.int32)
+            self.state["temps"] = self._put(temps, jnp.float32)
+            self.state["top_ks"] = self._put(tks, jnp.int32)
+            self.state["top_ps"] = self._put(tps, jnp.float32)
+            self.state["replay"] = self._put(self._replay_mirror, jnp.bool_)
+            self.state["active"] = self._put(self._active_mirror, jnp.bool_)
         self._active_dirty = False
 
     def _try_restore(self, slot: int, req: _Pending) -> bool:
@@ -770,7 +856,7 @@ class ServeEngine:
             self.counters["resumed"] += 1
         self.slots[slot] = _Slot(
             req.rid, plen, limit, req.temperature, req.top_k, req.top_p,
-            req.prompt, 0, emit_from=len(req.replay),
+            req.prompt, 0, emit_from=len(req.replay), deadline=req.deadline,
         )
         if self.paged:
             if self.econ.admission == "deficit":
@@ -843,6 +929,12 @@ class ServeEngine:
         when chunking is off; the unmatched suffix after a prefix hit).
         The chunk covering the prompt's last position samples the first
         token and activates the lane."""
+        if self.faults is not None and self.faults.fire("prefill"):
+            # injected dispatch failure BEFORE the executable runs: no
+            # device state advanced, the lane just requeues and retries
+            self.counters["faults_injected"] += 1
+            self._retry_lane(slot, "injected prefill-dispatch fault")
+            return
         s = self.slots[slot]
         start = s.prefilled
         C = s.chunk
@@ -883,9 +975,20 @@ class ServeEngine:
         if self.econ.fused_sampling:
             tok = int(np.asarray(out)[0])
         else:
+            logits = np.asarray(out)
             tok = int(self._host_sample(
-                np.asarray(out), sub, np.array([s.temperature]),
+                logits, sub, np.array([s.temperature]),
                 np.array([s.top_k]), np.array([s.top_p]))[0])
+            if not np.isfinite(logits).all():
+                tok = NONFINITE_TOKEN   # host-side twin of the fused sentinel
+        if tok == NONFINITE_TOKEN:
+            # the prompt's sampling position saw non-finite logits:
+            # quarantine + bounded retry (or terminal "failed")
+            self.counters["faults_detected"] += 1
+            self._retry_lane(slot, "non-finite logits at prefill")
+            if not self.econ.fused_sampling:
+                self._writeback_sampled()
+            return
         now = self.clock()
         comp = self.live[s.rid]
         s.generated = 1
@@ -913,12 +1016,29 @@ class ServeEngine:
             self._writeback_sampled()
 
     def _finish(self, slot: int, now: float) -> None:
+        # natural EOS/budget eviction: the device already deactivated the
+        # lane itself, so no active-mirror push is owed
+        self._terminate(slot, "ok", now=now, push_active=False)
+
+    def _terminate(self, slot: int, status: str, *, error: str | None = None,
+                   now: float | None = None,
+                   push_active: bool = True) -> None:
+        """Evict lane ``slot`` with a terminal ``status`` — the one
+        eviction path for EOS/budget finishes ("ok"), deadline expiry
+        ("timeout"), :meth:`cancel` ("cancelled"), and retry exhaustion
+        ("failed").  Block refs drop and the deficit commitment refunds
+        exactly as for a natural finish; host-initiated terminations
+        (everything but "ok") also owe the device an active-bit push."""
         s = self.slots[slot]
         comp = self.live.pop(s.rid)
-        comp.finish_time = now
+        comp.finish_time = self.clock() if now is None else now
+        comp.status = status
+        comp.error = error
         self.completions[s.rid] = comp
         self.slots[slot] = None
         self._active_mirror[slot] = False
+        if push_active:
+            self._active_dirty = True
         if self.paged:
             if self.econ.admission == "deficit":
                 mapped = self.tables.mapped(slot)
@@ -928,6 +1048,61 @@ class ServeEngine:
                 self.alloc.free(b)
             self._tables_dirty = True
         self.counters["evicted"] += 1
+        self.counters[f"status_{status}"] += 1
+
+    def _terminate_queued(self, req: _Pending, status: str,
+                          error: str | None = None) -> None:
+        """Terminal status for a request that is NOT on a lane (it holds
+        no device resources).  A queued resume keeps the tokens its lane
+        emitted before preemption."""
+        if req.resume:
+            comp = self.live.pop(req.rid)
+        else:
+            comp = Completion(
+                rid=req.rid, prompt_len=int(req.prompt.size),
+                max_new_tokens=req.max_new_tokens, tokens=[],
+                token_times=[], submit_time=req.submit_time, finish_time=0.0,
+            )
+        comp.finish_time = self.clock()
+        comp.status = status
+        comp.error = error
+        self.completions[req.rid] = comp
+        self.counters[f"status_{status}"] += 1
+
+    def _retry_lane(self, slot: int, reason: str) -> None:
+        """Quarantine + bounded retry for a faulted lane (non-finite
+        logits, failed prefill dispatch, failed block alloc).  The request
+        requeues through the preempt-and-requeue path — the resume
+        replays its recorded tokens bitwise and reuses the existing
+        bucketed executables, so retries keep ``steady_builds_delta == 0``
+        — until its ``max_retries`` budget is spent; then it goes terminal
+        with status "failed" (a structured result, not an exception)."""
+        s = self.slots[slot]
+        comp = self.live[s.rid]
+        comp.retries += 1
+        self.counters["retries"] += 1
+        self._quarantine[slot] = 1
+        if comp.retries > self.econ.max_retries:
+            self._terminate(slot, "failed", error=reason)
+        else:
+            self._preempt(slot)
+
+    def _expire_deadlines(self) -> None:
+        """Terminate every queued or live request whose deadline passed.
+        Queued requests simply leave the queue; live lanes evict with the
+        full resource refund."""
+        now = self.clock()
+        expired = [r for r in self.queue
+                   if r.deadline is not None and now >= r.deadline]
+        if expired:
+            dead = {r.rid for r in expired}
+            self.queue = deque(r for r in self.queue if r.rid not in dead)
+            for req in expired:
+                self._terminate_queued(req, "timeout")
+        for slot, s in enumerate(self.slots):
+            if s is not None and s.deadline is not None \
+                    and now >= s.deadline:
+                self._terminate(slot, "timeout", now=now)
 
     def _host_sample(self, logits, sub, temps, top_ks, top_ps) -> np.ndarray:
         """Benchmark baseline: sample on host from full (M, V) logits with
@@ -980,6 +1155,8 @@ class ServeEngine:
         can take, then advance all fully-prefilled lanes by one token.
         Returns False when idle."""
         progressed = False
+        if self._has_deadlines:
+            self._expire_deadlines()
         for slot in range(self.econ.max_slots):
             s = self.slots[slot]
             if s is not None and s.prefilled < s.plen:
@@ -988,6 +1165,14 @@ class ServeEngine:
 
         for slot in self.free_slots():
             if self.slots[slot] is not None:    # refilled by a resume
+                continue
+            if self._quarantine[slot]:
+                # fault cooldown: the lane sits out exactly one admission
+                # round.  Consuming the countdown counts as progress — a
+                # step where every free lane is quarantined must not read
+                # as "idle" to drain()
+                self._quarantine[slot] -= 1
+                progressed = True
                 continue
             if not self.queue or not self._can_admit(self.queue[0]):
                 break
@@ -1038,15 +1223,37 @@ class ServeEngine:
                 arr = lambda f, d, dt: np.array([
                     f(s) if s is not None else d for s in self.slots
                 ], dtype=dt)
+                logits = np.asarray(out)
                 toks = self._host_sample(
-                    np.asarray(out), sub,
+                    logits, sub,
                     arr(lambda s: s.temperature, 0.0, np.float32),
                     arr(lambda s: s.top_k, 0, np.int32),
                     arr(lambda s: s.top_p, 0.0, np.float32))
+                toks = np.where(
+                    np.isfinite(logits).all(axis=-1), toks,
+                    np.int32(NONFINITE_TOKEN))  # host twin of the sentinel
+            if self.faults is not None:
+                lane = self.faults.pick("decode_logits", active_slots)
+                if lane is not None:
+                    # simulate the device having detected non-finite
+                    # logits for this lane: flip its word in the fetched
+                    # vector to the sentinel the real detector reports
+                    self.counters["faults_injected"] += 1
+                    toks = np.array(toks, copy=True)
+                    toks[lane] = NONFINITE_TOKEN
             now = self.clock()
             for i in active_slots:
                 s = self.slots[i]
                 tok = int(toks[i])
+                if tok == NONFINITE_TOKEN:
+                    # lane reported non-finite logits: its sample is
+                    # invalid and nothing is emitted — quarantine +
+                    # bounded retry via preempt-and-requeue (the resume
+                    # replays the recorded tokens bitwise), or terminal
+                    # status "failed" once the retry budget is spent
+                    self.counters["faults_detected"] += 1
+                    self._retry_lane(i, "non-finite logits at decode")
+                    continue
                 s.generated += 1
                 comp = self.live[s.rid]
                 replaying = s.generated <= s.emit_from
@@ -1096,6 +1303,165 @@ class ServeEngine:
         return [np.asarray(self.completions[r].tokens, np.int32) for r in rids]
 
     # ------------------------------------------------------------------
+    # Crash-consistent snapshot / restore
+    # ------------------------------------------------------------------
+    # The engine's durable truth is entirely host-side: the queue, the
+    # per-request Completions, and the recorded token streams.  Device
+    # state (KV pool contents, block tables, the prefix index over pool
+    # blocks) is a CACHE of that truth — a live lane's KV is recomputable
+    # from its prompt + recorded tokens through the same preempt-resume
+    # path the engine already uses under pool pressure.  A snapshot
+    # therefore serializes every live lane as a front-of-queue resume
+    # request and drops the allocator/prefix index (the pool it describes
+    # died with the process); restore into a FRESH engine re-prefills and
+    # replays, which is bitwise the uninterrupted stream under greedy
+    # decoding (the PR-4 replay property).  Everything in the snapshot is
+    # plain JSON, so it rides CheckpointManager's atomic meta.json.
+
+    _SNAP_FORMAT = 1
+
+    @staticmethod
+    def _snap_pending(req: _Pending) -> dict:
+        return {
+            "rid": req.rid,
+            "prompt": [int(t) for t in req.prompt],
+            "max_new_tokens": req.max_new_tokens,
+            "temperature": req.temperature,
+            "top_k": req.top_k,
+            "top_p": req.top_p,
+            "submit_time": req.submit_time,
+            "deadline": req.deadline,
+            "resume": req.resume,
+            "limit": req.limit,
+            "replay": [int(t) for t in req.replay],
+        }
+
+    @staticmethod
+    def _snap_completion(comp: Completion) -> dict:
+        return {
+            "rid": comp.rid,
+            "prompt_len": comp.prompt_len,
+            "max_new_tokens": comp.max_new_tokens,
+            "tokens": [int(t) for t in comp.tokens],
+            "token_times": [float(t) for t in comp.token_times],
+            "submit_time": comp.submit_time,
+            "finish_time": comp.finish_time,
+            "status": comp.status,
+            "error": comp.error,
+            "retries": comp.retries,
+        }
+
+    @staticmethod
+    def _load_completion(d: dict) -> Completion:
+        return Completion(
+            rid=int(d["rid"]), prompt_len=int(d["prompt_len"]),
+            max_new_tokens=int(d["max_new_tokens"]),
+            tokens=[int(t) for t in d["tokens"]],
+            token_times=[float(t) for t in d["token_times"]],
+            submit_time=float(d["submit_time"]),
+            finish_time=float(d["finish_time"]),
+            status=d["status"], error=d["error"], retries=int(d["retries"]),
+        )
+
+    def _econ_json(self) -> dict:
+        # JSON round-trip normalization (tuples -> lists) so a snapshot
+        # read back from disk compares equal to a live config
+        return json.loads(json.dumps(dataclasses.asdict(self.econ)))
+
+    def snapshot(self) -> dict:
+        """Serialize the engine's host-side truth as a JSON-able dict.
+
+        Live lanes become front-of-queue resume requests (rid order =
+        FCFS priority), exactly as :meth:`preempt` would requeue them;
+        the queued tail follows unchanged.  Device caches are dropped —
+        see the section comment.  Consistent at any step boundary."""
+        on_lane = sorted(
+            (i for i, s in enumerate(self.slots) if s is not None),
+            key=lambda i: self.slots[i].rid)
+        pend = []
+        for slot in on_lane:
+            s = self.slots[slot]
+            comp = self.live[s.rid]
+            pend.append(self._snap_pending(_Pending(
+                s.rid, s.prompt, comp.max_new_tokens, s.temperature,
+                s.top_k, s.top_p, comp.submit_time, deadline=s.deadline,
+                resume=True, limit=s.limit, replay=tuple(comp.tokens))))
+        pend.extend(self._snap_pending(req) for req in self.queue)
+        return {
+            "format": self._SNAP_FORMAT,
+            "arch": self.cfg.name,
+            "engine": self._econ_json(),
+            "queue": pend,
+            # Completions of every in-flight rid (lane occupants and
+            # queued resumes) — restore re-links them so replay forcing
+            # and result continuity work across the restart
+            "live": {str(r): self._snap_completion(c)
+                     for r, c in self.live.items()},
+            "completions": {str(r): self._snap_completion(c)
+                            for r, c in self.completions.items()},
+            "counters": dict(self.counters),
+            "next_rid": self._next_rid,
+        }
+
+    def restore(self, snap: dict) -> None:
+        """Rebuild serving state from :meth:`snapshot` into THIS engine,
+        which must be freshly constructed (same arch + ``EngineConfig``)
+        and never have served a request — the snapshot's device caches
+        are gone, so restore re-derives them by re-prefilling prompts and
+        replaying recorded tokens (bitwise the original stream under
+        greedy decoding).  Drive with :meth:`step`/:meth:`drain` as
+        usual afterwards."""
+        if int(snap.get("format", -1)) != self._SNAP_FORMAT:
+            raise ValueError(
+                f"unsupported snapshot format {snap.get('format')!r}")
+        if snap["arch"] != self.cfg.name:
+            raise ValueError(
+                f"snapshot is for arch {snap['arch']!r}, engine is "
+                f"{self.cfg.name!r}")
+        if snap["engine"] != self._econ_json():
+            raise ValueError(
+                "snapshot EngineConfig does not match this engine's")
+        if self.has_work() or self.live or self.completions \
+                or self.counters["admitted"]:
+            raise ValueError("restore() requires a fresh engine")
+        for req in snap["queue"]:
+            deadline = req["deadline"]
+            if deadline is not None:
+                self._has_deadlines = True
+            # min_free deliberately resets to 0: it damped re-admission
+            # against the OLD engine's pool pressure, which died with it
+            self.queue.append(_Pending(
+                int(req["rid"]), np.asarray(req["prompt"], np.int32),
+                int(req["max_new_tokens"]), float(req["temperature"]),
+                int(req["top_k"]), float(req["top_p"]),
+                float(req["submit_time"]), deadline=deadline,
+                resume=bool(req["resume"]), limit=int(req["limit"]),
+                replay=tuple(int(t) for t in req["replay"])))
+        self.live = {int(r): self._load_completion(c)
+                     for r, c in snap["live"].items()}
+        self.completions = {int(r): self._load_completion(c)
+                            for r, c in snap["completions"].items()}
+        self.counters.update(snap["counters"])
+        self._next_rid = int(snap["next_rid"])
+        self.counters["snapshot_restores"] += 1
+
+    def save_snapshot(self, mgr, step: int) -> None:
+        """Persist :meth:`snapshot` through a
+        :class:`~repro.checkpoint.manager.CheckpointManager` (atomic
+        tmp-then-rename write; a crash mid-save leaves the previous
+        checkpoint restorable)."""
+        mgr.save(step, {}, extra_meta={"engine_snapshot": self.snapshot()})
+
+    def restore_snapshot(self, mgr, step: int | None = None) -> int:
+        """Restore from the checkpoint written by :meth:`save_snapshot`
+        (latest when ``step`` is None).  Returns the checkpoint step."""
+        step, meta = mgr.load_meta(step)
+        if "engine_snapshot" not in meta:
+            raise KeyError(f"checkpoint step {step} has no engine snapshot")
+        self.restore(meta["engine_snapshot"])
+        return step
+
+    # ------------------------------------------------------------------
     # Invariants + stats
     # ------------------------------------------------------------------
     def check_invariants(self) -> None:
@@ -1108,7 +1474,21 @@ class ServeEngine:
         leaves are exactly zero (evict-time zeroing), checked when the
         last executable was a decode step — host-side evictions between
         executables (preemption, instant-finish prefills) zero one
-        executable later."""
+        executable later.  Lifecycle: every completion carries a terminal
+        status accounted in the status counters, and every in-flight
+        Completion is owned by exactly one lane or one queued resume."""
+        for comp in self.completions.values():
+            assert comp.status in STATUSES, (
+                f"rid {comp.rid}: unknown status {comp.status!r}")
+        assert sum(self.counters[f"status_{st}"] for st in STATUSES) \
+            == len(self.completions), "status counters != completions"
+        inflight = sorted(
+            [s.rid for s in self.slots if s is not None]
+            + [r.rid for r in self.queue if r.resume])
+        assert inflight == sorted(self.live), (
+            f"live rids {sorted(self.live)} != lane/resume rids {inflight}")
+        for slot, q in enumerate(self._quarantine):
+            assert 0 <= q <= 1, f"slot {slot}: quarantine {q} out of range"
         if self.rec and self.econ.fused_sampling \
                 and self._last_op == "decode":
             free = [i for i, s in enumerate(self.slots) if s is None]
@@ -1153,4 +1533,6 @@ class ServeEngine:
             looked = self.counters["prefix_lookup_tokens"]
             out["prefix_hit_rate"] = (
                 self.counters["prefix_hit_tokens"] / looked if looked else 0.0)
+        if self.faults is not None:
+            out["faults"] = self.faults.stats()
         return out

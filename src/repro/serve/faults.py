@@ -1,0 +1,109 @@
+"""Deterministic fault injection for the serve engine.
+
+A :class:`FaultPlan` is a seeded schedule of failures the engine consults
+at named sites (``FAULT_SITES``).  The default engine runs with no plan at
+all (``faults=None``) — every consult site is behind a ``is not None``
+check, so fault injection is zero-cost when off — and a given ``(seed,
+rates)`` plan replays the same schedule on every run: each site draws
+from its own ``numpy`` Generator seeded from ``(seed, site)``, so the
+fire/skip sequence depends only on the engine's (deterministic) consult
+order, never on wall clock or interleaving with other sites.  Chaos-fuzz
+failures are therefore reproducible by seed number, exactly like the
+parity fuzzer's request streams.
+
+Sites:
+
+``decode_logits``  corrupt one active lane's post-decode token fetch to
+                   the :data:`NONFINITE_TOKEN` sentinel — what the device
+                   reports when a lane's logits contain NaN/Inf.  Drives
+                   the quarantine + bounded-retry path.
+``prefill``        fail a prefill-chunk dispatch before it runs; the lane
+                   retries through preempt-and-requeue.
+``alloc``          fail a KV block allocation (transient pool
+                   exhaustion); the requesting lane retries.
+``sched_push``     lose a host->device scheduling push; the host mirror
+                   is the source of truth, so recovery is an idempotent
+                   re-push of the same vectors.
+
+The engine's recovery machinery is shared with normal operation (the
+PR-4/5 preempt-and-requeue path), so every executable a retry dispatches
+is already in the AOT cache — chaos runs keep ``steady_builds_delta == 0``.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+FAULT_SITES = ("decode_logits", "prefill", "alloc", "sched_push")
+
+# Sentinel token value the decode/prefill executables report for a lane
+# whose logits contain a non-finite value (vocab ids are >= 0, so the
+# sentinel rides the existing (max_slots,) int32 token fetch — no extra
+# host sync).  The host treats it as "this lane's sample is invalid":
+# quarantine the lane and retry the request, or fail it terminally.
+NONFINITE_TOKEN = -1
+
+
+class FaultPlan:
+    """Seeded per-site fault schedule.
+
+    ``rates`` maps site name -> per-consult fire probability (sites not
+    named never fire).  ``max_fires`` bounds the total number of fires
+    across all sites (None = unbounded); the draw stream still advances
+    past the budget so truncating it never re-times later consults.
+
+    A plan is mutable (rng positions + counters): use a fresh instance
+    per engine run, and the same seed to reproduce a run.
+    """
+
+    def __init__(self, seed: int, rates: dict[str, float] | None = None,
+                 *, max_fires: int | None = None):
+        rates = dict(rates or {})
+        unknown = set(rates) - set(FAULT_SITES)
+        if unknown:
+            raise ValueError(
+                f"unknown fault sites {sorted(unknown)}; "
+                f"valid sites: {FAULT_SITES}")
+        self.seed = int(seed)
+        self.rates = {s: float(rates.get(s, 0.0)) for s in FAULT_SITES}
+        self.max_fires = max_fires
+        self._rng = {
+            s: np.random.default_rng([self.seed, i])
+            for i, s in enumerate(FAULT_SITES)
+        }
+        self.consults = {s: 0 for s in FAULT_SITES}
+        self.fired = {s: 0 for s in FAULT_SITES}
+
+    @property
+    def total_fired(self) -> int:
+        return sum(self.fired.values())
+
+    def fire(self, site: str) -> bool:
+        """One consult of ``site``: True iff a fault fires here."""
+        rate = self.rates[site]
+        self.consults[site] += 1
+        if rate <= 0.0:
+            return False
+        hit = float(self._rng[site].random()) < rate
+        if hit and (self.max_fires is None
+                    or self.total_fired < self.max_fires):
+            self.fired[site] += 1
+            return True
+        return False
+
+    def pick(self, site: str, candidates):
+        """Consult ``site``; on fire, return a deterministically chosen
+        element of ``candidates`` (None otherwise / when empty)."""
+        if not candidates:
+            return None
+        if not self.fire(site):
+            return None
+        j = int(self._rng[site].integers(len(candidates)))
+        return candidates[j]
+
+    def stats(self) -> dict:
+        return {
+            "seed": self.seed,
+            "consults": dict(self.consults),
+            "fired": dict(self.fired),
+            "total_fired": self.total_fired,
+        }

@@ -28,6 +28,7 @@ from repro.models import registry
 from repro.models.attention import NEG_INF
 from repro.models.common import ShardRules
 from repro.train.step import shardings_for
+from .faults import NONFINITE_TOKEN
 
 
 def jit_prefill(cfg: ArchConfig, mesh: Mesh, rules: ShardRules,
@@ -183,8 +184,15 @@ def _decode_program(decode_fn, *, eos_id: int | None, fused: bool,
             logits, sub, state["temps"],
             top_ks=state["top_ks"], top_ps=state["top_ps"],
         )
+        # Non-finite detection rides the SAME (max_slots,) token fetch the
+        # host already reads (vocab ids are >= 0, so NONFINITE_TOKEN is
+        # unambiguous — no extra sync).  A bad lane is neither finished
+        # nor zeroed on device: the host owns the verdict (quarantine +
+        # bounded retry through preempt-and-requeue, or terminal failure).
+        finite = jnp.all(jnp.isfinite(logits), axis=-1)
         tok = jnp.where(active, tok, 0).astype(jnp.int32)
-        done = active & (new_len >= state["limits"])
+        tok = jnp.where(active & ~finite, jnp.int32(NONFINITE_TOKEN), tok)
+        done = active & finite & (new_len >= state["limits"])
         if eos_id is not None:
             done |= active & (tok == eos_id)
         act_new = active & ~done
@@ -324,7 +332,10 @@ def slot_prefill_program(cfg: ArchConfig, mesh: Mesh, rules: ShardRules, *,
             logits, sub, jnp.reshape(temp, (1,)),
             top_ks=jnp.reshape(top_k, (1,)), top_ps=jnp.reshape(top_p, (1,)),
         )
-        alive = plen < limit
+        # non-finite logits report the sentinel token (see _decode_program)
+        finite = jnp.all(jnp.isfinite(logits))
+        tok = jnp.where(finite, tok, jnp.int32(NONFINITE_TOKEN))
+        alive = (plen < limit) & finite
         if eos_id is not None:
             alive &= tok[0] != eos_id
         new_state["tokens"] = upd(state["tokens"], tok[0])
@@ -394,7 +405,10 @@ def paged_prefill_program(cfg: ArchConfig, mesh: Mesh, rules: ShardRules, *,
             logits, sub, jnp.reshape(temp, (1,)),
             top_ks=jnp.reshape(top_k, (1,)), top_ps=jnp.reshape(top_p, (1,)),
         )
-        alive = is_last & (plen < limit)
+        # non-finite logits report the sentinel token (see _decode_program)
+        finite = jnp.all(jnp.isfinite(logits))
+        tok = jnp.where(finite, tok, jnp.int32(NONFINITE_TOKEN))
+        alive = is_last & (plen < limit) & finite
         if eos_id is not None:
             alive &= tok[0] != eos_id
         new_state["tokens"] = upd(

@@ -22,8 +22,10 @@ from repro.data import make_batch_fn
 from repro.models import registry
 from repro.models.common import ShardRules
 from repro.optim import OptConfig
+from repro.optim.buckets import make_buckets, reshard_scattered
 from repro.train.step import (
-    TrainSettings, jit_train_step, opt_state_template, shardings_for,
+    TrainSettings, flat_layout_for, jit_train_step, opt_state_template,
+    shardings_for,
 )
 
 
@@ -70,12 +72,40 @@ def train(
     b_sh = in_sh[2]
 
     mgr = CheckpointManager(loop.ckpt_dir, loop.keep_k) if loop.ckpt_dir else None
+    # flat-engine provenance rides the checkpoint meta: a ZeRO
+    # checkpoint's scattered m/v bake in (n_shards, bucket boundaries),
+    # which a restore onto a different dp size must know to undo
+    ckpt_meta = {"flat_engine": step_fn._flat_engine}
+    if step_fn._flat_engine == "zero":
+        ckpt_meta["zero_n_shards"] = step_fn._flat_buckets.n_shards
+        ckpt_meta["zero_bucket_bytes"] = step_fn._flat_buckets.bucket_bytes
     start = 0
     if mgr and resume and mgr.latest_step() is not None:
-        def reshard(tree):
-            # elastic restore: host arrays -> current mesh shardings
-            return tree
-        start, state = mgr.restore({"params": params_sds, "opt": opt_sds})
+        _, meta = mgr.load_meta()
+        opt_tmpl, fix_opt = opt_sds, None
+        if step_fn._flat_engine == "zero" \
+                and meta.get("flat_engine") == "zero":
+            new_b = step_fn._flat_buckets
+            old_n = int(meta.get("zero_n_shards", new_b.n_shards))
+            old_bb = int(meta.get("zero_bucket_bytes", new_b.bucket_bytes))
+            if (old_n, old_bb) != (new_b.n_shards, new_b.bucket_bytes):
+                # elastic ZeRO restore: read m/v at their CHECKPOINTED
+                # scattered shapes, then reshard host-side for this dp
+                old_b = make_buckets(
+                    flat_layout_for(cfg), bucket_bytes=old_bb,
+                    n_shards=old_n)
+                old_sds = jax.ShapeDtypeStruct(
+                    (old_b.scattered_total,), jax.numpy.float32)
+                opt_tmpl = {**opt_sds, "m": old_sds, "v": old_sds}
+
+                def fix_opt(state):
+                    for k in ("m", "v"):
+                        state[k] = reshard_scattered(state[k], old_b, new_b)
+                print(f"[train] resharding ZeRO state dp={old_n} -> "
+                      f"dp={new_b.n_shards}")
+        start, state = mgr.restore({"params": params_sds, "opt": opt_tmpl})
+        if fix_opt:
+            fix_opt(state["opt"])
         params = jax.tree.map(
             lambda a, s: jax.device_put(a, s), state["params"], in_sh[0])
         opt_state = jax.tree.map(
@@ -86,12 +116,15 @@ def train(
 
     losses, t0 = [], time.perf_counter()
     metrics = {}
+    skipped = []   # per-step device scalars; summed once at the end
     for step in range(start, loop.steps):
         host_batch = batch_fn(step)
         batch = {
             k: jax.device_put(v, b_sh[k]) for k, v in host_batch.items()
         }
         params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if "skipped" in metrics:
+            skipped.append(metrics["skipped"])
         if loop.log_every and (step + 1) % loop.log_every == 0:
             loss = float(metrics["loss"])
             losses.append(loss)
@@ -99,15 +132,19 @@ def train(
             print(f"[train] step {step + 1:5d} loss {loss:.4f} ({dt:.1f}s)")
         if mgr and loop.ckpt_every and (step + 1) % loop.ckpt_every == 0:
             mgr.save(step + 1, {"params": params, "opt": opt_state},
-                     blocking=False)
+                     blocking=False, extra_meta=ckpt_meta)
         if on_step:
             on_step(step, metrics)
     if mgr:
-        mgr.save(loop.steps, {"params": params, "opt": opt_state}, blocking=True)
+        mgr.save(loop.steps, {"params": params, "opt": opt_state},
+                 blocking=True, extra_meta=ckpt_meta)
         mgr.wait()
     return {
         "final_loss": float(metrics["loss"]) if metrics else float("nan"),
         "losses": losses,
+        # non-finite-gradient steps the flat engine turned into bitwise
+        # no-ops (train/step.py skip_nonfinite); 0 off the flat paths
+        "skipped_steps": int(sum(float(s) for s in skipped)),
         "params": params,
         "opt_state": opt_state,
     }

@@ -70,6 +70,14 @@ class TrainSettings:
     flat_engine: str = "auto"
     # None: Pallas flat_adam kernel on TPU, jnp reference elsewhere.
     flat_kernel: bool | None = None
+    # Flat-engine non-finite gradient guard: when the reduced flat
+    # gradient buffer holds any NaN/Inf, the step becomes a bitwise no-op
+    # on params AND optimizer state (step counter included) — a loss
+    # spike can then never poison the Adam moments.  The verdict is
+    # computed on the post-reduction buffer (faithful) or psum'd across
+    # shards (ZeRO), so every worker skips or applies in lockstep.
+    # Surfaced as metrics["skipped"]; the loop counts skipped_steps.
+    skip_nonfinite: bool = True
 
 
 def data_axes_of(mesh: Mesh) -> tuple[str, ...]:
@@ -264,25 +272,47 @@ def _build_flat_train_step(cfg, mesh, rules, opt, settings, mode: str):
             # Appendix A, bucketed: every worker ends with the full mean
             # gradient; update replicated flat p/m/v buffers in one pass.
             gflat = bucketed_all_reduce(gflat, buckets, daxes, op="mean")
+            # skip-step verdict AFTER the all-reduce: one worker's NaN
+            # poisons every worker's mean, so the check is globally
+            # consistent with no extra collective
+            ok = jnp.all(jnp.isfinite(gflat)) \
+                if settings.skip_nonfinite else None
             if opt.grad_clip:
                 gflat, gnorm = _clip(jnp.sum(jnp.square(gflat)), gflat)
                 metrics = {**metrics, "grad_norm": gnorm}
             pflat = flatten(layout, params)
             mflat = flatten(layout, opt_state["m"])
             vflat = flatten(layout, opt_state["v"])
-            pflat, mflat, vflat = flat_adam_apply(
+            p2, m2, v2 = flat_adam_apply(
                 pflat, gflat, mflat, vflat, step, **adam_kw
             )
-            new_params = unflatten(layout, pflat)
+            if ok is not None:
+                # bitwise no-op on skip: keep the pre-update buffers and
+                # don't advance the Adam step counter (bias correction
+                # must not decay across a skipped step)
+                p2 = jnp.where(ok, p2, pflat)
+                m2 = jnp.where(ok, m2, mflat)
+                v2 = jnp.where(ok, v2, vflat)
+                step = opt_state["step"] + ok.astype(step.dtype)
+                metrics = {**metrics,
+                           "skipped": 1.0 - ok.astype(jnp.float32)}
+            new_params = unflatten(layout, p2)
             new_state = {
                 "step": step,
-                "m": unflatten(layout, mflat, dtype=jnp.float32),
-                "v": unflatten(layout, vflat, dtype=jnp.float32),
+                "m": unflatten(layout, m2, dtype=jnp.float32),
+                "v": unflatten(layout, v2, dtype=jnp.float32),
             }
             return new_params, new_state, {"loss": loss, **metrics}
 
         # ZeRO: own 1/N of every bucket; m/v live scattered (flat, sharded)
         g_loc = bucketed_reduce_scatter(gflat, buckets, daxes[0], op="mean")
+        # the scatter localizes a NaN to whichever shard owns that region,
+        # so the skip verdict needs a psum'd count to stay in lockstep
+        ok = None
+        if settings.skip_nonfinite:
+            bad = jax.lax.psum(
+                jnp.sum((~jnp.isfinite(g_loc)).astype(jnp.int32)), daxes)
+            ok = bad == 0
         if opt.grad_clip:
             g_loc, gnorm = _clip(
                 jax.lax.psum(jnp.sum(jnp.square(g_loc)), daxes), g_loc
@@ -290,13 +320,21 @@ def _build_flat_train_step(cfg, mesh, rules, opt, settings, mode: str):
             metrics = {**metrics, "grad_norm": gnorm}
         widx = jax.lax.axis_index(daxes[0])
         p_loc = scatter_flat(flatten(layout, params), buckets, widx)
-        p_loc, m_loc, v_loc = flat_adam_apply(
+        p2, m2, v2 = flat_adam_apply(
             p_loc, g_loc, opt_state["m"], opt_state["v"], step, **adam_kw
         )
+        if ok is not None:
+            # params reassemble through all-gather of the (unchanged)
+            # shard — pure data movement, so the round trip is bitwise
+            p2 = jnp.where(ok, p2, p_loc)
+            m2 = jnp.where(ok, m2, opt_state["m"])
+            v2 = jnp.where(ok, v2, opt_state["v"])
+            step = opt_state["step"] + ok.astype(step.dtype)
+            metrics = {**metrics, "skipped": 1.0 - ok.astype(jnp.float32)}
         new_params = unflatten(
-            layout, bucketed_all_gather(p_loc, buckets, daxes[0])
+            layout, bucketed_all_gather(p2, buckets, daxes[0])
         )
-        new_state = {"step": step, "m": m_loc, "v": v_loc}
+        new_state = {"step": step, "m": m2, "v": v2}
         return new_params, new_state, {"loss": loss, **metrics}
 
     if mode == "faithful":

@@ -283,3 +283,244 @@ def test_hypothesis_selection():
         assert hypothesis.__name__ == "hypothesis"
     else:
         assert getattr(hypothesis, "IS_MINI", False)
+
+
+# ---------------------------------------------------------------------------
+# Chaos mode: seeded fault schedules across every engine mode
+# ---------------------------------------------------------------------------
+#
+# The robustness contract on top of parity: with a seeded FaultPlan firing
+# at every site (corrupted decode fetches, failed prefill dispatches,
+# transient alloc failures, lost sched pushes) plus deadlines and
+# mid-flight cancels, ``step()`` never raises, the invariant sweep stays
+# clean after every step, every request reaches a terminal status, and —
+# the bitwise half — every request that ends "ok" is token-for-token the
+# fault-free slotted stream, while non-ok requests hold a prefix of it.
+# Retries ride the preempt-and-requeue resume path, so a prebuilt engine
+# stays at ``steady_builds_delta == 0`` through arbitrary fault schedules.
+
+import json
+
+import jax.numpy as jnp
+
+from repro.serve import FaultPlan
+
+CHAOS_EPISODES = int(os.environ.get("CHAOS_FUZZ_EPISODES", "6"))
+CHAOS_RATES = {"decode_logits": 0.05, "prefill": 0.05, "alloc": 0.03,
+               "sched_push": 0.05}
+
+
+class _FakeClock:
+    """Deterministic engine clock: one unit per engine step, advanced by
+    the driver — deadline expiry becomes a property of the schedule, not
+    of host wall-time."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def drive_chaos(cfg, mesh, rules, params, aot, ec, stream, faults,
+                deadline_every=0, cancel_ticks=frozenset()):
+    """Replay a stream under a seeded fault schedule; invariants swept
+    after every step, and the engine must drain without raising."""
+    clock = _FakeClock()
+    eng = ServeEngine(cfg, mesh, rules, params, ec, aot=aot, faults=faults,
+                      clock=clock)
+    i, tick, guard = 0, 0, 0
+    while i < len(stream) or eng.has_work():
+        while i < len(stream) and stream[i][0] <= tick:
+            _, prompt, budget = stream[i]
+            kw = {"deadline_s": 40.0} \
+                if deadline_every and i % deadline_every == 0 else {}
+            eng.submit(prompt, max_new_tokens=budget, rid=i, **kw)
+            i += 1
+        if tick in cancel_ticks and eng.live:
+            rids = sorted(eng.live)
+            eng.cancel(rids[len(rids) // 2])
+        eng.step()
+        eng.check_invariants()
+        clock.t += 1.0
+        tick += 1
+        guard += 1
+        assert guard < 3000, "engine failed to drain under chaos"
+    assert not eng.live and not eng.queue
+    return eng
+
+
+def test_chaos_fuzz(setup):
+    cfg, mesh, rules, params, aot = setup
+    # prebuild every mode's executables: retries and resumes must then
+    # dispatch purely from cache (steady_builds_delta == 0 under faults)
+    for ec in MODES.values():
+        ServeEngine(cfg, mesh, rules, params, ec, aot=aot).prebuild()
+    builds0 = aot.stats["builds"]
+    agg = {"faults_injected": 0, "faults_detected": 0, "retries": 0,
+           "status_ok": 0, "status_timeout": 0, "status_cancelled": 0,
+           "status_failed": 0}
+    for seed in range(CHAOS_EPISODES):
+        rng = np.random.default_rng(9000 + seed)
+        stream = make_stream(rng, cfg.vocab)
+        want, _ = drive(cfg, mesh, rules, params, aot,
+                        MODES["slotted"], stream)
+        for mi, (name, ec) in enumerate(MODES.items()):
+            faults = FaultPlan(seed * len(MODES) + mi, CHAOS_RATES)
+            cancel_ticks = {int(t) for t in rng.integers(1, 25, size=2)}
+            eng = drive_chaos(cfg, mesh, rules, params, aot, ec, stream,
+                              faults, deadline_every=3,
+                              cancel_ticks=cancel_ticks)
+            for rid in range(len(stream)):
+                c = eng.completions[rid]
+                assert c.status in ("ok", "timeout", "cancelled", "failed")
+                got = list(c.tokens)
+                if c.status == "ok":
+                    # fault-touched or not: an "ok" request is bitwise
+                    # the fault-free stream (retries replay exactly)
+                    assert got == want[rid], (
+                        f"seed={seed} mode={name} rid={rid}: ok request "
+                        f"diverged\n  want={want[rid]}\n  got ={got}")
+                else:
+                    assert got == want[rid][: len(got)], (
+                        f"seed={seed} mode={name} rid={rid}: "
+                        f"{c.status} request is not a prefix of the "
+                        f"fault-free stream")
+            if eng.paged:
+                assert eng.alloc.in_use == 0
+            st = eng.stats
+            for k in agg:
+                agg[k] += st[k]
+    assert aot.stats["builds"] == builds0, (
+        "chaos retries forced fresh compiles — the retry path must reuse "
+        "prebuilt executables")
+    # the schedule must actually exercise the machinery (vacuity guard)
+    assert agg["faults_injected"] > 0, "no faults fired at all"
+    assert agg["faults_detected"] > 0, "no sentinel ever detected"
+    assert agg["retries"] > 0, "no lane ever retried"
+    assert agg["status_ok"] > 0
+    if CHAOS_EPISODES >= 4:
+        assert agg["status_cancelled"] > 0, "no cancel landed"
+
+
+def test_chaos_retry_exhaustion_is_structured_failure(setup):
+    """A lane that faults on every retry goes terminal with status
+    "failed" (data, not an exception), after exactly max_retries + 1
+    attempts."""
+    cfg, mesh, rules, params, aot = setup
+    faults = FaultPlan(1, {"prefill": 1.0})
+    eng = ServeEngine(cfg, mesh, rules, params, MODES["slotted"], aot=aot,
+                      faults=faults)
+    rid = eng.submit(np.arange(1, 7, dtype=np.int32), max_new_tokens=4)
+    guard = 0
+    while eng.has_work():
+        eng.step()
+        eng.check_invariants()
+        guard += 1
+        assert guard < 100
+    c = eng.completions[rid]
+    assert c.status == "failed"
+    assert c.retries == eng.econ.max_retries + 1
+    assert "prefill" in c.error
+    assert c.tokens == []
+    assert eng.counters["status_failed"] == 1
+
+
+def test_genuine_nonfinite_logits_detected(setup):
+    """Not an injected sentinel: NaN-poisoned weights make the device
+    itself produce non-finite logits, the fused program reports the
+    sentinel through the ordinary token fetch, and the engine fails the
+    request cleanly instead of emitting garbage or raising."""
+    cfg, mesh, rules, params, aot = setup
+    badp = jax.tree.map(lambda x: jnp.full_like(x, jnp.nan), params)
+    eng = ServeEngine(cfg, mesh, rules, badp, MODES["paged"], aot=aot)
+    rid = eng.submit(np.arange(1, 9, dtype=np.int32), max_new_tokens=4)
+    guard = 0
+    while eng.has_work():
+        eng.step()
+        eng.check_invariants()
+        guard += 1
+        assert guard < 100
+    c = eng.completions[rid]
+    assert c.status == "failed"
+    assert "non-finite" in c.error
+    assert eng.counters["faults_detected"] > 0
+    assert eng.counters["faults_injected"] == 0   # no plan: all genuine
+    assert eng.alloc.in_use == 0                  # refs fully refunded
+
+
+def test_genuine_nonfinite_mid_decode(setup):
+    """Weights poisoned AFTER the first token: the prompt prefills
+    cleanly, then decode hits non-finite logits mid-stream — the tokens
+    emitted before the fault survive on the failed completion."""
+    cfg, mesh, rules, params, aot = setup
+    eng = ServeEngine(cfg, mesh, rules, params, MODES["slotted"], aot=aot)
+    rid = eng.submit(np.arange(1, 9, dtype=np.int32), max_new_tokens=6)
+    eng.step()                           # prefill + first decode
+    emitted = len(eng.live[rid].tokens)
+    assert emitted >= 1
+    eng.params = jax.device_put(
+        jax.tree.map(lambda x: jnp.full_like(x, jnp.nan), eng.params),
+        eng._p_sh)
+    guard = 0
+    while eng.has_work():
+        eng.step()
+        eng.check_invariants()
+        guard += 1
+        assert guard < 100
+    c = eng.completions[rid]
+    assert c.status == "failed"
+    assert "decode" in c.error or "prefill" in c.error
+    assert len(c.tokens) >= emitted               # pre-fault emissions kept
+    assert eng.counters["faults_detected"] > 0
+
+
+def test_chaos_snapshot_kill_restore(setup):
+    """Kill-and-restore mid-episode: snapshot the engine's host truth at
+    an arbitrary step, rebuild a FRESH engine from the (JSON round-
+    tripped) snapshot, finish the stream there — bitwise identical to the
+    uninterrupted run, with no new executable builds."""
+    cfg, mesh, rules, params, aot = setup
+    for name in ("slotted", "paged_chunked", "prefix_preempt"):
+        ec = MODES[name]
+        stream = make_stream(np.random.default_rng(777), cfg.vocab)
+        want, _ = drive(cfg, mesh, rules, params, aot,
+                        MODES["slotted"], stream)
+        for kill_tick in (1, 3, 6):
+            eng = ServeEngine(cfg, mesh, rules, params, ec, aot=aot)
+            eng.prebuild()
+            builds0 = aot.stats["builds"]
+            i, tick = 0, 0
+            while tick < kill_tick and (i < len(stream) or eng.has_work()):
+                while i < len(stream) and stream[i][0] <= tick:
+                    _, prompt, budget = stream[i]
+                    eng.submit(prompt, max_new_tokens=budget, rid=i)
+                    i += 1
+                eng.step()
+                tick += 1
+            # crash boundary: only what snapshot() serialized survives
+            snap = json.loads(json.dumps(eng.snapshot()))
+            del eng
+            eng2 = ServeEngine(cfg, mesh, rules, params, ec, aot=aot)
+            eng2.restore(snap)
+            guard = 0
+            while i < len(stream) or eng2.has_work():
+                while i < len(stream) and stream[i][0] <= tick:
+                    _, prompt, budget = stream[i]
+                    eng2.submit(prompt, max_new_tokens=budget, rid=i)
+                    i += 1
+                eng2.step()
+                eng2.check_invariants()
+                tick += 1
+                guard += 1
+                assert guard < 2000
+            got = [list(eng2.completions[r].tokens)
+                   for r in range(len(stream))]
+            assert got == want, (
+                f"mode={name} kill_tick={kill_tick}: restored engine "
+                f"diverged\n  want={want}\n  got ={got}")
+            assert all(c.status == "ok"
+                       for c in eng2.completions.values())
+            assert eng2.counters["snapshot_restores"] == 1
+            assert aot.stats["builds"] == builds0, (
+                "restore forced fresh compiles")

@@ -1,0 +1,372 @@
+"""Request-lifecycle, snapshot/restore, and checkpoint fault tolerance.
+
+Complements the chaos sweep in test_engine_fuzz.py with targeted
+coverage: deadline expiry in-queue vs mid-decode, cancel() resource
+refunds under the paged+prefix engine, engine snapshot round-trips
+through CheckpointManager on disk, crash-mid-save atomicity, async-save
+error surfacing, the train-side non-finite skip-step, and the elastic
+ZeRO reshard restore.
+"""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro.checkpoint.manager as manager_mod
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_smoke_config
+from repro.configs.base import ShapeConfig
+from repro.core.aot import AotCache
+from repro.launch.mesh import _mk, single_device_mesh
+from repro.models import registry
+from repro.models.common import ShardRules
+from repro.optim import OptConfig
+from repro.optim.buckets import (
+    make_buckets,
+    rescatter_flat,
+    reshard_scattered,
+    resolve_bucket_bytes,
+    unscatter_flat,
+)
+from repro.optim.flat import make_layout
+from repro.serve import EngineConfig, ServeEngine
+from repro.train import LoopConfig, TrainSettings, train
+from repro.train.step import build_train_step, flat_layout_for, opt_state_template
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+@pytest.fixture(scope="module")
+def serve_setup():
+    mesh = single_device_mesh()
+    rules = ShardRules.for_mesh(mesh)
+    cfg = dataclasses.replace(
+        get_smoke_config("smollm-360m"), compute_dtype="float32")
+    params = registry.get_module(cfg).init(cfg, jax.random.PRNGKey(0))
+    return cfg, mesh, rules, params, AotCache("ft")
+
+
+def _mk_engine(serve_setup, ec, **kw):
+    cfg, mesh, rules, params, aot = serve_setup
+    return ServeEngine(cfg, mesh, rules, params, ec, aot=aot, **kw)
+
+
+PAGED_PREFIX = EngineConfig(
+    max_slots=2, max_len=48, kv_layout="paged", page_size=8,
+    prefix_cache=True)
+
+
+# ---------------------------------------------------------------------------
+# Deadlines and cancel
+# ---------------------------------------------------------------------------
+
+
+def test_deadline_expiry_queued_vs_mid_decode(serve_setup):
+    """A queued request expires with zero tokens; a decoding request
+    expires mid-stream keeping what it emitted — both with full resource
+    refund and no exception out of step()."""
+    clock = FakeClock()
+    eng = _mk_engine(
+        serve_setup, EngineConfig(max_slots=1, max_len=48), clock=clock)
+    r0 = eng.submit(np.arange(1, 6, dtype=np.int32), max_new_tokens=20,
+                    deadline_s=4.0)
+    r1 = eng.submit(np.arange(3, 9, dtype=np.int32), max_new_tokens=20,
+                    deadline_s=2.0)   # never gets the single lane
+    guard = 0
+    while eng.has_work():
+        eng.step()
+        eng.check_invariants()
+        clock.t += 1.0
+        guard += 1
+        assert guard < 100
+    c0, c1 = eng.completions[r0], eng.completions[r1]
+    assert c1.status == "timeout" and c1.tokens == []
+    assert c0.status == "timeout" and 0 < len(c0.tokens) < 20
+    assert eng.counters["status_timeout"] == 2
+    # a request that fits its deadline still finishes ok
+    r2 = eng.submit(np.arange(1, 6, dtype=np.int32), max_new_tokens=2,
+                    deadline_s=50.0)
+    eng.drain()
+    assert eng.completions[r2].status == "ok"
+    assert len(eng.completions[r2].tokens) == 2
+
+
+def test_cancel_refunds_blocks_and_deficit(serve_setup):
+    """cancel() under paged+prefix+deficit: mid-decode cancel drops the
+    lane's block refs and refunds its worst-case commitment; queued
+    cancel never touches the pool; neighbors are unaffected."""
+    pre = np.arange(1, 9, dtype=np.int32)          # one full shared block
+    p0 = np.concatenate([pre, [11, 12]]).astype(np.int32)
+    p1 = np.concatenate([pre, [21, 22, 23]]).astype(np.int32)
+    p2 = np.arange(31, 38, dtype=np.int32)
+
+    solo = _mk_engine(serve_setup, PAGED_PREFIX)
+    want1 = list(solo.run([p1], max_new_tokens=6)[0])
+
+    eng = _mk_engine(serve_setup, PAGED_PREFIX)
+    # r0's worst case spans 4 blocks but its prompt maps only 2 — a
+    # mid-decode cancel must refund the outstanding commitment
+    r0 = eng.submit(p0, max_new_tokens=20)
+    r1 = eng.submit(p1, max_new_tokens=6)
+    r2 = eng.submit(p2, max_new_tokens=6)          # queued (2 lanes)
+    for _ in range(3):
+        eng.step()
+    assert any(s is not None and s.rid == r0 for s in eng.slots)
+    deficit_before = eng._deficit
+    assert deficit_before > 0
+    assert eng.cancel(r0) is True                  # mid-decode
+    assert eng._deficit < deficit_before           # commitment refunded
+    eng.check_invariants()
+    assert eng.cancel(r2) is True                  # still queued
+    eng.check_invariants()
+    eng.drain()
+    assert eng.completions[r0].status == "cancelled"
+    assert eng.completions[r2].status == "cancelled"
+    assert eng.completions[r2].tokens == []
+    assert eng.completions[r1].status == "ok"
+    assert list(eng.completions[r1].tokens) == want1
+    assert eng.counters["status_cancelled"] == 2
+    assert eng.alloc.in_use == 0                   # every ref returned
+    eng.check_invariants()
+    # terminal states are idempotent / unknown rids loud
+    assert eng.cancel(r1) is False
+    with pytest.raises(KeyError):
+        eng.cancel(12345)
+
+
+# ---------------------------------------------------------------------------
+# Engine snapshot / restore
+# ---------------------------------------------------------------------------
+
+
+def test_snapshot_restore_roundtrip_through_disk(serve_setup, tmp_path):
+    """Mid-episode snapshot -> CheckpointManager (atomic on-disk write)
+    -> fresh engine -> drain: bitwise the uninterrupted run, and the
+    restored engine's own snapshot equals the saved one (idempotence)."""
+    prompts = [np.arange(1, 1 + n, dtype=np.int32) for n in (5, 9, 13, 7)]
+    ref = _mk_engine(serve_setup, PAGED_PREFIX)
+    want = [list(t) for t in ref.run(prompts, max_new_tokens=6)]
+
+    eng = _mk_engine(serve_setup, PAGED_PREFIX)
+    for i, p in enumerate(prompts):
+        eng.submit(p, max_new_tokens=6, rid=i)
+    for _ in range(3):
+        eng.step()
+    mgr = CheckpointManager(str(tmp_path))
+    eng.save_snapshot(mgr, 7)
+    saved = eng.snapshot()
+    del eng
+
+    eng2 = _mk_engine(serve_setup, PAGED_PREFIX)
+    assert eng2.restore_snapshot(mgr) == 7
+    again = eng2.snapshot()
+    for k in saved:
+        if k != "counters":       # snapshot_restores differs, rest rides
+            assert again[k] == saved[k], f"snapshot not idempotent at {k}"
+    eng2.drain()
+    eng2.check_invariants()
+    got = [list(eng2.completions[r].tokens) for r in range(len(prompts))]
+    assert got == want
+    assert all(c.status == "ok" for c in eng2.completions.values())
+
+
+def test_restore_guards(serve_setup):
+    eng = _mk_engine(serve_setup, PAGED_PREFIX)
+    eng.submit(np.arange(1, 6, dtype=np.int32), max_new_tokens=3)
+    snap = eng.snapshot()
+    # restore target must be fresh
+    with pytest.raises(ValueError, match="fresh"):
+        eng.restore(snap)
+    # and must match the snapshot's EngineConfig
+    other = _mk_engine(
+        serve_setup, dataclasses.replace(PAGED_PREFIX, max_slots=3))
+    with pytest.raises(ValueError, match="EngineConfig"):
+        other.restore(snap)
+    bad = dict(snap, format=99)
+    fresh = _mk_engine(serve_setup, PAGED_PREFIX)
+    with pytest.raises(ValueError, match="format"):
+        fresh.restore(bad)
+    fresh.restore(snap)           # fresh + matching: fine
+    fresh.drain()
+    assert fresh.completions[0].status == "ok"
+
+
+# ---------------------------------------------------------------------------
+# CheckpointManager hardening
+# ---------------------------------------------------------------------------
+
+
+def test_crash_mid_save_restores_previous_step(tmp_path, monkeypatch):
+    """Die between the tmp write and the atomic rename: the previous
+    checkpoint stays the latest restorable state, and the orphaned tmp
+    dir is swept by the next manager."""
+    d = str(tmp_path)
+    tree = {"a": jnp.arange(3.0)}
+    mgr = CheckpointManager(d)
+    mgr.save(1, {"params": tree})
+    with monkeypatch.context() as m:
+        m.setattr(manager_mod.os, "rename",
+                  lambda *a: (_ for _ in ()).throw(OSError("killed")))
+        with pytest.raises(OSError):
+            mgr.save(2, {"params": jax.tree.map(lambda x: x * 2, tree)})
+    assert os.path.isdir(os.path.join(d, ".tmp-2"))   # the orphan
+    step, state = mgr.restore({"params": tree})
+    assert step == 1
+    np.testing.assert_array_equal(np.asarray(state["params"]["a"]),
+                                  np.arange(3.0))
+    mgr2 = CheckpointManager(d)                       # init sweeps tmps
+    assert not any(f.startswith(".tmp") for f in os.listdir(d))
+    assert mgr2.latest_step() == 1
+
+
+def test_async_save_failure_reraises(tmp_path, monkeypatch):
+    """A failed background save must not be silent: the exception
+    surfaces at the next wait() (or save(), which waits first)."""
+    mgr = CheckpointManager(str(tmp_path))
+    tree = {"a": jnp.ones(2)}
+    with monkeypatch.context() as m:
+        m.setattr(manager_mod.np, "savez",
+                  lambda *a, **k: (_ for _ in ()).throw(OSError("disk full")))
+        mgr.save(1, {"params": tree}, blocking=False)
+        with pytest.raises(RuntimeError, match="async checkpoint save"):
+            mgr.wait()
+    mgr.wait()                    # error consumed, manager usable again
+    with monkeypatch.context() as m:
+        m.setattr(manager_mod.np, "savez",
+                  lambda *a, **k: (_ for _ in ()).throw(OSError("disk full")))
+        mgr.save(2, {"params": tree}, blocking=False)
+        with pytest.raises(RuntimeError, match="async checkpoint save"):
+            mgr.save(3, {"params": tree})             # save() waits first
+    mgr.save(4, {"params": tree})
+    assert mgr.latest_step() == 4
+
+
+# ---------------------------------------------------------------------------
+# Train-side non-finite gradient guard
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", ["faithful", "zero"])
+def test_skip_step_is_bitwise_noop(mode):
+    mesh = single_device_mesh() if mode == "faithful" \
+        else _mk((1, 1), ("data", "model"))
+    rules = ShardRules.for_mesh(mesh, faithful=(mode == "faithful"))
+    cfg = get_smoke_config("smollm-360m")
+    opt = OptConfig(kind="adam", lr=1e-3, bucket_mb=0.05)
+    tset = TrainSettings(faithful=(mode == "faithful"),
+                         flat_engine="auto" if mode == "faithful" else "zero")
+    step = jax.jit(build_train_step(cfg, mesh, rules, opt, tset))
+    params = registry.get_module(cfg).init(cfg, jax.random.PRNGKey(0))
+    init_fn, _ = opt_state_template(cfg, mesh, rules, opt, tset)
+    opt_state = init_fn(params)
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab, (4, 17)), jnp.int32)}
+
+    p1, o1, m1 = step(params, opt_state, batch)
+    assert float(m1["skipped"]) == 0.0
+    assert int(o1["step"]) == 1
+
+    # poison one weight -> NaN loss -> non-finite flat gradient
+    leaves, tree = jax.tree.flatten(params)
+    badp = jax.tree.unflatten(
+        tree, [leaves[0].at[(0,) * leaves[0].ndim].set(jnp.inf)] + leaves[1:])
+    p2, o2, m2 = step(badp, o1, batch)
+    assert float(m2["skipped"]) == 1.0
+    assert int(o2["step"]) == 1               # Adam bias step frozen
+    for a, b in zip(jax.tree.leaves(badp), jax.tree.leaves(p2)):
+        assert np.array_equal(np.asarray(a), np.asarray(b), equal_nan=True)
+    for k in ("m", "v"):
+        for a, b in zip(jax.tree.leaves(o1[k]), jax.tree.leaves(o2[k])):
+            assert np.array_equal(np.asarray(a), np.asarray(b)), \
+                f"{k} mutated by a skipped step"
+
+
+def test_loop_reports_skipped_steps(tmp_path):
+    mesh = _mk((1, 1), ("data", "model"))
+    rules = ShardRules.for_mesh(mesh)
+    cfg = get_smoke_config("smollm-360m")
+    res = train(cfg, ShapeConfig("t", "train", 16, 8), mesh, rules,
+                OptConfig(kind="adam", lr=1e-2, bucket_mb=0.05),
+                TrainSettings(flat_engine="zero"),
+                LoopConfig(steps=2, ckpt_every=0, log_every=0))
+    assert res["skipped_steps"] == 0          # healthy run: none skipped
+
+
+# ---------------------------------------------------------------------------
+# Elastic ZeRO restore (dp resize)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(sizes=st.lists(st.integers(1, 50), min_size=1, max_size=5),
+       seed=st.integers(0, 10**6))
+def test_reshard_scattered_dp8_to_dp4_property(sizes, seed):
+    """Bucket-major scattered buffers re-lay exactly across dp sizes:
+    reshard(scatter_dp8(x)) == scatter_dp4(x) bitwise, and unscatter
+    inverts rescatter."""
+    rng = np.random.default_rng(seed)
+    tree = {f"p{i}": np.zeros((s,), np.float32) for i, s in enumerate(sizes)}
+    layout = make_layout(tree)
+    flat = rng.standard_normal(layout.total).astype(np.float32)
+    b8 = make_buckets(layout, bucket_bytes=64, n_shards=8)
+    b4 = make_buckets(layout, bucket_bytes=64, n_shards=4)
+    s8 = rescatter_flat(flat, b8)
+    assert np.array_equal(unscatter_flat(s8, b8), flat)
+    assert np.array_equal(reshard_scattered(s8, b8, b4),
+                          rescatter_flat(flat, b4))
+    assert np.array_equal(reshard_scattered(rescatter_flat(flat, b4), b4, b8),
+                          s8)
+
+
+def test_elastic_zero_restore_end_to_end(tmp_path):
+    """Resume a ZeRO run from a checkpoint whose scattered m/v were laid
+    out for dp=8: the loop reshards host-side and the continued run is
+    bitwise the uninterrupted one."""
+    mesh = _mk((1, 1), ("data", "model"))
+    rules = ShardRules.for_mesh(mesh)
+    cfg = get_smoke_config("smollm-360m")
+    shape = ShapeConfig("t", "train", 16, 8)
+    opt = OptConfig(kind="adam", lr=1e-2, bucket_mb=0.05)
+    tset = TrainSettings(flat_engine="zero")
+    d1, d2 = str(tmp_path / "dp1"), str(tmp_path / "dp8")
+
+    ref = train(cfg, shape, mesh, rules, opt, tset,
+                LoopConfig(steps=6, ckpt_every=3, ckpt_dir=d1, log_every=0))
+
+    # rewrite the step-3 checkpoint as a dp=8 job would have saved it
+    layout = flat_layout_for(cfg)
+    bb = resolve_bucket_bytes(opt.bucket_mb, group_size=1)
+    b1 = make_buckets(layout, bucket_bytes=bb, n_shards=1)
+    b8 = make_buckets(layout, bucket_bytes=bb, n_shards=8)
+    f32 = lambda n: jax.ShapeDtypeStruct((n,), jnp.float32)
+    tmpl = {"params": registry.abstract_params(cfg),
+            "opt": {"step": jax.ShapeDtypeStruct((), jnp.int32),
+                    "m": f32(b1.scattered_total),
+                    "v": f32(b1.scattered_total)}}
+    step3, state = CheckpointManager(d1).restore(tmpl, step=3)
+    assert step3 == 3
+    CheckpointManager(d2).save(3, {
+        "params": state["params"],
+        "opt": {"step": state["opt"]["step"],
+                "m": reshard_scattered(state["opt"]["m"], b1, b8),
+                "v": reshard_scattered(state["opt"]["v"], b1, b8)},
+    }, extra_meta={"flat_engine": "zero", "zero_n_shards": 8,
+                   "zero_bucket_bytes": bb})
+
+    res = train(cfg, shape, mesh, rules, opt, tset,
+                LoopConfig(steps=6, ckpt_every=0, ckpt_dir=d2, log_every=0))
+    for a, b in zip(jax.tree.leaves(ref["params"]),
+                    jax.tree.leaves(res["params"])):
+        assert np.array_equal(np.asarray(a), np.asarray(b)), \
+            "resharded resume diverged from the uninterrupted run"
