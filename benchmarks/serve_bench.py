@@ -67,6 +67,16 @@ Modes:
                       block) with recurrent mamba leaves — one cache
                       dict, same admission/eviction flow
                       (``headline.hybrid_greedy_parity``).
+    continuous_router the multi-replica front-end: a ``Router`` over 3
+                      slotted replicas (one weight copy, one shared
+                      AotCache), all requests submitted up front, one
+                      replica KILLED at a fixed tick mid-drive and a
+                      second drained + reinstated.  Every request must
+                      finish ``ok`` on a survivor with greedy tokens
+                      bitwise the fault-free single-engine drive
+                      (``failover_parity``), zero requests lost, and no
+                      steady-state builds (ci.sh gates all four plus
+                      failovers > 0).
     continuous_chaos  the paged engine under a seeded ``FaultPlan``
                       (injected non-finite logits, failed allocs, prefill
                       and sched-push faults) with a generous retry budget:
@@ -350,6 +360,71 @@ def run_chaos(cfg, mesh, rules, params, trace: list[_Req], *,
     }
 
 
+def run_router(cfg, mesh, rules, params, trace: list[_Req], *,
+               replicas: int, max_slots: int, max_len: int,
+               kill_tick: int = 2, drain_tick: int = 5,
+               reinstate_tick: int = 8, aot=None) -> dict:
+    """Router fleet chaos drive: ``replicas`` slotted engines behind the
+    front-end, one killed deterministically at ``kill_tick`` (its
+    in-flight requests rebuild from the router's stream mirrors — the
+    engine is never touched again), another drained at ``drain_tick``
+    and reinstated at ``reinstate_tick``.  Failover parity means every
+    recovered stream is bitwise the fault-free single-engine drive."""
+    from repro.serve import EngineConfig, Router, RouterConfig, ServeEngine
+
+    ec = EngineConfig(max_slots=max_slots, max_len=max_len)
+
+    ref = ServeEngine(cfg, mesh, rules, params, ec, aot=aot)
+    rids = [ref.submit(r.prompt, max_new_tokens=r.budget, rid=r.rid)
+            for r in trace]
+    ref.drain()
+    want = [list(ref.completions[r].tokens) for r in rids]
+
+    router = Router(
+        cfg, mesh, rules, params, ec,
+        RouterConfig(replicas=replicas, shed_queue_depth=len(trace) + 1),
+        aot=aot)
+    router.prebuild()
+    b0 = router.stats["builds"]
+    for r in trace:
+        router.submit(r.prompt, max_new_tokens=r.budget, rid=r.rid)
+    migrated = 0
+    t0 = time.perf_counter()
+    guard = 0
+    while router.has_work():
+        router.step()
+        router.check_invariants()
+        if router.tick == kill_tick:
+            router.kill(replicas - 1)
+        if router.tick == drain_tick and \
+                router.replicas[0].state == "live" and \
+                sum(h.state == "live" for h in router.replicas) >= 2:
+            migrated = router.drain(0)
+        if router.tick == reinstate_tick and \
+                router.replicas[0].state == "drained":
+            router.reinstate(0)
+        guard += 1
+        assert guard < 100_000, "router drive failed to drain"
+    wall = time.perf_counter() - t0
+
+    got = [list(router.completions[r.rid].tokens) for r in trace]
+    statuses = [router.completions[r.rid].status for r in trace]
+    tokens = sum(len(t) for t in got)
+    c = router.counters
+    return {
+        "tokens_per_s": tokens / wall, "useful_tokens": tokens,
+        "wall_s": wall, "replicas": replicas,
+        "requests_lost": c["submitted"] - len(router.completions),
+        "all_ok": all(s == "ok" for s in statuses),
+        "failover_parity": got == want,
+        "failovers": c["failovers"],
+        "migrated": migrated,
+        "replicas_dead": c["replicas_dead"],
+        "cache_routed": c["cache_routed"],
+        "steady_builds_delta": router.stats["builds"] - b0,
+    }
+
+
 def check_recurrent_parity(cfg, trace: list[_Req], *, max_slots: int,
                            max_len: int, preempt_tick: int = 3) -> dict:
     """Greedy parity of the recurrent/hybrid slot engine vs the legacy
@@ -557,6 +632,9 @@ def main(argv=None) -> dict:
         cfg, mesh, rules, params, trace, max_slots=max_slots,
         max_len=max_len, page_size=page_size, num_blocks=num_blocks,
         aot=aot)
+    report["modes"]["continuous_router"] = run_router(
+        cfg, mesh, rules, params, trace, replicas=3, max_slots=max_slots,
+        max_len=max_len, aot=aot)
 
     # --- recurrent state kinds: the SAME engine over ssm + hybrid ------
     # f32 compute so the engine-vs-generate_static parity checks are
@@ -623,6 +701,18 @@ def main(argv=None) -> dict:
             report["modes"]["continuous_chaos"]["recovery_overhead"]),
         "chaos_steady_builds_delta": (
             report["modes"]["continuous_chaos"]["steady_builds_delta"]),
+        # router fleet: a replica crash mid-drive must be invisible in
+        # the output — zero lost, all ok, bitwise the single-engine run
+        "router_requests_lost": (
+            report["modes"]["continuous_router"]["requests_lost"]),
+        "router_all_ok": report["modes"]["continuous_router"]["all_ok"],
+        "router_failover_parity": (
+            report["modes"]["continuous_router"]["failover_parity"]),
+        "router_failovers": (
+            report["modes"]["continuous_router"]["failovers"]),
+        "router_migrated": report["modes"]["continuous_router"]["migrated"],
+        "router_steady_builds_delta": (
+            report["modes"]["continuous_router"]["steady_builds_delta"]),
         # recurrent/hybrid: slot serving generalized beyond the lm
         # families — engine-vs-static greedy parity, preempt-resume
         # parity (ssm), and dispatch flatness across both new modes

@@ -16,6 +16,7 @@ echo "== tier-1 suite (8 forced host devices; 200-episode engine fuzz) =="
 XLA_FLAGS="--xla_force_host_platform_device_count=8" \
   ENGINE_FUZZ_EPISODES="${ENGINE_FUZZ_EPISODES:-200}" \
   CHAOS_FUZZ_EPISODES="${CHAOS_FUZZ_EPISODES:-6}" \
+  ROUTER_FUZZ_EPISODES="${ROUTER_FUZZ_EPISODES:-6}" \
   python -m pytest -x -q "$@"
 
 echo "== overlap bench (smoke) =="
@@ -66,6 +67,10 @@ print(f"  chaos: faults {h['chaos_faults_fired']}  all_ok {h['chaos_all_ok']}  "
       f"parity {h['chaos_token_parity']}  "
       f"overhead {h['chaos_recovery_overhead']:.2f}x  "
       f"builds_delta {h['chaos_steady_builds_delta']}")
+print(f"  router: lost {h['router_requests_lost']}  all_ok {h['router_all_ok']}  "
+      f"failover_parity {h['router_failover_parity']}  "
+      f"failovers {h['router_failovers']}  migrated {h['router_migrated']}  "
+      f"builds_delta {h['router_steady_builds_delta']}")
 if h["steady_builds_delta"] != 0:
     sys.exit("FAIL: serve decode built executables after warmup "
              "(AOT dispatch cache regression)")
@@ -119,6 +124,21 @@ if not h["chaos_token_parity"]:
 if h["chaos_steady_builds_delta"] != 0:
     sys.exit("FAIL: fault recovery built new executables — retries must "
              "reuse the prebuilt bucketed programs")
+if h["router_requests_lost"] != 0:
+    sys.exit("FAIL: the router lost requests across a replica crash — "
+             "failover must conserve every submitted request")
+if not h["router_all_ok"]:
+    sys.exit("FAIL: a request did not finish 'ok' after replica "
+             "crash/drain (router failover regression)")
+if not h["router_failover_parity"]:
+    sys.exit("FAIL: failover changed greedy tokens — the rebuilt resume "
+             "on a survivor is no longer bitwise")
+if h["router_failovers"] <= 0:
+    sys.exit("FAIL: the router mode never failed over — its parity gate "
+             "is vacuous (the kill tick no longer strands requests)")
+if h["router_steady_builds_delta"] != 0:
+    sys.exit("FAIL: the replica fleet built executables after prebuild — "
+             "replicas must share one AOT cache")
 EOF
 
 echo "== docs link check =="

@@ -5,6 +5,10 @@
 * keep_k: bounded disk usage.
 * Async: saves can run on a background thread so the train loop only pays
   the device->host transfer (double-buffered on host).
+* Retry: transient save I/O errors (NFS blips, momentary ENOSPC) retry
+  with exponential backoff (bounded, injectable sleep) before surfacing —
+  a blip during async persistence doesn't become a hard failure at the
+  next ``wait()``.
 * Elastic restore: checkpoints are mesh-agnostic host arrays; ``restore``
   re-shards onto whatever mesh/rules the new job runs with — the recovery
   path after losing a pod (restore a 512-chip run onto 256 chips).
@@ -15,6 +19,7 @@ import json
 import os
 import shutil
 import threading
+import time
 from typing import Any, Callable
 
 import jax
@@ -47,9 +52,19 @@ def _unflatten_like(template, flat: dict[str, np.ndarray]):
 
 
 class CheckpointManager:
-    def __init__(self, directory: str, keep_k: int = 3):
+    def __init__(self, directory: str, keep_k: int = 3, *,
+                 save_retries: int = 3, retry_backoff_s: float = 0.05,
+                 sleep: Callable[[float], None] = time.sleep):
+        if save_retries < 1:
+            raise ValueError("save_retries must be >= 1")
         self.dir = directory
         self.keep_k = keep_k
+        # bounded retry around transient save I/O: attempt save_retries
+        # times total, backing off retry_backoff_s * 2**attempt between
+        # tries.  ``sleep`` is injectable so tests don't wait in real time.
+        self.save_retries = save_retries
+        self.retry_backoff_s = retry_backoff_s
+        self._sleep = sleep
         os.makedirs(directory, exist_ok=True)
         self._thread: threading.Thread | None = None
         # a failed async _write parks its exception here; wait() (and so
@@ -97,6 +112,20 @@ class CheckpointManager:
             self._error = e
 
     def _write(self, step: int, host: dict, meta: dict) -> None:
+        """One save, retried through transient ``OSError``s.  Each
+        attempt restarts from the tmp dir (``_write_once`` resets it), so
+        a half-written attempt never leaks into the renamed checkpoint;
+        after the last attempt the error propagates (and the orphaned
+        tmp dir is left for the init-time sweep, as before)."""
+        for attempt in range(self.save_retries):
+            try:
+                return self._write_once(step, host, meta)
+            except OSError:
+                if attempt + 1 >= self.save_retries:
+                    raise
+                self._sleep(self.retry_backoff_s * 2 ** attempt)
+
+    def _write_once(self, step: int, host: dict, meta: dict) -> None:
         tmp = os.path.join(self.dir, f".tmp-{step}")
         final = os.path.join(self.dir, f"step_{step:010d}")
         if os.path.exists(tmp):

@@ -1,9 +1,16 @@
 """Serving launcher.
 
-Continuous-batching engine under a Poisson request stream (the default):
+Continuous-batching engine(s) behind the router front-end under a
+Poisson request stream (the default):
 
     python -m repro.launch.serve --arch smollm-360m --smoke \
         --requests 16 --rate 20 --max-slots 8
+
+Multi-replica serving with crash failover, load shedding, and
+zero-downtime drain (serve/router.py):
+
+    python -m repro.launch.serve --arch smollm-360m --smoke \
+        --requests 32 --replicas 3 --drain-at 8 --shed-queue-depth 16
 
 The engine serves every slot-capable family — lm KV caches and the
 recurrent state kinds alike (xlstm's per-lane recurrent state, zamba's
@@ -33,8 +40,8 @@ from repro.launch.mesh import local_mesh, make_production_mesh, single_device_me
 from repro.models import registry
 from repro.models.common import ShardRules
 from repro.serve import (
-    FAULT_SITES, EngineConfig, FaultPlan, ServeConfig, ServeEngine,
-    generate_static,
+    ENGINE_FAULT_SITES, REPLICA_FAULT_SITES, STATUSES, EngineConfig,
+    FaultPlan, Router, RouterConfig, ServeConfig, generate_static,
 )
 
 
@@ -55,22 +62,60 @@ def run_static(cfg, mesh, rules, params, args, rng):
         print(f"seq{i}: {row.tolist()}")
 
 
+def _pctl(xs, q):
+    return float(np.percentile(np.asarray(xs), q))
+
+
+def _print_latency_summary(completions):
+    """Per-status latency table: p50/p99 time-to-first-token and
+    per-token latency, one row per terminal status that occurred."""
+    by_status = {}
+    for c in completions.values():
+        by_status.setdefault(c.status, []).append(c)
+    print("-- latency by status (p50/p99 ms):")
+    for status in STATUSES:
+        cs = by_status.get(status)
+        if not cs:
+            continue
+        ttft = [(c.token_times[0] - c.submit_time) * 1e3
+                for c in cs if c.token_times]
+        tpot = [(c.finish_time - c.submit_time) / len(c.tokens) * 1e3
+                for c in cs if c.tokens]
+        fmt = lambda xs: (f"{_pctl(xs, 50):8.1f}/{_pctl(xs, 99):8.1f}"
+                          if xs else "       -/       -")
+        print(f"   {status:9s} n={len(cs):4d}  "
+              f"ttft {fmt(ttft)}  per-token {fmt(tpot)}")
+
+
 def run_stream(cfg, mesh, rules, params, args, rng):
-    """Drive the continuous-batching engine with a Poisson arrival trace."""
+    """Drive N engine replicas behind the router front-end with a
+    Poisson arrival trace (``--replicas 1`` is a plain engine with the
+    router's admission queue in front)."""
     kind = registry.state_kind(cfg)
     if args.kv_layout == "paged" and kind != "kv":
         raise SystemExit(
             f"--kv-layout paged: family {cfg.family!r} has state kind "
             f"{kind!r} — recurrent state has no seq axis to page; "
             "drop the flag to serve on the slotted layout")
+    if args.drain_at is not None and args.replicas < 2:
+        raise SystemExit("--drain-at needs --replicas >= 2 (draining the "
+                         "only replica leaves nothing to migrate onto)")
     max_len = args.prompt_len + args.new_tokens + 8
     if args.kv_layout == "paged":
         max_len = -(-max_len // args.page_size) * args.page_size
     faults = None
+    if args.replica_chaos_rate > 0:
+        faults = FaultPlan(
+            args.chaos_seed,
+            {site: args.replica_chaos_rate for site in REPLICA_FAULT_SITES})
+    engine_faults = None
     if args.chaos_rate > 0:
-        faults = FaultPlan(args.chaos_seed,
-                           {site: args.chaos_rate for site in FAULT_SITES})
-    engine = ServeEngine(
+        engine_faults = [
+            FaultPlan(args.chaos_seed + 1 + i,
+                      {site: args.chaos_rate for site in ENGINE_FAULT_SITES})
+            for i in range(args.replicas)
+        ]
+    router = Router(
         cfg, mesh, rules, params,
         EngineConfig(
             max_slots=args.max_slots,
@@ -84,7 +129,10 @@ def run_stream(cfg, mesh, rules, params, args, rng):
             admission=args.admission,
             max_retries=args.max_retries,
         ),
+        RouterConfig(replicas=args.replicas,
+                     shed_queue_depth=args.shed_queue_depth),
         faults=faults,
+        engine_faults=engine_faults,
     )
     arrivals = np.cumsum(rng.exponential(1.0 / args.rate, args.requests))
     prompts = [
@@ -96,45 +144,61 @@ def run_stream(cfg, mesh, rules, params, args, rng):
 
     t0 = time.perf_counter()
     i = 0
-    while i < len(prompts) or engine.has_work():
+    drained = False
+    while i < len(prompts) or router.has_work():
         now = time.perf_counter() - t0
         while i < len(prompts) and arrivals[i] <= now:
-            engine.submit(prompts[i], max_new_tokens=int(budgets[i]),
+            router.submit(prompts[i], max_new_tokens=int(budgets[i]),
                           temperature=args.temperature, rid=i,
                           deadline_s=args.deadline_s)
             i += 1
-        if not engine.step() and i < len(prompts):
+        if (args.drain_at is not None and not drained
+                and len(router.completions) >= args.drain_at):
+            idx = args.replicas - 1
+            moved = router.drain(idx)
+            print(f"-- drained replica {idx}: migrated {moved} in-flight "
+                  "requests to survivors")
+            drained = True
+        if not router.step() and i < len(prompts):
             time.sleep(max(0.0, t0 + arrivals[i] - time.perf_counter()))
     wall = time.perf_counter() - t0
 
     tokens = 0
     for rid in range(len(prompts)):
-        c = engine.completions[rid]
+        c = router.completions[rid]
         tokens += len(c.tokens)
         lat = (f"{(c.finish_time - c.submit_time) / len(c.tokens) * 1e3:.1f}"
                " ms/tok" if c.tokens else "-")
         note = f"  [{c.error}]" if c.error else ""
-        print(f"req{rid}: {c.status:9s} plen={c.prompt_len} "
+        where = router.placements.get(rid)
+        place = f"r{where}" if where is not None else "--"
+        print(f"req{rid}: {c.status:9s} {place} plen={c.prompt_len} "
               f"new={len(c.tokens)} {lat}  {c.tokens}{note}")
-    print(f"-- {tokens} tokens in {wall:.2f}s = {tokens / wall:.1f} tok/s")
-    print(f"-- state[{engine.stats['state_kind']}/{args.kv_layout}]: "
-          f"{engine.stats['kv_peak_used_bytes'] / 2**20:.2f} MiB peak used / "
-          f"{engine.kv_reserved_bytes / 2**20:.2f} MiB reserved")
-    if args.kv_layout == "paged":
-        s = engine.stats
-        print(f"-- prefix cache: hit_rate {s['prefix_hit_rate']:.2f} "
-              f"({s['prefix_hit_tokens']}/{s['prefix_lookup_tokens']} tokens, "
-              f"{s['cow_copies']} COW)  preemptions {s['preemptions']} "
-              f"(resumed {s['resumed']})")
-    s = engine.stats
-    print(f"-- status: ok {s['status_ok']} timeout {s['status_timeout']} "
-          f"cancelled {s['status_cancelled']} failed {s['status_failed']}  "
-          f"retries {s['retries']}")
-    if faults is not None:
-        print(f"-- chaos[seed {args.chaos_seed}]: injected "
-              f"{s['faults_injected']} detected {s['faults_detected']}  "
-              f"{faults.stats()}")
-    print(f"-- stats: {engine.stats}")
+    print(f"-- {tokens} tokens in {wall:.2f}s = {tokens / wall:.1f} tok/s "
+          f"across {args.replicas} replica(s)")
+    for h in router.replicas:
+        s = h.engine.stats
+        line = (f"-- replica {h.idx} [{h.state}] "
+                f"state[{s['state_kind']}/{args.kv_layout}]: "
+                f"{s['kv_peak_used_bytes'] / 2**20:.2f} MiB peak used / "
+                f"{h.engine.kv_reserved_bytes / 2**20:.2f} MiB reserved")
+        if args.kv_layout == "paged":
+            line += (f"  prefix hit_rate {s['prefix_hit_rate']:.2f} "
+                     f"preempt {s['preemptions']} resume {s['resumed']}")
+        print(line)
+    rs = router.stats
+    print(f"-- status: ok {rs['status_ok']} timeout {rs['status_timeout']} "
+          f"cancelled {rs['status_cancelled']} failed {rs['status_failed']} "
+          f"shed {rs['status_shed']}  "
+          f"failovers {rs['failovers']} migrated {rs['migrated']}")
+    if faults is not None or engine_faults is not None:
+        injected = sum(h.engine.stats["faults_injected"]
+                       for h in router.replicas)
+        print(f"-- chaos[seed {args.chaos_seed}]: engine faults {injected}  "
+              f"replicas dead {rs['replicas_dead']} "
+              f"stalls {rs['stalls_injected']}/{rs['stalls_detected']} "
+              f"(injected/detected)")
+    _print_latency_summary(router.completions)
 
 
 def main():
@@ -155,6 +219,17 @@ def main():
                     help="Poisson arrival rate, requests/s")
     ap.add_argument("--max-slots", type=int, default=4)
     ap.add_argument("--seed", type=int, default=0)
+    # router front-end knobs (continuous engine)
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="engine replicas behind the router (shared AOT "
+                         "cache + weights; crash failover between them)")
+    ap.add_argument("--shed-queue-depth", type=int, default=64,
+                    help="bounded admission queue: submissions beyond "
+                         "this depth terminate with status 'shed'")
+    ap.add_argument("--drain-at", type=int, default=None,
+                    help="after this many completions, drain the last "
+                         "replica (zero-downtime migration to survivors); "
+                         "needs --replicas >= 2")
     # KV layout knobs (continuous engine)
     ap.add_argument("--kv-layout", choices=("slotted", "paged"),
                     default="slotted")
@@ -177,9 +252,13 @@ def main():
                     help="bounded retries (preempt-and-replay) before a "
                          "faulting request terminates 'failed'")
     ap.add_argument("--chaos-rate", type=float, default=0.0,
-                    help=">0: inject seeded faults at every fault site "
-                         "with this per-consult probability (exercises "
-                         "quarantine + retry recovery)")
+                    help=">0: inject seeded faults at every per-engine "
+                         "fault site with this per-consult probability "
+                         "(exercises quarantine + retry recovery)")
+    ap.add_argument("--replica-chaos-rate", type=float, default=0.0,
+                    help=">0: inject seeded replica crashes/stalls at "
+                         "this per-tick probability (exercises router "
+                         "failover; pair with --replicas >= 2)")
     ap.add_argument("--chaos-seed", type=int, default=0,
                     help="FaultPlan seed (reproducible fault schedules)")
     ap.add_argument("--admission", choices=("deficit", "preempt"),

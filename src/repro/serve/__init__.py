@@ -7,8 +7,15 @@ from .cache import (
     slot_state_specs,
 )
 from .engine import STATUSES, Completion, EngineConfig, ServeEngine
-from .faults import FAULT_SITES, NONFINITE_TOKEN, FaultPlan
+from .faults import (
+    ENGINE_FAULT_SITES,
+    FAULT_SITES,
+    NONFINITE_TOKEN,
+    REPLICA_FAULT_SITES,
+    FaultPlan,
+)
 from .loop import ServeConfig, generate, generate_static
+from .router import ReplicaHandle, Router, RouterConfig
 from .paged import (
     BlockAllocator,
     SlotTables,
@@ -30,7 +37,9 @@ from .step import (
 
 __all__ = [
     "Completion", "EngineConfig", "ServeEngine", "STATUSES",
-    "FaultPlan", "FAULT_SITES", "NONFINITE_TOKEN",
+    "FaultPlan", "FAULT_SITES", "ENGINE_FAULT_SITES",
+    "REPLICA_FAULT_SITES", "NONFINITE_TOKEN",
+    "Router", "RouterConfig", "ReplicaHandle",
     "ServeConfig", "generate", "generate_static",
     "KeyMirror", "RecurrentCache", "bucket_for", "make_slot_state",
     "prompt_buckets", "slot_state_specs",

@@ -179,8 +179,11 @@ class _Slot:
 
 
 # Terminal per-request statuses (Completion.status).  Failures are data,
-# not exceptions: step() never raises for a request-level fault.
-STATUSES = ("ok", "timeout", "cancelled", "failed")
+# not exceptions: step() never raises for a request-level fault.  "shed"
+# is produced only by the router front-end (load shedding rejects a
+# request before any engine ever holds it), but it lives in the shared
+# vocabulary so Completion consumers handle one status set.
+STATUSES = ("ok", "timeout", "cancelled", "failed", "shed")
 
 
 @dataclasses.dataclass
@@ -358,8 +361,11 @@ class ServeEngine:
             "replayed_tokens": 0,
             # fault-tolerance lifecycle
             "status_ok": 0, "status_timeout": 0, "status_cancelled": 0,
-            "status_failed": 0, "retries": 0, "faults_injected": 0,
-            "faults_detected": 0, "snapshot_restores": 0,
+            "status_failed": 0, "status_shed": 0, "retries": 0,
+            "faults_injected": 0, "faults_detected": 0,
+            "snapshot_restores": 0,
+            # per-request migration (router failover / drain)
+            "exported": 0, "imported": 0,
         }
         self._next_rid = 0
         # lanes barred from admission for this many more steps after a
@@ -504,17 +510,11 @@ class ServeEngine:
     # ------------------------------------------------------------------
     # Request lifecycle
     # ------------------------------------------------------------------
-    def submit(self, prompt, *, max_new_tokens: int = 16,
-               temperature: float = 0.0, top_k: int | None = None,
-               top_p: float | None = None, rid: int | None = None,
-               deadline_s: float | None = None) -> int:
-        """Queue a request; returns its request id.  ``top_k``/``top_p``
-        default to the engine-wide ``EngineConfig`` values.
-
-        ``deadline_s`` is a per-request TTL measured from submission: a
-        request still queued (or still decoding) when the deadline passes
-        terminates with status ``"timeout"``, keeping whatever tokens it
-        had emitted."""
+    def validate(self, prompt, max_new_tokens: int) -> np.ndarray:
+        """Admissibility checks for a request against this engine's
+        config — pure config math, no engine state, so the router
+        front-end can validate at its own admission boundary before any
+        replica holds the request.  Returns the normalized prompt."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if prompt.size < 1:
             raise ValueError("empty prompt")
@@ -534,6 +534,20 @@ class ServeEngine:
                     f"request needs up to {wc} KV blocks but the pool only "
                     f"has {self.alloc.capacity}"
                 )
+        return prompt
+
+    def submit(self, prompt, *, max_new_tokens: int = 16,
+               temperature: float = 0.0, top_k: int | None = None,
+               top_p: float | None = None, rid: int | None = None,
+               deadline_s: float | None = None) -> int:
+        """Queue a request; returns its request id.  ``top_k``/``top_p``
+        default to the engine-wide ``EngineConfig`` values.
+
+        ``deadline_s`` is a per-request TTL measured from submission: a
+        request still queued (or still decoding) when the deadline passes
+        terminates with status ``"timeout"``, keeping whatever tokens it
+        had emitted."""
+        prompt = self.validate(prompt, max_new_tokens)
         eff_k = int(self.econ.top_k if top_k is None else top_k)
         eff_p = float(self.econ.top_p if top_p is None else top_p)
         if deadline_s is not None and deadline_s <= 0:
@@ -1444,6 +1458,77 @@ class ServeEngine:
         self.counters.update(snap["counters"])
         self._next_rid = int(snap["next_rid"])
         self.counters["snapshot_restores"] += 1
+
+    # -- per-request migration (router failover / drain) ---------------
+    def export_request(self, rid: int) -> dict:
+        """Remove one in-flight request from THIS engine and serialize it
+        for migration to another replica (the router's drain path).
+
+        A lane occupant is first preempted — migration IS a preemption,
+        just resumed elsewhere: blocks free, the deficit refunds, and the
+        emitted tokens ride along as the replay.  The returned dict is
+        JSON-able, shaped like one entry of :meth:`snapshot`:
+        ``{"pending": ..., "completion": ... | None}`` (the live
+        Completion travels with a resume so replay forcing and result
+        continuity survive the move).  Raises ``KeyError`` for unknown
+        rids and ``ValueError`` for already-terminal ones."""
+        if rid in self.completions:
+            raise ValueError(f"rid {rid} is already terminal")
+        for slot, s in enumerate(self.slots):
+            if s is not None and s.rid == rid:
+                self._preempt(slot)     # now front-of-queue, resume=True
+                break
+        for idx, req in enumerate(self.queue):
+            if req.rid == rid:
+                del self.queue[idx]
+                comp = self.live.pop(rid, None) if req.resume else None
+                self.counters["exported"] += 1
+                return {
+                    "pending": self._snap_pending(req),
+                    "completion":
+                        None if comp is None else self._snap_completion(comp),
+                }
+        raise KeyError(f"unknown rid {rid}")
+
+    def import_request(self, snap: dict, *, front: bool = False) -> int:
+        """Install a request exported from another replica (or rebuilt by
+        the router from its own stream mirror after a crash) into this
+        engine's queue.  ``front=True`` preserves the resume-first FCFS
+        priority a preemption would have had.  The request then admits,
+        re-prefills, and replays through the ordinary resume path —
+        bitwise the uninterrupted stream under greedy decoding.
+
+        Unlike :meth:`restore` this composes with a BUSY engine: rid
+        uniqueness is checked against everything this engine knows."""
+        req = snap["pending"]
+        rid = int(req["rid"])
+        if (rid in self.live or rid in self.completions
+                or any(r.rid == rid for r in self.queue)):
+            raise ValueError(f"rid {rid} already known to this engine")
+        resume = bool(req["resume"])
+        comp = snap.get("completion")
+        if resume and comp is None:
+            raise ValueError(f"resume import of rid {rid} without its "
+                             "live Completion")
+        prompt = self.validate(np.asarray(req["prompt"], np.int32),
+                               int(req["max_new_tokens"]))
+        deadline = req["deadline"]
+        if deadline is not None:
+            self._has_deadlines = True
+        # min_free resets to 0: it damped re-admission against the OLD
+        # replica's pool pressure, which stayed behind with it
+        pending = _Pending(
+            rid, prompt, int(req["max_new_tokens"]),
+            float(req["temperature"]), int(req["top_k"]),
+            float(req["top_p"]), float(req["submit_time"]),
+            deadline=deadline, resume=resume, limit=int(req["limit"]),
+            replay=tuple(int(t) for t in req["replay"]))
+        if resume:
+            self.live[rid] = self._load_completion(comp)
+        (self.queue.appendleft if front else self.queue.append)(pending)
+        self._next_rid = max(self._next_rid, rid + 1)
+        self.counters["imported"] += 1
+        return rid
 
     def save_snapshot(self, mgr, step: int) -> None:
         """Persist :meth:`snapshot` through a

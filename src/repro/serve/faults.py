@@ -24,6 +24,20 @@ Sites:
 ``sched_push``     lose a host->device scheduling push; the host mirror
                    is the source of truth, so recovery is an idempotent
                    re-push of the same vectors.
+``replica_crash``  (router-level) one engine replica dies outright: its
+                   host state is gone and the router fails its in-flight
+                   requests over to survivors from its own stream
+                   mirrors.
+``replica_stall``  (router-level) one replica hangs without dying; the
+                   router's step-budget health check detects the missing
+                   progress and fails it over like a crash.
+
+The engine consults the first four sites; the router front-end
+(``serve/router.py``) consults the two ``replica_*`` sites.  Victim
+selection (``pick``) draws from a separate ``(seed, site, victim)``
+substream, so whether a consult fires perturbs neither later fires at
+that site nor any other site's schedule — the fire/skip sequence depends
+only on consult order.
 
 The engine's recovery machinery is shared with normal operation (the
 PR-4/5 preempt-and-requeue path), so every executable a retry dispatches
@@ -33,7 +47,13 @@ from __future__ import annotations
 
 import numpy as np
 
-FAULT_SITES = ("decode_logits", "prefill", "alloc", "sched_push")
+ENGINE_FAULT_SITES = ("decode_logits", "prefill", "alloc", "sched_push")
+REPLICA_FAULT_SITES = ("replica_crash", "replica_stall")
+FAULT_SITES = ENGINE_FAULT_SITES + REPLICA_FAULT_SITES
+
+# Spawn-key tag distinguishing the victim-selection substream from the
+# fire/skip stream at the same site.
+_VICTIM_STREAM = 1
 
 # Sentinel token value the decode/prefill executables report for a lane
 # whose logits contain a non-finite value (vocab ids are >= 0, so the
@@ -70,6 +90,15 @@ class FaultPlan:
             s: np.random.default_rng([self.seed, i])
             for i, s in enumerate(FAULT_SITES)
         }
+        # Victim selection lives in its own per-site substream: a pick()
+        # consult that fires must not advance the fire/skip stream by a
+        # different amount than one that skips, or every later fire at
+        # the site would re-time based on *outcomes* instead of consult
+        # order (and rate changes would desynchronize the schedule).
+        self._victim_rng = {
+            s: np.random.default_rng([self.seed, i, _VICTIM_STREAM])
+            for i, s in enumerate(FAULT_SITES)
+        }
         self.consults = {s: 0 for s in FAULT_SITES}
         self.fired = {s: 0 for s in FAULT_SITES}
 
@@ -97,7 +126,7 @@ class FaultPlan:
             return None
         if not self.fire(site):
             return None
-        j = int(self._rng[site].integers(len(candidates)))
+        j = int(self._victim_rng[site].integers(len(candidates)))
         return candidates[j]
 
     def stats(self) -> dict:

@@ -338,8 +338,15 @@ def drive_chaos(cfg, mesh, rules, params, aot, ec, stream, faults,
             eng.submit(prompt, max_new_tokens=budget, rid=i, **kw)
             i += 1
         if tick in cancel_ticks and eng.live:
-            rids = sorted(eng.live)
-            eng.cancel(rids[len(rids) // 2])
+            # prefer rids sitting in a race window — queued resumes
+            # (between requeue and re-admission) and lanes still
+            # replaying their pre-preemption tokens — so cancel lands
+            # in the states where refund bugs would actually hide
+            resumes = sorted(r.rid for r in eng.queue if r.resume)
+            replaying = sorted(s.rid for s in eng.slots
+                               if s is not None and s.generated < s.emit_from)
+            pool = resumes or replaying or sorted(eng.live)
+            eng.cancel(pool[len(pool) // 2])
         eng.step()
         eng.check_invariants()
         clock.t += 1.0

@@ -2,10 +2,11 @@
 
 Complements the chaos sweep in test_engine_fuzz.py with targeted
 coverage: deadline expiry in-queue vs mid-decode, cancel() resource
-refunds under the paged+prefix engine, engine snapshot round-trips
-through CheckpointManager on disk, crash-mid-save atomicity, async-save
-error surfacing, the train-side non-finite skip-step, and the elastic
-ZeRO reshard restore.
+refunds under the paged+prefix engine, cancel/expiry landing inside the
+preempt-and-requeue and chunked-prefill race windows, engine snapshot
+round-trips through CheckpointManager on disk, crash-mid-save atomicity,
+save retry-with-backoff, async-save error surfacing, the train-side
+non-finite skip-step, and the elastic ZeRO reshard restore.
 """
 import dataclasses
 import os
@@ -145,6 +146,154 @@ def test_cancel_refunds_blocks_and_deficit(serve_setup):
 
 
 # ---------------------------------------------------------------------------
+# Race windows: preempt-and-requeue replay, chunked prefill
+# ---------------------------------------------------------------------------
+
+
+def test_cancel_in_preempt_requeue_window(serve_setup):
+    """Cancel landing in the window between requeue and re-admission: a
+    preempted lane sits in the queue as a resume holding its emitted
+    tokens but no device resources.  The completion keeps exactly the
+    pre-preemption tokens, every block ref and the deficit commitment
+    refund, and the surviving lane's stream is untouched."""
+    p0 = np.arange(1, 9, dtype=np.int32)
+    p1 = np.arange(21, 27, dtype=np.int32)
+    solo = _mk_engine(serve_setup, PAGED_PREFIX)
+    want0 = list(solo.run([p0], max_new_tokens=12)[0])
+    want1 = list(solo.run([p1], max_new_tokens=6)[0])
+
+    eng = _mk_engine(serve_setup, PAGED_PREFIX)
+    r0 = eng.submit(p0, max_new_tokens=12)
+    r1 = eng.submit(p1, max_new_tokens=6)
+    guard = 0
+    while r0 not in eng.live or len(eng.live[r0].tokens) < 2:
+        eng.step()
+        eng.check_invariants()
+        guard += 1
+        assert guard < 50
+    slot = next(i for i, s in enumerate(eng.slots)
+                if s is not None and s.rid == r0)
+    n_pre = len(eng.live[r0].tokens)
+    eng.preempt(slot)
+    eng.check_invariants()
+    assert eng.queue[0].rid == r0 and eng.queue[0].resume
+    assert eng.cancel(r0) is True             # cancelled inside the window
+    eng.check_invariants()
+    eng.drain()
+    c0 = eng.completions[r0]
+    assert c0.status == "cancelled"
+    assert list(c0.tokens) == want0[:n_pre]   # kept what it had emitted
+    assert eng.completions[r1].status == "ok"
+    assert list(eng.completions[r1].tokens) == want1
+    assert eng.alloc.in_use == 0 and eng._deficit == 0
+    eng.check_invariants()
+
+
+def test_deadline_expires_in_preempt_requeue_window(serve_setup):
+    """A preempted request whose deadline passes while it waits in the
+    queue as a resume: the sweep terminates it with "timeout" keeping
+    its pre-preemption tokens, with the full resource refund."""
+    clock = FakeClock()
+    eng = _mk_engine(serve_setup, PAGED_PREFIX, clock=clock)
+    r0 = eng.submit(np.arange(1, 9, dtype=np.int32), max_new_tokens=12,
+                    deadline_s=100.0)
+    guard = 0
+    while r0 not in eng.live or len(eng.live[r0].tokens) < 2:
+        eng.step()
+        eng.check_invariants()
+        clock.t += 1.0
+        guard += 1
+        assert guard < 50
+    n_pre = len(eng.live[r0].tokens)
+    slot = next(i for i, s in enumerate(eng.slots)
+                if s is not None and s.rid == r0)
+    eng.preempt(slot)
+    eng.check_invariants()
+    assert eng.queue[0].resume
+    clock.t += 200.0                          # expire it inside the window
+    eng.drain()
+    c0 = eng.completions[r0]
+    assert c0.status == "timeout"
+    assert len(c0.tokens) == n_pre            # replay never re-ran
+    assert eng.counters["status_timeout"] == 1
+    assert eng.alloc.in_use == 0 and eng._deficit == 0
+    eng.check_invariants()
+
+
+def test_cancel_mid_replay(serve_setup):
+    """Cancel a lane while it is still replaying its pre-preemption
+    tokens (generated < emit_from): the replay stops, the completion
+    holds exactly the already-emitted tokens (no duplicates, no loss),
+    and the lane's blocks and commitment refund."""
+    p0 = np.arange(1, 9, dtype=np.int32)
+    solo = _mk_engine(serve_setup, PAGED_PREFIX)
+    want0 = list(solo.run([p0], max_new_tokens=12)[0])
+
+    eng = _mk_engine(serve_setup, PAGED_PREFIX)
+    r0 = eng.submit(p0, max_new_tokens=12)
+    guard = 0
+    while r0 not in eng.live or len(eng.live[r0].tokens) < 3:
+        eng.step()
+        eng.check_invariants()
+        guard += 1
+        assert guard < 50
+    n_pre = len(eng.live[r0].tokens)
+    slot = next(i for i, s in enumerate(eng.slots)
+                if s is not None and s.rid == r0)
+    eng.preempt(slot)
+    # step until the resume is back on a lane mid-replay
+    guard = 0
+    while True:
+        eng.step()
+        eng.check_invariants()
+        s = next((s for s in eng.slots
+                  if s is not None and s.rid == r0), None)
+        if s is not None and 0 < s.generated < s.emit_from:
+            break
+        guard += 1
+        assert guard < 50, "never observed the replay window"
+    assert eng.cancel(r0) is True             # cancelled mid-replay
+    eng.check_invariants()
+    eng.drain()
+    c0 = eng.completions[r0]
+    assert c0.status == "cancelled"
+    assert list(c0.tokens) == want0[:n_pre]   # replay added nothing twice
+    assert eng.alloc.in_use == 0 and eng._deficit == 0
+    eng.check_invariants()
+
+
+CHUNKED = dataclasses.replace(PAGED_PREFIX, prefill_chunk=8)
+
+
+def test_cancel_and_expiry_mid_chunked_prefill(serve_setup):
+    """Cancel one request and expire another while their prompts are
+    only partially prefilled (prefilled < plen): both evict with zero
+    tokens and a full refund of the blocks their chunks had mapped."""
+    clock = FakeClock()
+    eng = _mk_engine(serve_setup, CHUNKED, clock=clock)
+    r0 = eng.submit(np.arange(1, 21, dtype=np.int32), max_new_tokens=4)
+    r1 = eng.submit(np.arange(5, 25, dtype=np.int32), max_new_tokens=4,
+                    deadline_s=0.5)
+    eng.step()                                # first chunk of each lane
+    eng.check_invariants()
+    mid = [s for s in eng.slots if s is not None and s.prefilled < s.plen]
+    assert {s.rid for s in mid} == {r0, r1}, "not mid-prefill: bad setup"
+    assert eng.cancel(r0) is True             # cancelled mid-chunked-prefill
+    eng.check_invariants()
+    clock.t += 1.0                            # r1 expires mid-chunked-prefill
+    eng.drain()
+    assert eng.completions[r0].status == "cancelled"
+    assert eng.completions[r1].status == "timeout"
+    assert eng.completions[r0].tokens == []
+    assert eng.completions[r1].tokens == []
+    assert eng.alloc.in_use == 0 and eng._deficit == 0
+    eng.check_invariants()
+    # the engine is still healthy afterwards
+    out = eng.run([np.arange(1, 6, dtype=np.int32)], max_new_tokens=3)
+    assert len(out[0]) == 3
+
+
+# ---------------------------------------------------------------------------
 # Engine snapshot / restore
 # ---------------------------------------------------------------------------
 
@@ -249,6 +398,75 @@ def test_async_save_failure_reraises(tmp_path, monkeypatch):
             mgr.save(3, {"params": tree})             # save() waits first
     mgr.save(4, {"params": tree})
     assert mgr.latest_step() == 4
+
+
+def test_save_retries_transient_io(tmp_path, monkeypatch):
+    """Two ENOSPC blips then a healthy disk: save() succeeds on the
+    third attempt, backing off exponentially through the injectable
+    sleep (no real-time wait), and the checkpoint round-trips."""
+    sleeps = []
+    mgr = CheckpointManager(str(tmp_path), save_retries=3,
+                            retry_backoff_s=0.01, sleep=sleeps.append)
+    tree = {"a": jnp.arange(4.0)}
+    real = manager_mod.np.savez
+    calls = {"n": 0}
+
+    def flaky(*a, **k):
+        calls["n"] += 1
+        if calls["n"] <= 2:
+            raise OSError("ENOSPC")
+        return real(*a, **k)
+
+    with monkeypatch.context() as m:
+        m.setattr(manager_mod.np, "savez", flaky)
+        mgr.save(1, {"params": tree})
+    assert calls["n"] == 3
+    assert sleeps == [0.01, 0.02]
+    assert mgr.latest_step() == 1
+    step, state = mgr.restore({"params": tree})
+    assert step == 1
+    np.testing.assert_array_equal(np.asarray(state["params"]["a"]),
+                                  np.arange(4.0))
+
+
+def test_save_retry_exhaustion_still_raises(tmp_path, monkeypatch):
+    """A persistent failure surfaces after the retry budget is spent —
+    exactly save_retries attempts, save_retries - 1 backoffs, and no
+    checkpoint left behind pretending to exist."""
+    sleeps = []
+    mgr = CheckpointManager(str(tmp_path), save_retries=2,
+                            retry_backoff_s=0.01, sleep=sleeps.append)
+    with monkeypatch.context() as m:
+        m.setattr(manager_mod.os, "rename",
+                  lambda *a: (_ for _ in ()).throw(OSError("gone")))
+        with pytest.raises(OSError):
+            mgr.save(1, {"params": {"a": jnp.ones(2)}})
+    assert sleeps == [0.01]
+    assert mgr.latest_step() is None
+    with pytest.raises(ValueError, match="save_retries"):
+        CheckpointManager(str(tmp_path), save_retries=0)
+
+
+def test_async_save_absorbs_transient_blip(tmp_path, monkeypatch):
+    """A transient I/O blip during a background save is absorbed by the
+    retry loop — wait() sees success, not the RuntimeError."""
+    mgr = CheckpointManager(str(tmp_path), save_retries=2,
+                            retry_backoff_s=0.0, sleep=lambda s: None)
+    real = manager_mod.np.savez
+    calls = {"n": 0}
+
+    def flaky(*a, **k):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise OSError("blip")
+        return real(*a, **k)
+
+    with monkeypatch.context() as m:
+        m.setattr(manager_mod.np, "savez", flaky)
+        mgr.save(1, {"params": {"a": jnp.ones(2)}}, blocking=False)
+        mgr.wait()                # no raise: the retry absorbed the blip
+    assert calls["n"] == 2
+    assert mgr.latest_step() == 1
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,442 @@
+"""Router front-end tests: routing policy, crash failover, load
+shedding, zero-downtime drain.
+
+The headline property (chaos fuzz): seeded episodes that kill or stall a
+replica mid-episode must end with every non-shed, non-cancelled request
+completed ``"ok"`` on a surviving replica, greedy token streams
+bitwise-identical to a fault-free single-engine run of the same trace,
+zero requests lost, and ``steady_builds_delta == 0`` on the shared AOT
+cache — fleet-level fault tolerance composed entirely from the engine's
+preempt-and-replay machinery, so it inherits the PR-4/6 bitwise
+guarantee.
+
+Episode count: ``ROUTER_FUZZ_EPISODES`` env var (default below);
+``scripts/ci.sh`` runs a larger sweep.
+"""
+import dataclasses
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.aot import AotCache
+from repro.models import registry
+from repro.serve import EngineConfig, FaultPlan, ServeEngine
+from repro.serve.router import Router, RouterConfig
+
+from test_engine_fuzz import _FakeClock, drive, make_stream
+
+EPISODES = int(os.environ.get("ROUTER_FUZZ_EPISODES", "6"))
+MAX_SLOTS, MAX_LEN, BS = 3, 48, 8
+SLOTTED = EngineConfig(max_slots=MAX_SLOTS, max_len=MAX_LEN)
+PREFIX = EngineConfig(max_slots=2, max_len=MAX_LEN, kv_layout="paged",
+                      page_size=BS, prefix_cache=True)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    from repro.launch.mesh import single_device_mesh
+    from repro.models.common import ShardRules
+
+    mesh = single_device_mesh()
+    rules = ShardRules.for_mesh(mesh)
+    cfg = dataclasses.replace(
+        get_smoke_config("smollm-360m"), compute_dtype="float32")
+    params = registry.get_module(cfg).init(cfg, jax.random.PRNGKey(0))
+    aot = AotCache("router-test")
+    # prebuild both engine shapes once: every router below must then
+    # serve (and fail over, and drain) without a single fresh compile
+    for ec in (SLOTTED, PREFIX):
+        ServeEngine(cfg, mesh, rules, params, ec, aot=aot).prebuild()
+    return cfg, mesh, rules, params, aot
+
+
+def mk_router(setup, ec=SLOTTED, *, replicas=3, shed=10_000, clock=None,
+              faults=None, **rc_kw):
+    cfg, mesh, rules, params, aot = setup
+    kw = {} if clock is None else {"clock": clock}
+    return Router(
+        cfg, mesh, rules, params, ec,
+        RouterConfig(replicas=replicas, shed_queue_depth=shed, **rc_kw),
+        aot=aot, faults=faults, **kw)
+
+
+def drive_router(router, stream, *, check=True, max_ticks=3000):
+    """Replay a (tick, prompt, budget) stream through the router, one
+    router tick per stream tick, sweeping fleet invariants."""
+    i, tick = 0, 0
+    while i < len(stream) or router.has_work():
+        while i < len(stream) and stream[i][0] <= tick:
+            _, prompt, budget = stream[i]
+            router.submit(prompt, max_new_tokens=budget, rid=i)
+            i += 1
+        router.step()
+        if check:
+            router.check_invariants()
+        tick += 1
+        assert tick < max_ticks, "router failed to drain (livelock?)"
+    return [list(router.completions[r].tokens) for r in range(len(stream))]
+
+
+# ---------------------------------------------------------------------------
+# The chaos fuzz (the acceptance property)
+# ---------------------------------------------------------------------------
+
+def test_fuzz_router_chaos(setup):
+    cfg, mesh, rules, params, aot = setup
+    builds0 = aot.stats["builds"]
+    crashes = stalls = failovers = 0
+    for seed in range(EPISODES):
+        rng = np.random.default_rng(12000 + seed)
+        stream = make_stream(rng, cfg.vocab)
+        want, _ = drive(cfg, mesh, rules, params, aot, SLOTTED, stream)
+        # max_fires=2 over 3 replicas: at least one survivor always
+        # remains, so every episode must fully drain
+        plan = FaultPlan(seed, {"replica_crash": 0.05,
+                                "replica_stall": 0.05}, max_fires=2)
+        router = mk_router(setup, replicas=3, faults=plan)
+        got = drive_router(router, stream)
+        assert got == want, (
+            f"episode seed={seed}: router fleet diverged from the "
+            f"fault-free single-engine stream\n  want={want}\n  got ={got}")
+        assert all(c.status == "ok" for c in router.completions.values()), (
+            f"episode seed={seed}: non-ok completions "
+            f"{[(r, c.status, c.error) for r, c in router.completions.items() if c.status != 'ok']}")
+        # zero requests lost: every submitted rid is terminal
+        assert len(router.completions) == len(stream)
+        assert router.counters["submitted"] == len(stream)
+        # every surviving replica's own invariants held to the end; a
+        # drained fleet holds nothing
+        assert not router.records and not router.queue
+        crashes += plan.fired["replica_crash"]
+        stalls += plan.fired["replica_stall"]
+        failovers += router.counters["failovers"]
+    assert aot.stats["builds"] == builds0, (
+        "failover replays forced fresh compiles — survivors must serve "
+        "migrated requests purely from the shared cache")
+    # vacuity guard: the schedules must actually kill/stall replicas
+    if EPISODES >= 4:
+        assert crashes + stalls > 0, "no replica fault fired in any episode"
+        assert failovers > 0, "no request ever failed over"
+
+
+def test_router_determinism(setup):
+    """Same stream + same fault seed => same placements, same failovers,
+    same tokens — router chaos failures replay by seed number."""
+    cfg, mesh, rules, params, aot = setup
+    stream = make_stream(np.random.default_rng(4242), cfg.vocab)
+    runs = []
+    for _ in range(2):
+        plan = FaultPlan(7, {"replica_crash": 0.1}, max_fires=1)
+        router = mk_router(setup, replicas=3, faults=plan)
+        toks = drive_router(router, stream)
+        runs.append((toks, dict(router.placements), router.counters.copy()))
+    assert runs[0] == runs[1]
+
+
+# ---------------------------------------------------------------------------
+# Routing policy
+# ---------------------------------------------------------------------------
+
+def test_least_loaded_spreads_burst(setup):
+    """A same-tick burst spreads across replicas instead of piling onto
+    replica 0 (load counts in-flight work, ties break to lowest idx)."""
+    router = mk_router(setup, replicas=3)
+    rng = np.random.default_rng(1)
+    for i in range(6):
+        router.submit(rng.integers(0, 100, 8).astype(np.int32),
+                      max_new_tokens=4, rid=i)
+    router.step()
+    assert [router.placements[i] for i in range(3)] == [0, 1, 2]
+    router.run()
+    assert all(c.status == "ok" for c in router.completions.values())
+
+
+def test_cache_aware_routing(setup):
+    """With prefix-cached engines, a prompt sharing a published chain
+    follows it to the replica that owns the blocks — even when plain
+    least-loaded (idle fleet, ties to lowest idx) would pick replica 0."""
+    cfg = setup[0]
+    router = mk_router(setup, PREFIX, replicas=2)
+    rng = np.random.default_rng(2)
+    pa = rng.integers(0, cfg.vocab, 2 * BS).astype(np.int32)
+    pb = rng.integers(0, cfg.vocab, 2 * BS).astype(np.int32)
+    ra = router.submit(pa, max_new_tokens=4)
+    rb = router.submit(pb, max_new_tokens=4)
+    router.run()
+    assert (router.placements[ra], router.placements[rb]) == (0, 1)
+    # c extends b's prefix; the fleet is idle, so least-loaded alone
+    # would send it to replica 0 — cache-awareness must override
+    pc = np.concatenate(
+        [pb, rng.integers(0, cfg.vocab, 4).astype(np.int32)])
+    rc = router.submit(pc, max_new_tokens=4)
+    router.run()
+    assert router.placements[rc] == router.placements[rb] == 1
+    assert router.counters["cache_routed"] >= 1
+    assert all(c.status == "ok" for c in router.completions.values())
+    router.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# Graceful degradation: load shedding
+# ---------------------------------------------------------------------------
+
+def test_bounded_queue_sheds(setup):
+    """Submissions beyond shed_queue_depth terminate immediately with
+    status "shed" (structured, never an exception); queued work
+    completes untouched."""
+    router = mk_router(setup, replicas=1, shed=2)
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, 100, 8).astype(np.int32) for _ in range(6)]
+    rids = [router.submit(p, max_new_tokens=4) for p in prompts]
+    shed = [r for r in rids if r in router.completions]
+    assert len(shed) == 4                   # depth 2: first two queued
+    for r in shed:
+        c = router.completions[r]
+        assert c.status == "shed" and "queue full" in c.error
+        assert c.tokens == []
+    router.run()
+    router.check_invariants()
+    assert router.counters["status_shed"] == 4
+    assert all(router.completions[r].status == "ok"
+               for r in rids if r not in shed)
+
+
+def test_deadline_aware_early_shed(setup):
+    """A TTL the queue cannot possibly meet sheds at submission (free)
+    instead of timing out after wasting a lane; a generous TTL queues."""
+    clock = _FakeClock()
+    router = mk_router(setup, replicas=1, shed=50, clock=clock)
+    rng = np.random.default_rng(4)
+    p = rng.integers(0, 100, 8).astype(np.int32)
+    # prime the service-time EWMA with one completed request
+    router.submit(p, max_new_tokens=8)
+    while router.has_work():
+        router.step()
+        clock.t += 1.0
+    assert router._ewma_service is not None
+    for _ in range(7):                      # deep queue, no deadlines
+        router.submit(p, max_new_tokens=8)
+    tight = router.submit(p, max_new_tokens=8, deadline_s=0.5)
+    loose = router.submit(p, max_new_tokens=8, deadline_s=10_000.0)
+    c = router.completions[tight]
+    assert c.status == "shed" and "deadline unreachable" in c.error
+    assert loose not in router.completions  # queued, not shed
+    while router.has_work():
+        router.step()
+        clock.t += 1.0
+    router.check_invariants()
+    assert router.completions[loose].status == "ok"
+
+
+# ---------------------------------------------------------------------------
+# Crash failover: budgets and total fleet loss
+# ---------------------------------------------------------------------------
+
+def test_failover_budget_exhaustion(setup):
+    """Every replica serving a request dying in sequence consumes the
+    per-request failover budget; exhaustion is a structured "failed"."""
+    router = mk_router(setup, replicas=2, max_failovers=1)
+    rng = np.random.default_rng(5)
+    rid = router.submit(rng.integers(0, 100, 8).astype(np.int32),
+                        max_new_tokens=12)
+    router.step()                           # placed + first tokens
+    router.kill(router.placements[rid])     # failover 1: within budget
+    router.check_invariants()
+    router.step()                           # re-placed on the survivor
+    assert rid not in router.completions
+    router.kill(router.placements[rid])     # failover 2: budget blown
+    c = router.completions[rid]
+    assert c.status == "failed" and "failover budget" in c.error
+    router.check_invariants()
+    # the mirrored prefix survives onto the failed completion
+    assert len(c.tokens) >= 1
+    # total fleet loss: new submissions shed instead of queueing forever
+    r2 = router.submit(rng.integers(0, 100, 8).astype(np.int32),
+                       max_new_tokens=4)
+    assert router.completions[r2].status == "shed"
+    assert "no live replicas" in router.completions[r2].error
+
+
+def test_queued_work_fails_on_total_fleet_loss(setup):
+    """Requests already queued when the last replica dies terminate
+    "failed" on the next tick rather than being held hostage."""
+    router = mk_router(setup, replicas=1, shed=50)
+    rng = np.random.default_rng(6)
+    rids = [router.submit(rng.integers(0, 100, 8).astype(np.int32),
+                          max_new_tokens=4) for _ in range(5)]
+    router.kill(0)
+    router.step()
+    router.check_invariants()
+    assert all(router.completions[r].status == "failed" for r in rids)
+    assert not router.has_work()
+
+
+def test_stall_detection_budget(setup):
+    """A stalled replica is only declared dead after stall_budget ticks
+    without progress — and its requests then complete elsewhere with the
+    exact fault-free stream."""
+    cfg, mesh, rules, params, aot = setup
+    rng = np.random.default_rng(7)
+    stream = [(0, rng.integers(0, 100, 8).astype(np.int32), 6)
+              for _ in range(4)]
+    want, _ = drive(cfg, mesh, rules, params, aot, SLOTTED, stream)
+    router = mk_router(setup, replicas=2, stall_budget=3)
+    for i, (_, p, b) in enumerate(stream):
+        router.submit(p, max_new_tokens=b, rid=i)
+    router.step()
+    router.replicas[0].stalled = True       # hang, not crash
+    ticks_before_dead = 0
+    while router.replicas[0].state != "dead":
+        router.step()
+        router.check_invariants()
+        ticks_before_dead += 1
+        assert ticks_before_dead < 20
+    assert ticks_before_dead >= router.rc.stall_budget - 1
+    assert router.counters["stalls_detected"] == 1
+    router.run()
+    got = [list(router.completions[i].tokens) for i in range(len(stream))]
+    assert got == want
+    assert all(c.status == "ok" for c in router.completions.values())
+
+
+# ---------------------------------------------------------------------------
+# Zero-downtime drain
+# ---------------------------------------------------------------------------
+
+def test_drain_migrates_and_preserves_streams(setup):
+    cfg, mesh, rules, params, aot = setup
+    stream = make_stream(np.random.default_rng(8), cfg.vocab)
+    want, _ = drive(cfg, mesh, rules, params, aot, SLOTTED, stream)
+    router = mk_router(setup, replicas=2)
+    for i, (_, p, b) in enumerate(stream):
+        router.submit(p, max_new_tokens=b, rid=i)
+    for _ in range(3):                      # mid-decode on both replicas
+        router.step()
+    moved = router.drain(0)
+    assert moved == router.counters["migrated"] > 0
+    assert router.replicas[0].state == "drained"
+    assert not router.replicas[0].engine.has_work()
+    router.check_invariants()
+    router.run()
+    got = [list(router.completions[i].tokens) for i in range(len(stream))]
+    assert got == want, "drain perturbed a migrated stream"
+    assert all(c.status == "ok" for c in router.completions.values())
+    # nothing places on a drained replica; reinstate returns it to rotation
+    rng = np.random.default_rng(9)
+    ra = router.submit(rng.integers(0, 100, 8).astype(np.int32),
+                       max_new_tokens=4)
+    router.run()
+    assert router.placements[ra] == 1
+    router.reinstate(0)
+    rb = router.submit(rng.integers(0, 100, 8).astype(np.int32),
+                       max_new_tokens=4)
+    router.run()
+    assert router.placements[rb] == 0
+    router.drain(0)                         # idle drain: fine, moves 0
+    with pytest.raises(ValueError, match="not live"):
+        router.drain(0)                     # already drained
+
+
+def test_drain_requires_live_replica(setup):
+    router = mk_router(setup, replicas=2)
+    router.kill(1)
+    with pytest.raises(ValueError, match="dead"):
+        router.drain(1)
+
+
+# ---------------------------------------------------------------------------
+# Engine-level migration primitives
+# ---------------------------------------------------------------------------
+
+def test_export_import_roundtrip_mid_decode(setup):
+    """export_request off a mid-decode lane, import into a different
+    engine, finish there: tokens bitwise the uninterrupted stream."""
+    cfg, mesh, rules, params, aot = setup
+    rng = np.random.default_rng(10)
+    pa = rng.integers(0, cfg.vocab, 10).astype(np.int32)
+    pb = rng.integers(0, cfg.vocab, 6).astype(np.int32)
+    ref = ServeEngine(cfg, mesh, rules, params, SLOTTED, aot=aot)
+    want_a = list(ref.run([pa], max_new_tokens=8)[0])
+    want_b = list(ref.run([pb], max_new_tokens=5)[0])
+
+    src = ServeEngine(cfg, mesh, rules, params, SLOTTED, aot=aot)
+    dst = ServeEngine(cfg, mesh, rules, params, SLOTTED, aot=aot)
+    ra = src.submit(pa, max_new_tokens=8)
+    rb = src.submit(pb, max_new_tokens=5, rid=77)
+    src.step()
+    src.step()
+    assert len(src.live[ra].tokens) >= 1    # genuinely mid-decode
+    snap = src.export_request(ra)
+    assert snap["pending"]["resume"] is True
+    assert snap["completion"] is not None
+    src.check_invariants()
+    assert ra not in src.live
+    dst.import_request(snap)
+    dst.check_invariants()
+    src.drain()
+    dst.drain()
+    assert list(dst.completions[ra].tokens) == want_a
+    assert dst.completions[ra].status == "ok"
+    assert list(src.completions[rb].tokens) == want_b
+    assert src.counters["exported"] == 1
+    assert dst.counters["imported"] == 1
+
+
+def test_export_import_error_cases(setup):
+    cfg, mesh, rules, params, aot = setup
+    eng = ServeEngine(cfg, mesh, rules, params, SLOTTED, aot=aot)
+    rid = eng.submit(np.arange(1, 7, dtype=np.int32), max_new_tokens=2)
+    with pytest.raises(KeyError):
+        eng.export_request(rid + 999)
+    snap = eng.export_request(rid)          # still queued: fresh export
+    assert snap["pending"]["resume"] is False
+    assert snap["completion"] is None
+    eng.import_request(snap)                # back home
+    with pytest.raises(ValueError, match="already known"):
+        eng.import_request(snap)
+    eng.drain()
+    with pytest.raises(ValueError, match="terminal"):
+        eng.export_request(rid)
+    # resume without its Completion is structurally invalid
+    bad = {"pending": dict(snap["pending"], resume=True),
+           "completion": None}
+    with pytest.raises(ValueError, match="without its"):
+        eng.import_request(dict(bad, pending=dict(bad["pending"], rid=555)))
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan victim substream (satellite: schedule depends on consult
+# order only)
+# ---------------------------------------------------------------------------
+
+def test_pick_victim_substream_does_not_perturb_fire_schedule():
+    """pick() draws victims from a separate (seed, site, victim)
+    substream, so a fire() consult sequence and a pick() consult
+    sequence at the same seed see the IDENTICAL fire/skip schedule —
+    firing (which also draws a victim) must not re-time later fires."""
+    rates = {"replica_crash": 0.4}
+    a = FaultPlan(123, rates)
+    b = FaultPlan(123, rates)
+    fired_a = [a.fire("replica_crash") for _ in range(50)]
+    fired_b = [b.pick("replica_crash", [0, 1, 2]) is not None
+               for _ in range(50)]
+    assert fired_a == fired_b
+    assert any(fired_a)
+    # and victims are deterministic per seed
+    c = FaultPlan(123, rates)
+    d = FaultPlan(123, rates)
+    assert [c.pick("replica_crash", [0, 1, 2]) for _ in range(50)] \
+        == [d.pick("replica_crash", [0, 1, 2]) for _ in range(50)]
+
+
+def test_replica_sites_extend_engine_sites():
+    """Appending the replica sites kept the engine sites' stream indices
+    (seeded by position), so engine chaos schedules are unchanged."""
+    from repro.serve import ENGINE_FAULT_SITES, FAULT_SITES, \
+        REPLICA_FAULT_SITES
+    assert FAULT_SITES == ENGINE_FAULT_SITES + REPLICA_FAULT_SITES
+    assert FAULT_SITES[:4] == ("decode_logits", "prefill", "alloc",
+                               "sched_push")
