@@ -43,9 +43,11 @@ for name, row in rep["modes"].items():
     if "kv_reserved_bytes" in row:
         kv = (f"  kv {row['kv_peak_used_bytes'] / 2**20:5.1f}"
               f"/{row['kv_reserved_bytes'] / 2**20:5.1f} MiB used/reserved")
-    print(f"  {name:24s} {row['tokens_per_s']:7.1f} tok/s  "
-          f"p50 {row['p50_ms_per_token']:7.1f} ms/tok  "
-          f"p99 {row['p99_ms_per_token']:7.1f} ms/tok{kv}")
+    lat = ""
+    if "p50_ms_per_token" in row:
+        lat = (f"  p50 {row['p50_ms_per_token']:7.1f} ms/tok  "
+               f"p99 {row['p99_ms_per_token']:7.1f} ms/tok")
+    print(f"  {name:24s} {row['tokens_per_s']:7.1f} tok/s{lat}{kv}")
 h = rep["headline"]
 print(f"  speedup_vs_static {h['speedup_vs_static']:.2f}x  "
       f"p99_ratio {h['p99_ratio_vs_static']:.2f}  "
@@ -71,6 +73,14 @@ print(f"  router: lost {h['router_requests_lost']}  all_ok {h['router_all_ok']} 
       f"failover_parity {h['router_failover_parity']}  "
       f"failovers {h['router_failovers']}  migrated {h['router_migrated']}  "
       f"builds_delta {h['router_steady_builds_delta']}")
+tr = rep["modes"]["continuous_traced"]
+print(f"  traced: overhead {h['traced_overhead_ratio']:.2f}x  "
+      f"parity {h['traced_token_parity']}  "
+      f"events {tr['trace_events']}  spans {tr['trace_spans']}  "
+      f"builds_delta {h['traced_steady_builds_delta']}")
+print(f"  slowest AOT builds: " + ", ".join(
+      f"{s:.2f}s" for _, s in rep["meta"]["slowest_builds"][:3]) +
+      f"  (total {rep['meta']['aot_build_s_total']:.1f}s)")
 if h["steady_builds_delta"] != 0:
     sys.exit("FAIL: serve decode built executables after warmup "
              "(AOT dispatch cache regression)")
@@ -139,6 +149,38 @@ if h["router_failovers"] <= 0:
 if h["router_steady_builds_delta"] != 0:
     sys.exit("FAIL: the replica fleet built executables after prebuild — "
              "replicas must share one AOT cache")
+if not h["traced_token_parity"]:
+    sys.exit("FAIL: arming the observer changed greedy tokens — tracing "
+             "must be a pure host-side observer")
+if not tr["decode_steps_match"]:
+    sys.exit("FAIL: the traced drive took a different number of decode "
+             "steps than the untraced drive — tracing perturbed "
+             "scheduling")
+if h["traced_overhead_ratio"] < 0.95:
+    sys.exit(f"FAIL: tracing cost {h['traced_overhead_ratio']:.3f}x of "
+             "the untraced decode rate (< 0.95 floor) — an emit path is "
+             "doing more than a ring-buffer append (host sync?)")
+if h["traced_steady_builds_delta"] != 0:
+    sys.exit("FAIL: the traced drive built executables after prebuild — "
+             "observability must not change executable keys")
+if "metrics" not in tr or tr["metrics"].get("decode_steps", {}).get("value", 0) <= 0:
+    sys.exit("FAIL: the traced mode's embedded metrics snapshot is "
+             "missing or has no decode_steps counter")
+EOF
+
+echo "== trace artifact check =="
+python - <<'EOF'
+import json, sys
+sys.path.insert(0, "src")
+from repro.obs import load_jsonl, validate
+ev = load_jsonl("BENCH_serve_trace.jsonl")
+info = validate(ev)   # spans balance, timelines terminal-complete
+chrome = json.load(open("BENCH_serve_trace.json"))
+if not chrome.get("traceEvents"):
+    sys.exit("FAIL: BENCH_serve_trace.json has no traceEvents")
+print(f"  {info['events']} events / {info['spans']} spans / "
+      f"{info['requests']} requests / {info['terminals']} terminals; "
+      f"chrome trace {len(chrome['traceEvents'])} entries")
 EOF
 
 echo "== docs link check =="

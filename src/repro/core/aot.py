@@ -16,6 +16,7 @@ growing without bound).
 """
 from __future__ import annotations
 
+import time
 from typing import Any, Callable, Iterator
 
 
@@ -28,6 +29,12 @@ class AotCache:
     serve engine (scripts/ci.sh) and the overlap bench tracks it for
     ``SynkFunction``.
 
+    Every miss also records its lower+compile wall seconds in
+    ``build_seconds`` (always wall time, even when the owning engine runs
+    on a fake clock — compile cost is a real-world budget), and emits an
+    ``aot_build`` trace span when an ``obs`` handle is attached; see
+    ``top_builds`` for the slowest-builds report the serve bench embeds.
+
     Invariants: ``builds == len(self)`` (every miss stores exactly one
     entry, nothing is ever evicted); ``builds + cache_hits`` == total
     ``get`` calls; a key's entry is immutable once stored (``get`` never
@@ -35,10 +42,12 @@ class AotCache:
     engines/benches can never recompile behind a caller's back).
     """
 
-    def __init__(self, name: str = "aot"):
+    def __init__(self, name: str = "aot", *, obs=None):
         self.name = name
         self._entries: dict[Any, Any] = {}
         self.stats = {"builds": 0, "cache_hits": 0}
+        self.build_seconds: dict[Any, float] = {}
+        self.obs = obs
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -54,8 +63,24 @@ class AotCache:
         entry = self._entries.get(key)
         if entry is None:
             self.stats["builds"] += 1
+            sid = None if self.obs is None else self.obs.begin(
+                "aot_build", cat="aot", track=self.name, key=str(key))
+            t0 = time.perf_counter()
             entry = build()
+            self.build_seconds[key] = time.perf_counter() - t0
+            if self.obs is not None:
+                self.obs.end(sid)
             self._entries[key] = entry
         else:
             self.stats["cache_hits"] += 1
         return entry
+
+    @property
+    def build_s_total(self) -> float:
+        return sum(self.build_seconds.values())
+
+    def top_builds(self, n: int = 5) -> list[tuple[str, float]]:
+        """The ``n`` slowest builds as (str(key), seconds), slowest first."""
+        ranked = sorted(self.build_seconds.items(),
+                        key=lambda kv: kv[1], reverse=True)
+        return [(str(k), round(s, 4)) for k, s in ranked[:n]]

@@ -39,6 +39,7 @@ from repro.configs import ARCH_IDS, get_config, get_smoke_config
 from repro.launch.mesh import local_mesh, make_production_mesh, single_device_mesh
 from repro.models import registry
 from repro.models.common import ShardRules
+from repro.obs import Observer, merged_histogram, to_chrome_trace, validate
 from repro.serve import (
     ENGINE_FAULT_SITES, REPLICA_FAULT_SITES, STATUSES, EngineConfig,
     FaultPlan, Router, RouterConfig, ServeConfig, generate_static,
@@ -62,28 +63,28 @@ def run_static(cfg, mesh, rules, params, args, rng):
         print(f"seq{i}: {row.tolist()}")
 
 
-def _pctl(xs, q):
-    return float(np.percentile(np.asarray(xs), q))
-
-
-def _print_latency_summary(completions):
+def _print_latency_summary(router):
     """Per-status latency table: p50/p99 time-to-first-token and
-    per-token latency, one row per terminal status that occurred."""
-    by_status = {}
-    for c in completions.values():
-        by_status.setdefault(c.status, []).append(c)
+    per-token latency, one row per terminal status that occurred.
+
+    Consumes the shared ``ttft_ms_<status>`` / ``tpot_ms_<status>``
+    histograms (obs/metrics.py) merged across the router registry and
+    every replica engine's registry — the same mergeable sketches the
+    bench snapshot embeds, not a hand-rolled percentile pass over raw
+    completion timestamps."""
+    regs = [router.obs.metrics] + [h.engine.obs.metrics
+                                   for h in router.replicas]
+    rs = router.stats
     print("-- latency by status (p50/p99 ms):")
     for status in STATUSES:
-        cs = by_status.get(status)
-        if not cs:
+        n = rs.get(f"status_{status}", 0)
+        if not n:
             continue
-        ttft = [(c.token_times[0] - c.submit_time) * 1e3
-                for c in cs if c.token_times]
-        tpot = [(c.finish_time - c.submit_time) / len(c.tokens) * 1e3
-                for c in cs if c.tokens]
-        fmt = lambda xs: (f"{_pctl(xs, 50):8.1f}/{_pctl(xs, 99):8.1f}"
-                          if xs else "       -/       -")
-        print(f"   {status:9s} n={len(cs):4d}  "
+        ttft = merged_histogram(f"ttft_ms_{status}", regs)
+        tpot = merged_histogram(f"tpot_ms_{status}", regs)
+        fmt = lambda h: (f"{h.quantile(0.50):8.1f}/{h.quantile(0.99):8.1f}"
+                         if h.count else "       -/       -")
+        print(f"   {status:9s} n={n:4d}  "
               f"ttft {fmt(ttft)}  per-token {fmt(tpot)}")
 
 
@@ -115,6 +116,12 @@ def run_stream(cfg, mesh, rules, params, args, rng):
                       {site: args.chaos_rate for site in ENGINE_FAULT_SITES})
             for i in range(args.replicas)
         ]
+    obs = None
+    if args.trace_out or args.flightrec_dir:
+        # full flight: tracer + ring-buffer recorder (invariant failures
+        # dump to --flightrec-dir); metrics are always on either way
+        obs = Observer.full(dump_dir=args.flightrec_dir or ".",
+                            name="router")
     router = Router(
         cfg, mesh, rules, params,
         EngineConfig(
@@ -133,6 +140,7 @@ def run_stream(cfg, mesh, rules, params, args, rng):
                      shed_queue_depth=args.shed_queue_depth),
         faults=faults,
         engine_faults=engine_faults,
+        obs=obs,
     )
     arrivals = np.cumsum(rng.exponential(1.0 / args.rate, args.requests))
     prompts = [
@@ -198,7 +206,14 @@ def run_stream(cfg, mesh, rules, params, args, rng):
               f"replicas dead {rs['replicas_dead']} "
               f"stalls {rs['stalls_injected']}/{rs['stalls_detected']} "
               f"(injected/detected)")
-    _print_latency_summary(router.completions)
+    _print_latency_summary(router)
+    if args.trace_out:
+        ev = router.obs.tracer.events
+        info = validate(ev)
+        to_chrome_trace(ev, args.trace_out)
+        print(f"-- trace: {info['events']} events / {info['spans']} spans / "
+              f"{info['requests']} requests -> {args.trace_out} "
+              "(load in chrome://tracing or ui.perfetto.dev)")
 
 
 def main():
@@ -261,6 +276,15 @@ def main():
                          "failover; pair with --replicas >= 2)")
     ap.add_argument("--chaos-seed", type=int, default=0,
                     help="FaultPlan seed (reproducible fault schedules)")
+    # observability knobs (continuous engine)
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write the request/engine span timeline as a "
+                         "Chrome-trace JSON (chrome://tracing, "
+                         "ui.perfetto.dev)")
+    ap.add_argument("--flightrec-dir", default=None, metavar="DIR",
+                    help="arm the flight recorder: invariant failures "
+                         "dump the last N events as flightrec_*.json "
+                         "into this directory")
     ap.add_argument("--admission", choices=("deficit", "preempt"),
                     default="deficit",
                     help="deficit: gate admission on worst-case block "

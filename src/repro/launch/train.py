@@ -13,10 +13,13 @@ from __future__ import annotations
 import argparse
 import dataclasses
 
+import jax
+
 from repro.configs import ARCH_IDS, SHAPES, get_config, get_smoke_config
 from repro.configs.base import ShapeConfig
 from repro.launch.mesh import local_mesh, make_production_mesh, single_device_mesh
 from repro.models.common import ShardRules
+from repro.obs import Observer, Tracer, to_chrome_trace
 from repro.optim import OptConfig
 from repro.train import LoopConfig, TrainSettings, train
 
@@ -40,6 +43,16 @@ def main():
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=100)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="profile the host side of the loop: per-step "
+                         "stage_batch/h2d/dispatch/device_wait spans + a "
+                         "step_ms histogram, written as Chrome-trace JSON "
+                         "(adds one host sync per step; see "
+                         "docs/observability.md)")
+    ap.add_argument("--jax-profile", default=None, metavar="DIR",
+                    help="wrap the run in jax.profiler.start_trace/"
+                         "stop_trace (device-side TensorBoard/Perfetto "
+                         "trace); independent of --trace-out")
     args = ap.parse_args()
 
     if args.mesh == "production":
@@ -62,13 +75,32 @@ def main():
     if cfg.family in ("hybrid", "ssm"):
         rules = dataclasses.replace(rules, sp=False)
 
+    obs = Observer(tracer=Tracer(), name="train") if args.trace_out else None
+    profiling = False
+    if args.jax_profile:
+        try:
+            jax.profiler.start_trace(args.jax_profile)
+            profiling = True
+        except Exception as e:  # noqa: BLE001 - profiler is optional
+            print(f"# jax profiler unavailable ({e}); continuing untraced")
+
     res = train(
         cfg, shape, mesh, rules,
         OptConfig(kind=args.optimizer, lr=args.lr),
         TrainSettings(num_slices=args.slices, faithful=args.faithful),
         LoopConfig(steps=args.steps, ckpt_every=args.ckpt_every,
                    ckpt_dir=args.ckpt_dir, seed=args.seed),
+        obs=obs,
     )
+
+    if profiling:
+        jax.profiler.stop_trace()
+        print(f"# jax profile written to {args.jax_profile}")
+    if obs is not None:
+        to_chrome_trace(obs.tracer.events, args.trace_out)
+        hist = res["metrics"]["step_ms"]
+        print(f"# step_ms p50/p99: {hist['p50']:.1f}/{hist['p99']:.1f} "
+              f"over {hist['count']} steps -> trace {args.trace_out}")
     print(f"final loss: {res['final_loss']:.4f}")
 
 

@@ -73,6 +73,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs.base import ArchConfig
 from repro.core.aot import AotCache
 from repro.models import registry
+from repro.obs import MetricMap, Observer
 from repro.models.common import ShardRules
 from repro.train.step import shardings_for
 from .faults import NONFINITE_TOKEN, FaultPlan
@@ -265,6 +266,7 @@ class ServeEngine:
         aot: AotCache | None = None,
         clock: Callable[[], float] = time.perf_counter,
         faults: FaultPlan | None = None,
+        obs: Observer | None = None,
     ):
         if not registry.supports_slot_serving(cfg):
             raise ValueError(
@@ -297,10 +299,18 @@ class ServeEngine:
         self.buckets = tuple(engine.prefill_buckets or prompt_buckets(engine.max_len))
         if max(self.buckets) > engine.max_len:
             raise ValueError("prefill bucket exceeds max_len")
+        # Observability (repro.obs): metrics are always live (typed
+        # counters behind the legacy ``self.counters`` mapping shape);
+        # tracing and the flight recorder only run when the caller's
+        # Observer carries them — every emit is behind an ``is not None``
+        # so a default engine pays one attribute check, no host syncs,
+        # and no executable-key changes.
+        self.obs = obs if obs is not None else Observer(name="engine")
+        self._track = self.obs.name
         # NOT ``aot or ...``: AotCache defines __len__, so a freshly made
         # (empty) shared cache is falsy and would be silently replaced —
         # every caller would then compile privately
-        self.aot = aot if aot is not None else AotCache("serve")
+        self.aot = aot if aot is not None else AotCache("serve", obs=self.obs)
         self.clock = clock
         # deterministic fault injection (serve/faults.py); None = off, and
         # every consult site is behind an ``is not None`` so the default
@@ -352,21 +362,26 @@ class ServeEngine:
         self.slots: list[_Slot | None] = [None] * engine.max_slots
         self.live: dict[int, Completion] = {}
         self.completions: dict[int, Completion] = {}
-        self.counters = {
-            "prefills": 0, "prefill_chunks": 0, "decode_steps": 0,
-            "admitted": 0, "evicted": 0, "dead_slot_steps": 0,
-            "kv_peak_used_bytes": 0, "prefill_tokens": 0,
-            "prefix_lookup_tokens": 0, "prefix_hit_tokens": 0,
-            "cow_copies": 0, "preemptions": 0, "resumed": 0,
-            "replayed_tokens": 0,
+        # the historical dict shape, now backed by typed metrics:
+        # ``kv_peak_used_bytes`` is a Gauge (peak set, not a sum — see
+        # _note_kv_usage); everything else is a monotone Counter.  The
+        # kind split is asserted by check_invariants.
+        self.counters = MetricMap(self.obs.metrics, (
+            "prefills", "prefill_chunks", "decode_steps",
+            "admitted", "evicted", "dead_slot_steps",
+            "kv_peak_used_bytes", "prefill_tokens",
+            "prefix_lookup_tokens", "prefix_hit_tokens",
+            "cow_copies", "preemptions", "resumed",
+            "replayed_tokens",
             # fault-tolerance lifecycle
-            "status_ok": 0, "status_timeout": 0, "status_cancelled": 0,
-            "status_failed": 0, "status_shed": 0, "retries": 0,
-            "faults_injected": 0, "faults_detected": 0,
-            "snapshot_restores": 0,
+            "status_ok", "status_timeout", "status_cancelled",
+            "status_failed", "status_shed", "retries",
+            "faults_injected", "faults_detected",
+            "snapshot_restores",
             # per-request migration (router failover / drain)
-            "exported": 0, "imported": 0,
-        }
+            "exported", "imported",
+        ), gauges=("kv_peak_used_bytes",))
+        self._kv_gauge = self.obs.metrics.gauge("kv_peak_used_bytes")
         self._next_rid = 0
         # lanes barred from admission for this many more steps after a
         # fault (quarantine): the faulted occupant has already requeued,
@@ -562,6 +577,9 @@ class ServeEngine:
         self.queue.append(_Pending(
             rid, prompt, max_new_tokens, float(temperature), eff_k, eff_p,
             now, deadline=deadline))
+        if self.obs.tracer is not None:
+            self.obs.mark("submit", rid, track=self._track,
+                          plen=int(prompt.size), max_new=max_new_tokens)
         return rid
 
     def cancel(self, rid: int) -> bool:
@@ -636,6 +654,9 @@ class ServeEngine:
             # retries through the same preempt-and-requeue path a real
             # fault would use, so invariants (refs, deficit) hold
             self.counters["faults_injected"] += 1
+            if self.obs.tracer is not None:
+                self.obs.instant("fault", track=self._track, site="alloc",
+                                 rid=self.slots[slot].rid)
             self._retry_lane(slot, "injected block-alloc fault")
             return None
         while True:
@@ -721,6 +742,9 @@ class ServeEngine:
             self._tables_dirty = True
         self._last_op = "preempt"
         self.counters["preemptions"] += 1
+        if self.obs.tracer is not None:
+            self.obs.mark("preempt", s.rid, track=self._track, slot=slot,
+                          emitted=len(comp.tokens))
 
     def _push_tables(self) -> None:
         """Re-push the host block-table mirror as the device state leaf.
@@ -769,6 +793,7 @@ class ServeEngine:
             # the scheduling truth, so recovery is re-running the same
             # push — exercised here by pushing twice, first one "lost"
             self.counters["faults_injected"] += 1
+            self.obs.instant("fault", track=self._track, site="sched_push")
             pushes = 2
         for _ in range(pushes):
             self.state["tokens"] = self._put(self._tok_mirror, jnp.int32)
@@ -858,6 +883,9 @@ class ServeEngine:
     def _admit(self, req: _Pending, slot: int) -> None:
         plen = int(req.prompt.size)
         limit = req.limit if req.resume else plen + req.max_new_tokens - 1
+        if self.obs.tracer is not None:
+            self.obs.mark("admit", req.rid, track=self._track, slot=slot,
+                          resume=req.resume)
         if not req.resume:
             self.live[req.rid] = Completion(
                 rid=req.rid, prompt_len=plen,
@@ -879,7 +907,11 @@ class ServeEngine:
                 self._deficit += wc
             if self.econ.prefix_cache:
                 if req.resume and req.replay and self._try_restore(slot, req):
-                    return            # restored mid-decode: nothing to prefill
+                    # restored mid-decode: nothing to prefill
+                    if self.obs.tracer is not None:
+                        self.obs.mark("restore", req.rid, track=self._track,
+                                      slot=slot)
+                    return
                 start = self._match_prefix(slot, req.prompt)
                 if start < 0:
                     return            # the lane preempted itself mapping COW
@@ -947,8 +979,20 @@ class ServeEngine:
             # injected dispatch failure BEFORE the executable runs: no
             # device state advanced, the lane just requeues and retries
             self.counters["faults_injected"] += 1
+            if self.obs.tracer is not None:
+                self.obs.instant("fault", track=self._track, site="prefill",
+                                 rid=self.slots[slot].rid)
             self._retry_lane(slot, "injected prefill-dispatch fault")
             return
+        s = self.slots[slot]
+        if self.obs.tracer is None:
+            self._prefill_chunk_run(slot)
+        else:
+            with self.obs.span("prefill_chunk", track=self._track,
+                               rid=s.rid, start=s.prefilled, chunk=s.chunk):
+                self._prefill_chunk_run(slot)
+
+    def _prefill_chunk_run(self, slot: int) -> None:
         s = self.slots[slot]
         start = s.prefilled
         C = s.chunk
@@ -1017,9 +1061,14 @@ class ServeEngine:
             self._active_mirror[slot] = True
             self._sched_dirty = True
             self.counters["replayed_tokens"] += 1
+            if self.obs.tracer is not None:
+                self.obs.mark("replay", s.rid, track=self._track,
+                              pending=s.emit_from)
         else:
             comp.tokens.append(tok)
             comp.token_times.append(now)
+            if self.obs.tracer is not None:
+                self.obs.mark("first_token", s.rid, track=self._track)
             self._tok_mirror[slot] = tok
             done = (s.plen >= s.limit) or (
                 self.econ.eos_id is not None and tok == self.econ.eos_id)
@@ -1028,6 +1077,25 @@ class ServeEngine:
                 self._finish(slot, now)
         if not self.econ.fused_sampling:
             self._writeback_sampled()
+
+    def _observe_terminal(self, comp: Completion) -> None:
+        """Latency histograms + the request's terminal trace mark — the
+        single exit point every termination path funnels through.  The
+        histogram math mirrors ``launch/serve.py``'s summary exactly:
+        TTFT = first token's host arrival - submit, per-token = total
+        latency / emitted tokens (requests that emitted nothing record
+        no latency, matching the historical printout)."""
+        st = comp.status
+        if comp.tokens:
+            self.obs.metrics.histogram(f"ttft_ms_{st}").observe(
+                max(0.0, (comp.token_times[0] - comp.submit_time) * 1e3))
+            self.obs.metrics.histogram(f"tpot_ms_{st}").observe(
+                max(0.0, (comp.finish_time - comp.submit_time) * 1e3
+                    / len(comp.tokens)))
+        if self.obs.tracer is not None:
+            self.obs.mark("terminal", comp.rid, track=self._track,
+                          status=st, tokens=len(comp.tokens),
+                          retries=comp.retries)
 
     def _finish(self, slot: int, now: float) -> None:
         # natural EOS/budget eviction: the device already deactivated the
@@ -1063,6 +1131,7 @@ class ServeEngine:
             self._tables_dirty = True
         self.counters["evicted"] += 1
         self.counters[f"status_{status}"] += 1
+        self._observe_terminal(comp)
 
     def _terminate_queued(self, req: _Pending, status: str,
                           error: str | None = None) -> None:
@@ -1082,6 +1151,7 @@ class ServeEngine:
         comp.error = error
         self.completions[req.rid] = comp
         self.counters[f"status_{status}"] += 1
+        self._observe_terminal(comp)
 
     def _retry_lane(self, slot: int, reason: str) -> None:
         """Quarantine + bounded retry for a faulted lane (non-finite
@@ -1096,6 +1166,9 @@ class ServeEngine:
         comp.retries += 1
         self.counters["retries"] += 1
         self._quarantine[slot] = 1
+        if self.obs.tracer is not None:
+            self.obs.mark("retry", s.rid, track=self._track, reason=reason,
+                          retries=comp.retries)
         if comp.retries > self.econ.max_retries:
             self._terminate(slot, "failed", error=reason)
         else:
@@ -1157,8 +1230,7 @@ class ServeEngine:
         else:
             per_lane = self.kv_reserved_bytes // self.econ.max_slots
             used = per_lane * sum(s is not None for s in self.slots)
-        self.counters["kv_peak_used_bytes"] = max(
-            self.counters["kv_peak_used_bytes"], used)
+        self._kv_gauge.set_max(used)
 
     # ------------------------------------------------------------------
     # The serving loop
@@ -1222,6 +1294,11 @@ class ServeEngine:
                 self._sched_dirty = False
             else:
                 self._push_active()
+            # the decode span covers dispatch AND the token fetch — the
+            # one per-step host sync — so its duration is the real
+            # step-critical path, measured by the engine's own clock
+            sid = None if self.obs.tracer is None else self.obs.begin(
+                "decode", track=self._track, lanes=len(active_slots))
             exe = self._decode_exe()
             self.state, out = exe(self.params, self.state)
             self._last_op = "decode"
@@ -1246,6 +1323,7 @@ class ServeEngine:
                 toks = np.where(
                     np.isfinite(logits).all(axis=-1), toks,
                     np.int32(NONFINITE_TOKEN))  # host twin of the sentinel
+            self.obs.end(sid)
             if self.faults is not None:
                 lane = self.faults.pick("decode_logits", active_slots)
                 if lane is not None:
@@ -1253,6 +1331,10 @@ class ServeEngine:
                     # logits for this lane: flip its word in the fetched
                     # vector to the sentinel the real detector reports
                     self.counters["faults_injected"] += 1
+                    if self.obs.tracer is not None:
+                        self.obs.instant(
+                            "fault", track=self._track, site="decode_logits",
+                            rid=self.slots[lane].rid)
                     toks = np.array(toks, copy=True)
                     toks[lane] = NONFINITE_TOKEN
             now = self.clock()
@@ -1458,6 +1540,8 @@ class ServeEngine:
         self.counters.update(snap["counters"])
         self._next_rid = int(snap["next_rid"])
         self.counters["snapshot_restores"] += 1
+        self.obs.instant("snapshot_restore", track=self._track,
+                         queued=len(self.queue), live=len(self.live))
 
     # -- per-request migration (router failover / drain) ---------------
     def export_request(self, rid: int) -> dict:
@@ -1483,6 +1567,9 @@ class ServeEngine:
                 del self.queue[idx]
                 comp = self.live.pop(rid, None) if req.resume else None
                 self.counters["exported"] += 1
+                if self.obs.tracer is not None:
+                    self.obs.mark("export", rid, track=self._track,
+                                  resume=req.resume)
                 return {
                     "pending": self._snap_pending(req),
                     "completion":
@@ -1528,6 +1615,9 @@ class ServeEngine:
         (self.queue.appendleft if front else self.queue.append)(pending)
         self._next_rid = max(self._next_rid, rid + 1)
         self.counters["imported"] += 1
+        if self.obs.tracer is not None:
+            self.obs.mark("import", rid, track=self._track, resume=resume,
+                          front=front)
         return rid
 
     def save_snapshot(self, mgr, step: int) -> None:
@@ -1561,7 +1651,34 @@ class ServeEngine:
         executables (preemption, instant-finish prefills) zero one
         executable later.  Lifecycle: every completion carries a terminal
         status accounted in the status counters, and every in-flight
-        Completion is owned by exactly one lane or one queued resume."""
+        Completion is owned by exactly one lane or one queued resume.
+
+        A failed sweep dumps the flight recorder (when one is attached)
+        before re-raising, so the event history leading up to the trip
+        lands on disk with the assertion message."""
+        try:
+            self._check_invariants()
+        except AssertionError as e:
+            self.obs.record("invariant_failure", engine=self._track,
+                            error=str(e))
+            self.obs.dump("engine_invariant_failure", context={
+                "engine": self._track,
+                "error": str(e),
+                "live_rids": sorted(self.live),
+                "queued_rids": [r.rid for r in self.queue],
+                "counters": dict(self.counters),
+            })
+            raise
+
+    def _check_invariants(self) -> None:
+        # metric-kind hygiene: the peak gauge must never have become a
+        # counter (or vice versa) behind the MetricMap facade
+        self.obs.metrics.check()
+        kind = self.obs.metrics.kind
+        assert kind("kv_peak_used_bytes") == "gauge", \
+            "kv_peak_used_bytes must be a gauge (peak set, not a sum)"
+        for k in ("decode_steps", "admitted", "evicted", "preemptions"):
+            assert kind(k) == "counter", f"{k} must be a counter"
         for comp in self.completions.values():
             assert comp.status in STATUSES, (
                 f"rid {comp.rid}: unknown status {comp.status!r}")

@@ -47,6 +47,8 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.obs.metrics import MetricMap, MetricsRegistry
+
 ENGINE_FAULT_SITES = ("decode_logits", "prefill", "alloc", "sched_push")
 REPLICA_FAULT_SITES = ("replica_crash", "replica_stall")
 FAULT_SITES = ENGINE_FAULT_SITES + REPLICA_FAULT_SITES
@@ -99,8 +101,13 @@ class FaultPlan:
             s: np.random.default_rng([self.seed, i, _VICTIM_STREAM])
             for i, s in enumerate(FAULT_SITES)
         }
-        self.consults = {s: 0 for s in FAULT_SITES}
-        self.fired = {s: 0 for s in FAULT_SITES}
+        # per-site consult/fire counts are typed counters (repro.obs) so
+        # the chaos bench's metrics snapshot carries them; the MetricMap
+        # facade keeps the historical dict shape at every call site
+        self.metrics = MetricsRegistry("faults")
+        self.consults = MetricMap(self.metrics, FAULT_SITES,
+                                  prefix="consults_")
+        self.fired = MetricMap(self.metrics, FAULT_SITES, prefix="fired_")
 
     @property
     def total_fired(self) -> int:

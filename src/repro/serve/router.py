@@ -59,6 +59,7 @@ from typing import Callable
 import numpy as np
 
 from ..core.aot import AotCache
+from ..obs import MetricMap, Observer
 from .engine import STATUSES, Completion, EngineConfig, ServeEngine
 from .faults import FaultPlan
 from .paged import prefix_keys
@@ -165,6 +166,7 @@ class Router:
         clock: Callable[[], float] = time.perf_counter,
         faults: FaultPlan | None = None,
         engine_faults: list[FaultPlan | None] | None = None,
+        obs: Observer | None = None,
     ):
         if engine_faults is not None and len(engine_faults) != router.replicas:
             raise ValueError("engine_faults must have one entry per replica")
@@ -172,27 +174,34 @@ class Router:
         self.rc = router
         self.clock = clock
         self.faults = faults
+        # the router keeps its own metrics registry; each replica engine
+        # gets a child Observer (fresh registry so per-replica counters
+        # never collide) sharing the router's tracer/recorder so every
+        # event lands on one fleet timeline
+        self.obs = obs if obs is not None else Observer(name="router")
+        self._track = self.obs.name
         # NOT ``aot or ...``: AotCache defines __len__ (see ServeEngine)
-        self.aot = aot if aot is not None else AotCache("router")
+        self.aot = aot if aot is not None else AotCache("router", obs=self.obs)
         self.replicas: list[ReplicaHandle] = []
         dev_params = params
         for i in range(router.replicas):
             eng = ServeEngine(
                 cfg, mesh, rules, dev_params, engine, aot=self.aot,
                 clock=clock,
-                faults=engine_faults[i] if engine_faults else None)
+                faults=engine_faults[i] if engine_faults else None,
+                obs=self.obs.child(f"replica{i}"))
             dev_params = eng.params     # share the placed copy fleet-wide
             self.replicas.append(ReplicaHandle(i, eng))
         self.queue: deque[_Record] = deque()
         self.records: dict[int, _Record] = {}
         self.completions: dict[int, Completion] = {}
         self.placements: dict[int, int] = {}    # rid -> last replica index
-        self.counters = {
-            "submitted": 0, "dispatched": 0, "cache_routed": 0,
-            "migrated": 0, "failovers": 0, "replicas_dead": 0,
-            "stalls_injected": 0, "stalls_detected": 0,
-            **{f"status_{st}": 0 for st in STATUSES},
-        }
+        self.counters = MetricMap(self.obs.metrics, (
+            "submitted", "dispatched", "cache_routed",
+            "migrated", "failovers", "replicas_dead",
+            "stalls_injected", "stalls_detected",
+            *(f"status_{st}" for st in STATUSES),
+        ))
         self.tick = 0
         self._next_rid = 0
         # EWMA of dispatch->finish seconds for "ok" completions; feeds the
@@ -233,6 +242,9 @@ class Router:
             None if deadline_s is None else now + float(deadline_s),
             limit=int(prompt.size) + int(max_new_tokens) - 1)
         self.counters["submitted"] += 1
+        if self.obs.tracer is not None:
+            self.obs.mark("submit", rid, track=self._track,
+                          plen=int(prompt.size), max_new=int(max_new_tokens))
         shed_reason = self._shed_reason(rec)
         if shed_reason is not None:
             self._finish_local(rec, "shed", error=shed_reason)
@@ -316,6 +328,8 @@ class Router:
             return
         h.state = "dead"
         self.counters["replicas_dead"] += 1
+        self.obs.instant("replica_dead", track=self._track, replica=idx)
+        self.obs.record("replica_dead", replica=idx, tick=self.tick)
         self._failover(idx)
 
     def drain(self, idx: int) -> int:
@@ -343,6 +357,9 @@ class Router:
             rec.replica = None
             self.queue.appendleft(rec)
             self.counters["migrated"] += 1
+            if self.obs.tracer is not None:
+                self.obs.mark("drain", rec.rid, track=self._track,
+                              replica=idx)
         assert not h.engine.has_work(), "drained replica still holds work"
         return len(owned)
 
@@ -385,15 +402,30 @@ class Router:
                       error: str | None = None) -> None:
         """Terminate a request the router itself owns (shed / queued
         timeout / queued cancel / failover exhaustion), preserving the
-        mirrored token prefix like an engine-side termination would."""
-        self.completions[rec.rid] = Completion(
+        mirrored token prefix like an engine-side termination would.
+        Engine-side terminations observe their own latency histograms and
+        terminal marks (``ServeEngine._observe_terminal``); this is the
+        matching exit point for router-owned ones, so every rid gets
+        exactly one terminal event fleet-wide."""
+        comp = Completion(
             rid=rec.rid, prompt_len=int(rec.prompt.size),
             max_new_tokens=rec.max_new_tokens, tokens=list(rec.tokens),
             token_times=list(rec.token_times), submit_time=rec.submit_time,
             finish_time=self.clock(), status=status, error=error,
             retries=rec.retries)
+        self.completions[rec.rid] = comp
         self.counters[f"status_{status}"] += 1
         self.records.pop(rec.rid, None)
+        if comp.tokens:
+            self.obs.metrics.histogram(f"ttft_ms_{status}").observe(
+                max(0.0, (comp.token_times[0] - comp.submit_time) * 1e3))
+            self.obs.metrics.histogram(f"tpot_ms_{status}").observe(
+                max(0.0, (comp.finish_time - comp.submit_time) * 1e3
+                    / len(comp.tokens)))
+        if self.obs.tracer is not None:
+            self.obs.mark("terminal", rec.rid, track=self._track,
+                          status=status, tokens=len(comp.tokens),
+                          error=error)
 
     def _expire_queue_deadlines(self) -> bool:
         expired = [rec for rec in self.queue
@@ -421,6 +453,8 @@ class Router:
         if victim is not None:
             self.replicas[victim].stalled = True
             self.counters["stalls_injected"] += 1
+            self.obs.instant("fault", track=self._track,
+                             site="replica_stall", replica=victim)
             hit = True
         return hit
 
@@ -481,6 +515,9 @@ class Router:
                 "submit_time": rec.submit_time, "finish_time": 0.0,
                 "status": "ok", "error": None, "retries": rec.retries,
             }
+        if self.obs.tracer is not None:
+            self.obs.mark("route", rec.rid, track=self._track,
+                          replica=h.idx, resume=resume)
         h.engine.import_request(
             {"pending": pending, "completion": completion},
             front=resume)
@@ -520,6 +557,9 @@ class Router:
             rec.replica = None
             rec.failovers += 1
             self.counters["failovers"] += 1
+            if self.obs.tracer is not None:
+                self.obs.mark("failover", rec.rid, track=self._track,
+                              replica=idx, failovers=rec.failovers)
             if rec.failovers > self.rc.max_failovers:
                 self._finish_local(
                     rec, "failed",
@@ -540,6 +580,8 @@ class Router:
                 continue
             if self.tick - h.last_progress >= self.rc.stall_budget:
                 self.counters["stalls_detected"] += 1
+                self.obs.instant("stall_detected", track=self._track,
+                                 replica=h.idx, tick=self.tick)
                 self.kill(h.idx)
                 detected = True
         return detected
@@ -549,7 +591,27 @@ class Router:
     # ------------------------------------------------------------------
     def check_invariants(self) -> None:
         """Fleet-level conservation sweep (the router fuzzer runs this
-        after every tick), then each non-dead replica's own sweep."""
+        after every tick), then each non-dead replica's own sweep.  A
+        failed sweep dumps the flight recorder (when attached) before
+        re-raising — replica sweeps dump their own engine context first,
+        then the fleet context lands in a second dump."""
+        try:
+            self._check_invariants()
+        except AssertionError as e:
+            self.obs.record("invariant_failure", router=self._track,
+                            error=str(e))
+            self.obs.dump("router_invariant_failure", context={
+                "error": str(e),
+                "tick": self.tick,
+                "queue_depth": len(self.queue),
+                "inflight_rids": sorted(self.records),
+                "replica_states": [h.state for h in self.replicas],
+                "counters": dict(self.counters),
+            })
+            raise
+
+    def _check_invariants(self) -> None:
+        self.obs.metrics.check()
         queued = {rec.rid for rec in self.queue}
         for rid, rec in self.records.items():
             if rec.replica is None:

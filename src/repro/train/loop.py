@@ -21,6 +21,7 @@ from repro.configs.base import ArchConfig, ShapeConfig
 from repro.data import make_batch_fn
 from repro.models import registry
 from repro.models.common import ShardRules
+from repro.obs import Observer
 from repro.optim import OptConfig
 from repro.optim.buckets import make_buckets, reshard_scattered
 from repro.train.step import (
@@ -63,15 +64,26 @@ def train(
     *,
     resume: bool = True,
     on_step: Callable[[int, dict], None] | None = None,
+    obs: Observer | None = None,
 ) -> dict:
-    """Runs the loop; returns final metrics summary."""
+    """Runs the loop; returns final metrics summary.
+
+    When an :class:`~repro.obs.Observer` is attached, every step records
+    a ``step_ms`` histogram plus per-phase spans (``stage_batch`` /
+    ``h2d`` / ``dispatch`` / ``device_wait`` / ``ckpt_save``) and the
+    summary embeds the metrics snapshot.  NOTE: the ``device_wait`` span
+    needs a ``block_until_ready`` on the step's metrics — profiling mode
+    deliberately adds that one host sync per step (it is what separates
+    host staging time from device compute); the untraced loop keeps the
+    original fully-async dispatch."""
     step_fn, (params_sds, opt_sds, _), in_sh = jit_train_step(
         cfg, mesh, rules, opt, shape, settings
     )
     batch_fn = make_batch_fn(cfg, shape, loop.seed)
     b_sh = in_sh[2]
 
-    mgr = CheckpointManager(loop.ckpt_dir, loop.keep_k) if loop.ckpt_dir else None
+    mgr = (CheckpointManager(loop.ckpt_dir, loop.keep_k, obs=obs)
+           if loop.ckpt_dir else None)
     # flat-engine provenance rides the checkpoint meta: a ZeRO
     # checkpoint's scattered m/v bake in (n_shards, bucket boundaries),
     # which a restore onto a different dp size must know to undo
@@ -117,12 +129,29 @@ def train(
     losses, t0 = [], time.perf_counter()
     metrics = {}
     skipped = []   # per-step device scalars; summed once at the end
+    traced = obs is not None and obs.tracer is not None
+    step_hist = obs.metrics.histogram("step_ms") if obs is not None else None
     for step in range(start, loop.steps):
-        host_batch = batch_fn(step)
-        batch = {
-            k: jax.device_put(v, b_sh[k]) for k, v in host_batch.items()
-        }
-        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        ts = time.perf_counter()
+        if traced:
+            with obs.span("stage_batch", cat="train", track="train",
+                          step=step):
+                host_batch = batch_fn(step)
+            with obs.span("h2d", cat="train", track="train"):
+                batch = {k: jax.device_put(v, b_sh[k])
+                         for k, v in host_batch.items()}
+            with obs.span("dispatch", cat="train", track="train"):
+                params, opt_state, metrics = step_fn(params, opt_state, batch)
+            # profiling-mode-only host sync: wait for the device so the
+            # span boundary separates staging/dispatch from compute
+            with obs.span("device_wait", cat="train", track="train"):
+                jax.block_until_ready(metrics["loss"])
+        else:
+            host_batch = batch_fn(step)
+            batch = {
+                k: jax.device_put(v, b_sh[k]) for k, v in host_batch.items()
+            }
+            params, opt_state, metrics = step_fn(params, opt_state, batch)
         if "skipped" in metrics:
             skipped.append(metrics["skipped"])
         if loop.log_every and (step + 1) % loop.log_every == 0:
@@ -131,15 +160,23 @@ def train(
             dt = time.perf_counter() - t0
             print(f"[train] step {step + 1:5d} loss {loss:.4f} ({dt:.1f}s)")
         if mgr and loop.ckpt_every and (step + 1) % loop.ckpt_every == 0:
-            mgr.save(step + 1, {"params": params, "opt": opt_state},
-                     blocking=False, extra_meta=ckpt_meta)
+            if traced:
+                with obs.span("ckpt_save", cat="train", track="train",
+                              step=step + 1):
+                    mgr.save(step + 1, {"params": params, "opt": opt_state},
+                             blocking=False, extra_meta=ckpt_meta)
+            else:
+                mgr.save(step + 1, {"params": params, "opt": opt_state},
+                         blocking=False, extra_meta=ckpt_meta)
         if on_step:
             on_step(step, metrics)
+        if step_hist is not None:
+            step_hist.observe((time.perf_counter() - ts) * 1e3)
     if mgr:
         mgr.save(loop.steps, {"params": params, "opt": opt_state},
                  blocking=True, extra_meta=ckpt_meta)
         mgr.wait()
-    return {
+    out = {
         "final_loss": float(metrics["loss"]) if metrics else float("nan"),
         "losses": losses,
         # non-finite-gradient steps the flat engine turned into bitwise
@@ -148,3 +185,6 @@ def train(
         "params": params,
         "opt_state": opt_state,
     }
+    if obs is not None:
+        out["metrics"] = obs.metrics.snapshot()
+    return out
