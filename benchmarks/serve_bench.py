@@ -51,6 +51,13 @@ Modes:
                       priority lane back to the queue (exact greedy
                       parity still required — ``headline.preempt_greedy_
                       parity``).
+    continuous_tiered the preempting pool with the host RAM tier ON:
+                      every preemption DMAs the victim's KV blocks to
+                      pinned host buffers and re-admission restores them
+                      O(bytes copied) — ``restores > 0`` with zero
+                      ``replayed_tokens`` and zero re-prefill, tokens
+                      bitwise the roomy-pool paged drive (ci.sh gates
+                      ``tiered_o_copy_resume``, parity, builds-flat).
     continuous_recurrent
                       the SAME engine serving the ``ssm`` family (xLSTM
                       smoke config): lanes are per-lane recurrent state
@@ -366,6 +373,74 @@ def run_chaos(cfg, mesh, rules, params, trace: list[_Req], *,
         "all_ok": all(s == "ok" for s in statuses),
         "token_parity": got == want,
         "steady_builds_delta": builds_delta,
+        "metrics": eng.obs.metrics.snapshot(),
+    }
+
+
+def run_tiered(cfg, mesh, rules, params, trace: list[_Req], *,
+               max_slots: int, max_len: int, page_size: int,
+               num_blocks: int, preempt_blocks: int, aot=None) -> dict:
+    """The host-tier drive: paged engine with ``admission="preempt"`` on
+    the same squeezed pool as ``continuous_paged_preempt``, plus a host
+    RAM tier — every preemption DMAs the victim's KV blocks to host
+    buffers and re-admission restores them O(bytes copied) instead of
+    replaying the stream.
+
+    The O(copy) claim is asserted structurally, not by timing: with the
+    tier on, preemptions must be > 0 (the pool forces them) while
+    ``replayed_tokens`` stays 0 (no restored lane ever re-decoded a
+    recorded token) and ``prefill_tokens`` equals the trace's prompt
+    tokens exactly (no re-prefill on resume).  Tokens must remain
+    bitwise the roomy-pool paged drive's — spill/restore is invisible in
+    the output."""
+    from repro.serve import EngineConfig, ServeEngine
+
+    def drive(ec):
+        eng = ServeEngine(cfg, mesh, rules, params, ec, aot=aot)
+        eng.prebuild()
+        b0 = eng.stats["builds"]
+        rids = [eng.submit(r.prompt, max_new_tokens=r.budget)
+                for r in trace]
+        t0 = time.perf_counter()
+        eng.drain()
+        return (eng, [list(eng.completions[r].tokens) for r in rids],
+                time.perf_counter() - t0, eng.stats["builds"] - b0)
+
+    # parity target: the roomy half pool never preempts, so its streams
+    # are the uninterrupted reference (dispatches purely from cache)
+    _, want, _, _ = drive(EngineConfig(
+        max_slots=max_slots, max_len=max_len, kv_layout="paged",
+        page_size=page_size, num_blocks=num_blocks))
+    eng, got, wall, builds_delta = drive(EngineConfig(
+        max_slots=max_slots, max_len=max_len, kv_layout="paged",
+        page_size=page_size, num_blocks=preempt_blocks,
+        admission="preempt", host_tier=True))
+
+    c = eng.counters
+    prompt_tokens = sum(int(r.prompt.size) for r in trace)
+    tokens = sum(len(t) for t in got)
+    return {
+        "tokens_per_s": tokens / wall, "useful_tokens": tokens,
+        "wall_s": wall,
+        "token_parity": got == want,
+        "all_ok": all(eng.completions[r].status == "ok"
+                      for r in eng.completions),
+        "preemptions": c["preemptions"],
+        "spills": c["spills"], "restores": c["restores"],
+        "spill_drops": c["spill_drops"],
+        "spilled_bytes": c["spilled_bytes"],
+        "restored_bytes": c["restored_bytes"],
+        "replayed_tokens": c["replayed_tokens"],
+        "prefill_tokens": c["prefill_tokens"],
+        "prompt_tokens": prompt_tokens,
+        # every resume was a copy: no replay decode steps, no re-prefill
+        "o_copy_resume": bool(
+            c["restores"] > 0 and c["replayed_tokens"] == 0
+            and c["prefill_tokens"] == prompt_tokens),
+        "steady_builds_delta": builds_delta,
+        "host_tier": eng.stats["host_tier"],
+        "kv_reserved_bytes": eng.kv_reserved_bytes,
+        "kv_peak_used_bytes": eng.stats["kv_peak_used_bytes"],
         "metrics": eng.obs.metrics.snapshot(),
     }
 
@@ -701,6 +776,10 @@ def main(argv=None) -> dict:
         max_len=max_len, fused=True, kv_layout="paged",
         page_size=page_size, num_blocks=preempt_blocks,
         admission="preempt", aot=aot)
+    report["modes"]["continuous_tiered"] = run_tiered(
+        cfg, mesh, rules, params, trace, max_slots=max_slots,
+        max_len=max_len, page_size=page_size, num_blocks=num_blocks,
+        preempt_blocks=preempt_blocks, aot=aot)
     report["modes"]["continuous_chaos"] = run_chaos(
         cfg, mesh, rules, params, trace, max_slots=max_slots,
         max_len=max_len, page_size=page_size, num_blocks=num_blocks,
@@ -772,6 +851,18 @@ def main(argv=None) -> dict:
             / max(shared["timed"]["prefill_tokens"], 1)),
         "preemptions_timed": (
             report["modes"]["continuous_paged_preempt"]["timed"]["preemptions"]),
+        # host tier: every preemption resumed O(copy) — restores > 0 with
+        # zero replayed decode steps and zero re-prefill — bitwise the
+        # roomy-pool paged streams, dispatching purely from cache
+        "tiered_token_parity": (
+            report["modes"]["continuous_tiered"]["token_parity"]),
+        "tiered_restores": report["modes"]["continuous_tiered"]["restores"],
+        "tiered_replayed_tokens": (
+            report["modes"]["continuous_tiered"]["replayed_tokens"]),
+        "tiered_o_copy_resume": (
+            report["modes"]["continuous_tiered"]["o_copy_resume"]),
+        "tiered_steady_builds_delta": (
+            report["modes"]["continuous_tiered"]["steady_builds_delta"]),
         # chaos: injected faults must all recover — same greedy tokens as
         # the fault-free drive, no retraces, bounded overhead
         "chaos_faults_fired": (

@@ -65,6 +65,13 @@ print(f"  recurrent_parity {h['recurrent_greedy_parity']}  "
       f"(x{h['recurrent_preemptions']})  "
       f"hybrid_parity {h['hybrid_greedy_parity']}  "
       f"recurrent_builds_delta {h['recurrent_steady_builds_delta']}")
+td = rep["modes"]["continuous_tiered"]
+print(f"  tiered: restores {h['tiered_restores']}  "
+      f"replayed {h['tiered_replayed_tokens']}  "
+      f"o_copy {h['tiered_o_copy_resume']}  "
+      f"parity {h['tiered_token_parity']}  "
+      f"spilled {td['spilled_bytes'] / 2**20:.1f} MiB  "
+      f"builds_delta {h['tiered_steady_builds_delta']}")
 print(f"  chaos: faults {h['chaos_faults_fired']}  all_ok {h['chaos_all_ok']}  "
       f"parity {h['chaos_token_parity']}  "
       f"overhead {h['chaos_recovery_overhead']:.2f}x  "
@@ -122,6 +129,20 @@ if not h["recurrent_preempt_parity"] or h["recurrent_preemptions"] <= 0:
 if h["recurrent_steady_builds_delta"] != 0:
     sys.exit("FAIL: a recurrent/hybrid engine mode built executables "
              "after warmup (AOT dispatch cache regression)")
+if h["tiered_restores"] <= 0:
+    sys.exit("FAIL: the tiered mode never restored from the host tier — "
+             "its O(copy) gate is vacuous (pool sizing no longer forces "
+             "preemptions, or spills are being dropped)")
+if not h["tiered_token_parity"]:
+    sys.exit("FAIL: host-tier spill/restore changed greedy tokens — "
+             "restored lanes must continue bitwise-identically")
+if not h["tiered_o_copy_resume"]:
+    sys.exit("FAIL: a tier-restored lane replayed decode steps or "
+             "re-prefilled its prompt — resume must be O(bytes copied), "
+             "not O(generated tokens)")
+if h["tiered_steady_builds_delta"] != 0:
+    sys.exit("FAIL: the tiered mode built executables after prebuild — "
+             "spill/restore transport must ride the AOT cache")
 if h["chaos_faults_fired"] <= 0:
     sys.exit("FAIL: the chaos mode injected no faults — its recovery "
              "gates are vacuous (FaultPlan rates/seed no longer fire)")

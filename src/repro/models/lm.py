@@ -366,6 +366,15 @@ def make_cache_specs(cfg: ArchConfig, batch: int, max_len: int):
     return {"k": c, "v": c}
 
 
+def lane_leaf_axes(cfg: ArchConfig) -> dict:
+    """{cache leaf name -> lane axis} for the *slotted* cache — everything
+    one lane owns, used by the host tier to spill/restore a whole lane as
+    one copy.  For the lm families both leaves put the lane right after
+    the leading (layer[, k/v]) axes."""
+    lead = len(_leading(cfg))
+    return {"k": lead, "v": lead}
+
+
 def cache_pspec(cfg: ArchConfig, dec: DecodeSharding):
     lead = (None,) * len(_leading(cfg))
     from jax.sharding import PartitionSpec as P

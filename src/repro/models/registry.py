@@ -79,6 +79,17 @@ def recurrent_leaf_axes(cfg: ArchConfig) -> dict:
     return fn(cfg) if fn else {}
 
 
+def lane_leaf_axes(cfg: ArchConfig) -> dict:
+    """{cache leaf name -> lane axis} covering *everything* one lane owns
+    in the family's slotted cache (KV segments and recurrent leaves
+    alike).  This is the host tier's spill unit for non-paged layouts: a
+    lane snapshot is one ``dynamic_index_in_dim`` per leaf at these axes.
+    Empty for families that don't declare it (no lane spill; preempt
+    falls back to decode replay)."""
+    fn = getattr(get_module(cfg), "lane_leaf_axes", None)
+    return fn(cfg) if fn else {}
+
+
 def abstract_params(cfg: ArchConfig):
     return spec_tree_to_sds(get_module(cfg).param_specs(cfg))
 

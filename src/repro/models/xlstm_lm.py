@@ -127,6 +127,12 @@ def recurrent_leaf_axes(cfg: ArchConfig) -> dict:
     }
 
 
+def lane_leaf_axes(cfg: ArchConfig) -> dict:
+    """All slot-cache leaves a lane owns (host-tier spill/restore unit).
+    For a pure recurrence that is exactly the recurrent leaves."""
+    return recurrent_leaf_axes(cfg)
+
+
 def make_cache_specs(cfg: ArchConfig, batch: int, max_len: int):
     """max_len is irrelevant for a recurrence — state is O(1) in seq."""
     segs, per, n_s = _layout(cfg)

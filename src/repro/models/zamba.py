@@ -205,6 +205,13 @@ def recurrent_leaf_axes(cfg: ArchConfig) -> dict:
     return {"ssm": 1, "conv": 1}
 
 
+def lane_leaf_axes(cfg: ArchConfig) -> dict:
+    """All slot-cache leaves a lane owns (host-tier spill/restore unit):
+    the slotted KV segment (lane axis 1, after the shared-invocation
+    axis) plus the recurrent mamba leaves."""
+    return {"k": 1, "v": 1, **recurrent_leaf_axes(cfg)}
+
+
 def make_cache_specs(cfg: ArchConfig, batch: int, max_len: int):
     ns = n_shared_invocations(cfg)
     ms = mamba_state_specs(cfg, cfg.n_layers, batch)

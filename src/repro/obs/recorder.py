@@ -11,6 +11,7 @@ from __future__ import annotations
 
 import json
 import os
+import re
 import time
 from collections import deque
 
@@ -45,12 +46,27 @@ class FlightRecorder:
     def events(self) -> list[dict]:
         return list(self._ring)
 
+    def _next_index(self) -> int:
+        """Next free ``flightrec_NNN.json`` index in ``dump_dir``.
+
+        Scanned from the directory, not a per-recorder counter: several
+        recorders (or several processes) sharing a dump_dir would each
+        start their counter at 0 and silently overwrite each other's
+        dump 000 — the one artifact written specifically because
+        something just went wrong."""
+        best = -1
+        for name in os.listdir(self.dump_dir):
+            m = re.match(r"flightrec_(\d+)\.json$", name)
+            if m:
+                best = max(best, int(m.group(1)))
+        return best + 1
+
     def dump(self, reason: str, *, context=None, path: str | None = None) -> str:
         """Write the ring to disk; returns the path written."""
         if path is None:
             os.makedirs(self.dump_dir, exist_ok=True)
             path = os.path.join(
-                self.dump_dir, f"flightrec_{self.dumps:03d}.json")
+                self.dump_dir, f"flightrec_{self._next_index():03d}.json")
         doc = {
             "reason": reason,
             "context": context,

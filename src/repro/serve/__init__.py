@@ -18,8 +18,11 @@ from .loop import ServeConfig, generate, generate_static
 from .router import ReplicaHandle, Router, RouterConfig
 from .paged import (
     BlockAllocator,
+    HostTier,
+    LaneSpill,
     SlotTables,
     blocks_for,
+    check_tiered,
     make_paged_state,
     paged_state_specs,
     prefix_keys,
@@ -43,8 +46,8 @@ __all__ = [
     "ServeConfig", "generate", "generate_static",
     "KeyMirror", "RecurrentCache", "bucket_for", "make_slot_state",
     "prompt_buckets", "slot_state_specs",
-    "BlockAllocator", "SlotTables", "blocks_for", "make_paged_state",
-    "paged_state_specs", "prefix_keys",
+    "BlockAllocator", "HostTier", "LaneSpill", "SlotTables", "blocks_for",
+    "check_tiered", "make_paged_state", "paged_state_specs", "prefix_keys",
     "jit_decode_step", "jit_prefill", "sample_tokens",
     "slot_decode_program", "slot_prefill_program",
     "paged_copy_program", "paged_decode_program", "paged_prefill_program",

@@ -88,14 +88,21 @@ from .cache import (
 )
 from .paged import (
     BlockAllocator,
+    HostTier,
+    LaneSpill,
     SlotTables,
     blocks_for,
     cache_nbytes,
+    check_tiered,
     make_paged_state,
     paged_state_specs,
     prefix_keys,
 )
 from .step import (
+    lane_read_program,
+    lane_write_program,
+    paged_block_read_program,
+    paged_block_write_program,
     paged_copy_program,
     paged_decode_program,
     paged_prefill_program,
@@ -103,6 +110,18 @@ from .step import (
     slot_decode_program,
     slot_prefill_program,
 )
+
+
+def _exact_share(total: int, units: int, denom: int) -> int:
+    """``units``/``denom`` of ``total`` bytes, multiplied BEFORE dividing.
+
+    The historical per-unit form ``(total // denom) * units`` truncates
+    the per-unit share on non-divisible shapes and under-reports when
+    scaled back up (by up to ``units * (denom - 1)`` bytes); multiplying
+    first keeps the result the exact floor of the true fraction — and
+    exact, full stop, whenever ``denom`` is an axis factor of every leaf
+    (the common case for block/lane/position counts)."""
+    return total * units // denom
 
 
 @dataclasses.dataclass(frozen=True)
@@ -157,6 +176,23 @@ class EngineConfig:
     # quarantined and requeued through the preempt-and-requeue path
     # before the request goes terminal with status "failed"
     max_retries: int = 2
+    # --- host-RAM tier (any layout / state kind) -----------------------
+    # spill a preempted lane's state (KV blocks, or the whole-lane
+    # slice registry.lane_leaf_axes describes) to host RAM and restore
+    # it O(copy) at resume instead of O(generated-tokens) decode replay;
+    # LRU-reclaimed prefix-cache blocks also spill (the tier is a
+    # second-level prefix cache), and hold()-idle lanes can park
+    # off-HBM.  Host-side policy: does NOT change executable keys beyond
+    # adding the prebuilt transport programs.
+    host_tier: bool = False
+    # host pool budget in KV-block-sized units (paged payloads; see
+    # HostTier); None = unbounded.  Ignored when the caller passes a
+    # shared HostTier instance (the router does, fleet-wide).
+    host_tier_blocks: int | None = None
+    # a held lane parks off-HBM (lane freed, state host-resident) after
+    # being held this many clock-seconds; None = held lanes stay
+    # resident until release()
+    park_idle_s: float | None = None
 
 
 @dataclasses.dataclass
@@ -177,6 +213,8 @@ class _Slot:
     hasher: Any = None            # incremental chain hash (prefix_keys
     hashed: int = 0               # equivalent); blocks digested so far
     deadline: float | None = None # absolute clock() time the request expires
+    held: bool = False            # hold(): lane paused between user turns
+    held_since: float | None = None  # clock() of the hold (park threshold)
 
 
 # Terminal per-request statuses (Completion.status).  Failures are data,
@@ -267,6 +305,7 @@ class ServeEngine:
         clock: Callable[[], float] = time.perf_counter,
         faults: FaultPlan | None = None,
         obs: Observer | None = None,
+        host_tier: HostTier | None = None,
     ):
         if not registry.supports_slot_serving(cfg):
             raise ValueError(
@@ -358,6 +397,36 @@ class ServeEngine:
         self._state_sds = state_sds(self.state)
         self.kv_reserved_bytes = cache_nbytes(self.state["cache"])
 
+        # --- host-RAM tier ---------------------------------------------
+        # paged engines spill per-block (the lane's KV, block by block);
+        # slotted engines spill the whole-lane slice the family declares
+        self._lane_axes = {} if self.paged else registry.lane_leaf_axes(cfg)
+        if engine.park_idle_s is not None and not engine.host_tier:
+            raise ValueError("park_idle_s requires host_tier=True")
+        if engine.host_tier_blocks is not None and not engine.host_tier:
+            raise ValueError("host_tier_blocks requires host_tier=True")
+        if engine.host_tier:
+            if not self.paged and not self._lane_axes:
+                raise ValueError(
+                    f"family {cfg.family!r} declares no lane_leaf_axes — "
+                    "the host tier has nothing to spill on the slotted "
+                    "layout")
+            # a caller-provided tier is SHARED (the router passes one per
+            # fleet so spills survive replica crashes)
+            self.tier = host_tier if host_tier is not None \
+                else HostTier(engine.host_tier_blocks)
+            if self.paged and engine.prefix_cache:
+                self.alloc.on_evict = self._spill_block
+        else:
+            if host_tier is not None:
+                raise ValueError(
+                    "host_tier instance passed but EngineConfig.host_tier "
+                    "is False")
+            self.tier = None
+        # rid -> pending resume for lanes parked off-HBM by hold() +
+        # park_idle_s; re-enters the queue on release()
+        self.parked: dict[int, _Pending] = {}
+
         self.queue: deque[_Pending] = deque()
         self.slots: list[_Slot | None] = [None] * engine.max_slots
         self.live: dict[int, Completion] = {}
@@ -380,6 +449,12 @@ class ServeEngine:
             "snapshot_restores",
             # per-request migration (router failover / drain)
             "exported", "imported",
+            # host-RAM tier: lane spills/restores (O(copy) resume),
+            # spilled prefix blocks, bytes moved each way, payloads the
+            # tier refused (replay fallback), and hold/park lifecycle
+            "spills", "restores", "spilled_bytes", "restored_bytes",
+            "spill_drops", "prefix_spills", "host_prefix_hits",
+            "holds", "releases", "parked",
         ), gauges=("kv_peak_used_bytes",))
         self._kv_gauge = self.obs.metrics.gauge("kv_peak_used_bytes")
         self._next_rid = 0
@@ -500,6 +575,88 @@ class ServeEngine:
 
         return self.aot.get(key, build)
 
+    # -- host-tier transport (fixed-shape, AOT like everything else) ----
+    def _block_payload_sds(self) -> dict:
+        out = {}
+        for name, c in self._state_sds["cache"].items():
+            ax = len(c.shape) - 4
+            out[name] = jax.ShapeDtypeStruct(
+                c.shape[:ax] + c.shape[ax + 1:], c.dtype)
+        return out
+
+    def _lane_payload_sds(self) -> dict:
+        out = {}
+        for name, ax in self._lane_axes.items():
+            c = self._state_sds["cache"][name]
+            out[name] = jax.ShapeDtypeStruct(
+                c.shape[:ax] + c.shape[ax + 1:], c.dtype)
+        return out
+
+    def _block_read_exe(self):
+        """Read one KV block to replicated outputs (spill fetch)."""
+        key = ("tier_block_read",) + self._sampler_key()
+
+        def build():
+            fn = paged_block_read_program(self.cfg, self.mesh, self.rules)
+            i32 = jax.ShapeDtypeStruct((), jnp.int32)
+            out_sh = {n: self._rep for n in self._state_sds["cache"]}
+            # NOT donated: the read must leave the state intact
+            jitted = jax.jit(fn, in_shardings=(self._state_sh, self._rep),
+                             out_shardings=out_sh)
+            return jitted.lower(self._state_sds, i32).compile()
+
+        return self.aot.get(key, build)
+
+    def _block_write_exe(self):
+        """Write one KV block from host payloads (restore)."""
+        key = ("tier_block_write",) + self._sampler_key()
+
+        def build():
+            fn = paged_block_write_program(self.cfg, self.mesh, self.rules)
+            i32 = jax.ShapeDtypeStruct((), jnp.int32)
+            pay = self._block_payload_sds()
+            pay_sh = {n: self._rep for n in pay}
+            jitted = jax.jit(fn, in_shardings=(self._state_sh, pay_sh,
+                                               self._rep),
+                             out_shardings=self._state_sh,
+                             donate_argnums=(0,))
+            return jitted.lower(self._state_sds, pay, i32).compile()
+
+        return self.aot.get(key, build)
+
+    def _lane_read_exe(self):
+        """Read one lane's whole cache slice (slotted-layout spill)."""
+        key = ("tier_lane_read",) + self._sampler_key()
+
+        def build():
+            fn = lane_read_program(self.cfg, self.mesh, self.rules,
+                                   axes=self._lane_axes)
+            i32 = jax.ShapeDtypeStruct((), jnp.int32)
+            out_sh = {n: self._rep for n in self._lane_axes}
+            jitted = jax.jit(fn, in_shardings=(self._state_sh, self._rep),
+                             out_shardings=out_sh)
+            return jitted.lower(self._state_sds, i32).compile()
+
+        return self.aot.get(key, build)
+
+    def _lane_write_exe(self):
+        """Write one lane's whole cache slice (slotted-layout restore)."""
+        key = ("tier_lane_write",) + self._sampler_key()
+
+        def build():
+            fn = lane_write_program(self.cfg, self.mesh, self.rules,
+                                    axes=self._lane_axes)
+            i32 = jax.ShapeDtypeStruct((), jnp.int32)
+            pay = self._lane_payload_sds()
+            pay_sh = {n: self._rep for n in pay}
+            jitted = jax.jit(fn, in_shardings=(self._state_sh, pay_sh,
+                                               self._rep),
+                             out_shardings=self._state_sh,
+                             donate_argnums=(0,))
+            return jitted.lower(self._state_sds, pay, i32).compile()
+
+        return self.aot.get(key, build)
+
     def prebuild(self) -> None:
         """Compile every executable this engine can ever dispatch.
 
@@ -521,6 +678,15 @@ class ServeEngine:
                 self._prefill_exe(C, first=False)
         if self.paged and e.prefix_cache:
             self._copy_exe()
+        if self.tier is not None:
+            # spill/restore transport rides the same AOT discipline: the
+            # first eviction under load must not compile
+            if self.paged:
+                self._block_read_exe()
+                self._block_write_exe()
+            else:
+                self._lane_read_exe()
+                self._lane_write_exe()
 
     # ------------------------------------------------------------------
     # Request lifecycle
@@ -598,17 +764,126 @@ class ServeEngine:
                 del self.queue[idx]
                 self._terminate_queued(req, "cancelled")
                 return True
+        if rid in self.parked:
+            self._terminate_queued(self.parked.pop(rid), "cancelled")
+            return True
         for slot, s in enumerate(self.slots):
             if s is not None and s.rid == rid:
                 self._terminate(slot, "cancelled")
                 return True
         raise KeyError(f"unknown rid {rid}")
 
+    def _find_lane(self, rid: int) -> int | None:
+        for i, s in enumerate(self.slots):
+            if s is not None and s.rid == rid:
+                return i
+        return None
+
+    def hold(self, rid: int) -> bool:
+        """Pause a decoding lane in place (e.g. an agent turn waiting on a
+        tool result): the lane keeps its slot and — for KV layouts — its
+        device state, but its ``active`` bit clears so decode steps skip
+        it.  Held lanes are first in line for preemption and, after
+        ``park_idle_s``, are swept off HBM entirely into the host tier
+        (:meth:`_park`).  Recurrent/hybrid lanes spill to the host tier
+        *immediately* — the decode program zeroes inactive lanes'
+        recurrent leaves, so the device copy is dead the moment the hold
+        lands — which is why holding them requires a host tier.  Returns
+        False if the tier refuses the snapshot (lane keeps decoding);
+        idempotent for an already-held lane.  Raises ``KeyError`` for a
+        rid that is not on a lane (queued/parked/completed requests can't
+        be held)."""
+        slot = self._find_lane(rid)
+        if slot is None:
+            raise KeyError(f"rid {rid} is not on a lane")
+        s = self.slots[slot]
+        if s.held:
+            return True
+        if s.prefilled < s.plen or s.generated < 1:
+            raise ValueError(f"rid {rid} is mid-prefill; cannot hold")
+        if self.rec:
+            if not self._lane_spillable(s):
+                raise ValueError(
+                    "holding a recurrent/hybrid lane requires a host tier "
+                    "(the freeze zeroes inactive lanes' recurrent state)")
+            if not self._spill_lane(slot):
+                return False
+        s.held = True
+        s.held_since = self.clock()
+        self._active_mirror[slot] = False
+        self._active_dirty = True
+        self.counters["holds"] += 1
+        if self.obs.tracer is not None:
+            self.obs.mark("hold", rid, track=self._track, slot=slot)
+        return True
+
+    def release(self, rid: int) -> None:
+        """Resume a held or parked request.  A held lane flips its
+        ``active`` bit back on (recurrent lanes restore their hold-time
+        snapshot from the host tier first — the device copy was zeroed);
+        a parked request re-enters the queue at the front and resumes
+        through the normal admission path, O(copy) if its spill survived.
+        Raises ``KeyError`` if the rid is neither held nor parked."""
+        if rid in self.parked:
+            self.queue.appendleft(self.parked.pop(rid))
+            self.counters["releases"] += 1
+            if self.obs.tracer is not None:
+                self.obs.mark("release", rid, track=self._track,
+                              parked=True)
+            return
+        slot = self._find_lane(rid)
+        if slot is None or not self.slots[slot].held:
+            raise KeyError(f"rid {rid} is not held or parked")
+        s = self.slots[slot]
+        if self.rec:
+            sp = self.tier.pop_lane(rid)
+            assert sp is not None and sp.kind == "lane", \
+                "held recurrent lane lost its hold-time spill"
+            self.state = self._lane_write_exe()(
+                self.state,
+                {k: self._put(v, v.dtype) for k, v in sp.leaves.items()},
+                self._put(slot, jnp.int32))
+            self.counters["restores"] += 1
+            self.counters["restored_bytes"] += sp.nbytes
+            s.held = False
+            s.held_since = None
+            self._active_mirror[slot] = True
+            # push the whole mirror NOW: any decode before the push would
+            # freeze-zero the just-written recurrent leaves, and the
+            # fused sampler zeroed the held lane's ``tokens`` entry
+            self._push_sched()
+            self._sched_dirty = False
+        else:
+            s.held = False
+            s.held_since = None
+            self._active_mirror[slot] = True
+            # the fused sampler writes 0 into inactive lanes' ``tokens``
+            # leaf, so the lane's decode input token must be re-pushed
+            # from the host mirror along with the active bit
+            self._sched_dirty = True
+        self.counters["releases"] += 1
+        if self.obs.tracer is not None:
+            self.obs.mark("release", rid, track=self._track, slot=slot)
+
+    def _park(self, slot: int) -> None:
+        """Sweep a long-held lane off HBM: spill (unless its hold-time
+        snapshot already covers it), then preempt — the held routing in
+        :meth:`_preempt` sends the pending to ``self.parked`` rather than
+        the queue.  If the tier refuses the spill the lane parks anyway;
+        :meth:`release` then resumes it via bitwise replay."""
+        s = self.slots[slot]
+        if not self.tier.has_lane(s.rid) and self._lane_spillable(s):
+            self._spill_lane(slot)
+        self._preempt(slot, spill=False)
+
     def free_slots(self) -> list[int]:
         return [i for i, s in enumerate(self.slots) if s is None]
 
     def has_work(self) -> bool:
-        return bool(self.queue) or any(s is not None for s in self.slots)
+        # parked requests count: they are incomplete work, just off-HBM
+        # (drain() callers must release() them or they never finish)
+        return bool(self.queue) or bool(self.parked) \
+            or any(s is not None for s in self.slots)
 
     def _put(self, x, dtype):
         return jax.device_put(jnp.asarray(x, dtype), self._rep)
@@ -637,11 +912,15 @@ class ServeEngine:
         return self.alloc.available - self._deficit >= wc
 
     def _pick_victim(self) -> int | None:
-        """Lowest-priority occupied lane (highest rid = last arrived)."""
+        """Lowest-priority occupied lane: held (idle) lanes first — they
+        aren't decoding, so evicting one costs nothing now — then the
+        highest rid (last arrived)."""
         best = None
         for i, s in enumerate(self.slots):
-            if s is not None and (best is None or
-                                  s.rid > self.slots[best].rid):
+            if s is None:
+                continue
+            if best is None or (s.held, s.rid) > (
+                    self.slots[best].held, self.slots[best].rid):
                 best = i
         return best
 
@@ -702,13 +981,86 @@ class ServeEngine:
             raise ValueError(f"slot {slot} is not serving a request")
         self._preempt(slot)
 
-    def _preempt(self, slot: int) -> None:
+    def _lane_spillable(self, s: _Slot) -> bool:
+        """Whether a lane's decode state can move to the host tier: it
+        must be fully prefilled and mid-decode (mid-prefill lanes hold
+        nothing replay can't rebuild cheaper), and the layout must have a
+        transport (paged blocks, or declared lane leaf axes)."""
+        if self.tier is None or s.generated < 1 or s.prefilled < s.plen:
+            return False
+        return self.paged or bool(self._lane_axes)
+
+    def _capture_spill(self, slot: int) -> LaneSpill:
+        """Copy a lane's decode state off-device into a LaneSpill (does
+        not admit it to the tier — callers do, and fall back to replay
+        when the tier refuses)."""
+        s = self.slots[slot]
+        if self.paged:
+            exe = self._block_read_exe()
+            payloads = []
+            for b in self.tables.blocks(slot):
+                out = exe(self.state, self._put(b, jnp.int32))
+                payloads.append({k: np.asarray(v) for k, v in out.items()})
+            return LaneSpill(s.rid, "paged", s.prefilled, s.generated,
+                             blocks=payloads)
+        out = self._lane_read_exe()(self.state, self._put(slot, jnp.int32))
+        leaves = {k: np.asarray(v) for k, v in out.items()}
+        return LaneSpill(s.rid, "lane", s.prefilled, s.generated,
+                         leaves=leaves)
+
+    def _spill_lane(self, slot: int) -> bool:
+        """Capture + admit a lane spill; counters either way."""
+        sp = self._capture_spill(slot)
+        if self.tier.put_lane(sp):
+            self.counters["spills"] += 1
+            self.counters["spilled_bytes"] += sp.nbytes
+            if self.obs.tracer is not None:
+                self.obs.mark("spill", sp.rid, track=self._track, slot=slot,
+                              kind=sp.kind, nbytes=sp.nbytes)
+            return True
+        self.counters["spill_drops"] += 1
+        return False
+
+    def _spill_block(self, block: int, key: bytes | None) -> None:
+        """``BlockAllocator.on_evict`` hook: an LRU-reclaimed prefix
+        block's KV moves to the host tier before its device block is
+        reused — the cached chain spills instead of dying, and a later
+        admission (or the router's scoring) finds it via
+        ``HostTier.match_chain``.  The read's host fetch blocks until the
+        copy lands, so the block's new owner can't race it."""
+        if key is None:
+            return
+        out = self._block_read_exe()(self.state, self._put(block, jnp.int32))
+        payload = {k: np.asarray(v) for k, v in out.items()}
+        nb = sum(a.nbytes for a in payload.values())
+        if self.tier.put_block(key, payload):
+            self.counters["prefix_spills"] += 1
+            self.counters["spilled_bytes"] += nb
+            if self.obs.tracer is not None:
+                self.obs.instant("prefix_spill", track=self._track,
+                                 nbytes=nb)
+        else:
+            self.counters["spill_drops"] += 1
+
+    def _preempt(self, slot: int, *, spill: bool = True) -> None:
         """Evict a live lane back to the host queue: its emitted tokens
         and sampling state requeue as a resume request, the table row
-        nulls (paged), and every block reference drops.  The resume
-        replays the stream bitwise (see :class:`_Pending`)."""
+        nulls (paged), and every block reference drops.  With a host
+        tier the lane's decode state spills first, so the resume is an
+        O(copy) restore; otherwise (or when the tier refuses, or
+        ``spill=False`` — fault retries recompute rather than restore
+        possibly-poisoned state) the resume replays the stream bitwise
+        (see :class:`_Pending`).  A held lane's pending goes to
+        ``self.parked`` instead of the queue — preempting idle work IS
+        parking it early."""
         s = self.slots[slot]
         comp = self.live[s.rid]
+        if spill and self._lane_spillable(s) \
+                and not (s.held and self.tier.has_lane(s.rid)):
+            # held recurrent lanes spilled at hold() time (the device
+            # copy has been zeroed by the freeze since) — their existing
+            # spill is the truth; everything else captures fresh now
+            self._spill_lane(slot)
         if self.paged:
             # min_free damps re-admission until the pool can cover one
             # block MORE than the lane held — instantly re-admitting the
@@ -721,12 +1073,23 @@ class ServeEngine:
             min_free = min(self.tables.mapped(slot) + 1, wc)
         else:
             min_free = 0        # slotted lanes hold no pool resources
-        # resumes go to the FRONT: rid order (FCFS priority) is preserved
-        # because successive victims within a step have decreasing rids
-        self.queue.appendleft(_Pending(
+        pending = _Pending(
             s.rid, s.prompt, comp.max_new_tokens, s.temperature, s.top_k,
             s.top_p, comp.submit_time, deadline=s.deadline, resume=True,
-            limit=s.limit, replay=tuple(comp.tokens), min_free=min_free))
+            limit=s.limit, replay=tuple(comp.tokens),
+            min_free=0 if s.held else min_free)
+        if s.held:
+            # parked: off the queue until release() — min_free resets
+            # because the pool pressure it damped will be long gone
+            self.parked[s.rid] = pending
+            self.counters["parked"] += 1
+            if self.obs.tracer is not None:
+                self.obs.mark("park", s.rid, track=self._track, slot=slot)
+        else:
+            # resumes go to the FRONT: rid order (FCFS priority) is
+            # preserved because successive victims within a step have
+            # decreasing rids
+            self.queue.appendleft(pending)
         self.slots[slot] = None
         self._active_mirror[slot] = False
         self._active_dirty = True
@@ -741,10 +1104,11 @@ class ServeEngine:
                 self.alloc.free(b)
             self._tables_dirty = True
         self._last_op = "preempt"
-        self.counters["preemptions"] += 1
-        if self.obs.tracer is not None:
-            self.obs.mark("preempt", s.rid, track=self._track, slot=slot,
-                          emitted=len(comp.tokens))
+        if not s.held:
+            self.counters["preemptions"] += 1
+            if self.obs.tracer is not None:
+                self.obs.mark("preempt", s.rid, track=self._track, slot=slot,
+                              emitted=len(comp.tokens))
 
     def _push_tables(self) -> None:
         """Re-push the host block-table mirror as the device state leaf.
@@ -806,18 +1170,141 @@ class ServeEngine:
             self.state["active"] = self._put(self._active_mirror, jnp.bool_)
         self._active_dirty = False
 
+    def _promote_host_chain(self, keys: list[bytes], have: int) -> int:
+        """Extend a device chain match by promoting host-tier prefix
+        blocks back into the device index: allocate a free block, write
+        the payload, publish it under its chain key, and park it cached
+        — after which the ordinary lookup/share/COW machinery treats it
+        like any cached chain.  Promotion only consumes the free list; it
+        never evicts device-cached blocks to make room (the two tiers
+        would thrash each other).  Returns the number promoted."""
+        if self.tier is None:
+            return 0
+        n = 0
+        wexe = None
+        for key in keys[have:]:
+            if not self.tier.has_block(key) or self.alloc.num_free == 0:
+                break
+            payload = self.tier.pop_block(key)
+            b = self.alloc.alloc()      # free list non-empty: no eviction
+            if wexe is None:
+                wexe = self._block_write_exe()
+            self.state = wexe(
+                self.state,
+                {k: self._put(v, v.dtype) for k, v in payload.items()},
+                self._put(b, jnp.int32))
+            self.alloc.publish(b, key)
+            self.alloc.free(b)          # parks in the cached set, indexed
+            nb = sum(a.nbytes for a in payload.values())
+            self.counters["host_prefix_hits"] += 1
+            self.counters["restored_bytes"] += nb
+            n += 1
+        if n and self.obs.tracer is not None:
+            self.obs.instant("host_promote", track=self._track, blocks=n)
+        return n
+
+    def _chain_lookup(self, keys: list[bytes]) -> list[int]:
+        """Device chain lookup, extended through the host tier: when the
+        device match ends but the tier holds the next chain blocks,
+        promote them and re-match — one admission-time lookup either
+        way (the counter-free ``indexed`` probe sizes the device match
+        first so hit/miss stats count once per admission)."""
+        if self.tier is not None:
+            have = 0
+            for k in keys:
+                if not self.alloc.indexed(k):
+                    break
+                have += 1
+            if have < len(keys):
+                self._promote_host_chain(keys, have)
+        return self.alloc.lookup(keys)
+
+    def _try_tier_restore(self, slot: int, req: _Pending) -> bool:
+        """Resume fastest path: the host tier holds the lane's spilled
+        decode state — copy it back and continue mid-decode.  No
+        prefill, no replay for the covered tokens, O(bytes copied), and
+        bitwise identical continuation (the payload IS the evicted
+        state).  A stale spill (older than the replay record — e.g. the
+        restore after it was refused for pool room) restores as a
+        partial resume: the tokens past its coverage replay-force
+        through decode exactly like ``_try_restore``'s partial match."""
+        sp = self.tier.peek_lane(req.rid) if self.tier is not None else None
+        if sp is None:
+            return False
+        s = self.slots[slot]
+        plen = int(req.prompt.size)
+        k_cov = sp.generated
+        if sp.prefilled != plen or not (1 <= k_cov <= len(req.replay)) \
+                or sp.kind != ("paged" if self.paged else "lane"):
+            # a different prompt under a recycled rid, or a layout
+            # mismatch: the spill is garbage for this resume
+            self.tier.drop_lane(req.rid)
+            return False
+        if sp.kind == "paged":
+            if self.alloc.available < len(sp.blocks):
+                return False    # leave the spill; this resume replays
+            wexe = self._block_write_exe()
+            for payload in sp.blocks:
+                b = self._alloc_block(slot)
+                if b is None:
+                    # an injected alloc fault preempted the lane itself;
+                    # its partial table was released by the preempt and
+                    # _admit's slot guard abandons the admission
+                    return False
+                self.state = wexe(
+                    self.state,
+                    {k: self._put(v, v.dtype) for k, v in payload.items()},
+                    self._put(b, jnp.int32))
+                self.tables.append(slot, b)
+                if self.econ.admission == "deficit":
+                    self._deficit -= 1
+                self._tables_dirty = True
+            # fresh private blocks: publication state restarts (the
+            # chain keys may still be indexed by the original blocks, in
+            # which case publish() dedups against them)
+            s.pub_upto = 0
+            s.hasher = None
+            s.hashed = 0
+        else:
+            self.state = self._lane_write_exe()(
+                self.state,
+                {k: self._put(v, v.dtype) for k, v in sp.leaves.items()},
+                self._put(slot, jnp.int32))
+        self.tier.pop_lane(req.rid)
+        seq = np.concatenate([req.prompt, np.asarray(req.replay, np.int32)])
+        s.prefilled = plen
+        s.generated = k_cov          # next decode input is seq[plen+k_cov-1]
+        self._tok_mirror[slot] = int(seq[plen + k_cov - 1])
+        self._active_mirror[slot] = True
+        self.counters["restores"] += 1
+        self.counters["restored_bytes"] += sp.nbytes
+        if sp.kind == "lane" and self.rec:
+            # recurrent leaves just restored: the device must see the
+            # lane active BEFORE any later executable this step, or the
+            # prefill freeze zeroes them again
+            self._push_sched()
+            self._sched_dirty = False
+        else:
+            self._sched_dirty = True
+        if self.obs.tracer is not None:
+            self.obs.mark("restore", req.rid, track=self._track, slot=slot,
+                          source="host_tier", kind=sp.kind, nbytes=sp.nbytes)
+        return True
+
     def _try_restore(self, slot: int, req: _Pending) -> bool:
         """Resume fast path: if the prefix cache still holds a block chain
         covering the whole prompt (typically the lane's own published
         blocks), share it and restore the lane MID-DECODE — no prefill, no
         replay, and bitwise-original KV for every covered position.  The
-        device sees the restored lane through a scheduling-vector push."""
+        device sees the restored lane through a scheduling-vector push.
+        Chains truncated by LRU reclaim re-extend from the host tier
+        (:meth:`_promote_host_chain`)."""
         k = len(req.replay)
         plen = int(req.prompt.size)
         bs = self.econ.page_size
         seq = np.concatenate([req.prompt, np.asarray(req.replay, np.int32)])
         written = seq[: plen + k - 1]        # positions whose KV existed
-        chain = self.alloc.lookup(prefix_keys(written, bs))
+        chain = self._chain_lookup(prefix_keys(written, bs))
         matched = len(chain) * bs
         if matched < plen:
             # prefill + decode-replay path; _match_prefix counts this
@@ -849,7 +1336,7 @@ class ServeEngine:
         bs = self.econ.page_size
         plen = int(prompt.size)
         self.counters["prefix_lookup_tokens"] += plen
-        chain = self.alloc.lookup(prefix_keys(prompt, bs))
+        chain = self._chain_lookup(prefix_keys(prompt, bs))
         if not chain:
             return 0
         # cap the match at plen - 1: the last prompt position is always
@@ -900,11 +1387,20 @@ class ServeEngine:
             req.rid, plen, limit, req.temperature, req.top_k, req.top_p,
             req.prompt, 0, emit_from=len(req.replay), deadline=req.deadline,
         )
+        if self.paged and self.econ.admission == "deficit":
+            wc = blocks_for(limit, self.econ.page_size)
+            self._slot_wc[slot] = wc
+            self._deficit += wc
+        # resume restore ladder: host-tier lane spill first (full O(copy)
+        # coverage of everything the lane had written when evicted), then
+        # the device/host prefix chains, then prefill + decode replay
+        if req.resume and req.replay and self.tier is not None \
+                and self.tier.has_lane(req.rid):
+            if self._try_tier_restore(slot, req):
+                return
+            if self.slots[slot] is None:
+                return      # the lane faulted/preempted itself mid-restore
         if self.paged:
-            if self.econ.admission == "deficit":
-                wc = blocks_for(limit, self.econ.page_size)
-                self._slot_wc[slot] = wc
-                self._deficit += wc
             if self.econ.prefix_cache:
                 if req.resume and req.replay and self._try_restore(slot, req):
                     # restored mid-decode: nothing to prefill
@@ -967,7 +1463,12 @@ class ServeEngine:
             while s.hashed <= j:
                 s.hasher.update(block_tokens(s.hashed))
                 s.hashed += 1
-            self.alloc.publish(blocks[j], s.hasher.digest())
+            digest = s.hasher.digest()
+            self.alloc.publish(blocks[j], digest)
+            if self.tier is not None and self.alloc.indexed(digest):
+                # the chain key is device-indexed again: drop any host
+                # copy so every key has exactly one owner (check_tiered)
+                self.tier.discard_block(digest)
         s.pub_upto = full
 
     def _prefill_next_chunk(self, slot: int) -> None:
@@ -1129,6 +1630,8 @@ class ServeEngine:
             for b in self.tables.release(slot):
                 self.alloc.free(b)
             self._tables_dirty = True
+        if self.tier is not None:
+            self.tier.drop_lane(s.rid)
         self.counters["evicted"] += 1
         self.counters[f"status_{status}"] += 1
         self._observe_terminal(comp)
@@ -1150,6 +1653,8 @@ class ServeEngine:
         comp.status = status
         comp.error = error
         self.completions[req.rid] = comp
+        if self.tier is not None:
+            self.tier.drop_lane(req.rid)
         self.counters[f"status_{status}"] += 1
         self._observe_terminal(comp)
 
@@ -1172,7 +1677,12 @@ class ServeEngine:
         if comp.retries > self.econ.max_retries:
             self._terminate(slot, "failed", error=reason)
         else:
-            self._preempt(slot)
+            # spill=False, and any earlier spill drops: a faulted lane's
+            # state is suspect — the retry recomputes via prefill+replay
+            # instead of restoring a possibly-poisoned copy O(fast)
+            if self.tier is not None:
+                self.tier.drop_lane(s.rid)
+            self._preempt(slot, spill=False)
 
     def _expire_deadlines(self) -> None:
         """Terminate every queued or live request whose deadline passed.
@@ -1186,6 +1696,9 @@ class ServeEngine:
             self.queue = deque(r for r in self.queue if r.rid not in dead)
             for req in expired:
                 self._terminate_queued(req, "timeout")
+        for rid in [r for r, req in self.parked.items()
+                    if req.deadline is not None and now >= req.deadline]:
+            self._terminate_queued(self.parked.pop(rid), "timeout")
         for slot, s in enumerate(self.slots):
             if s is not None and s.deadline is not None \
                     and now >= s.deadline:
@@ -1218,18 +1731,19 @@ class ServeEngine:
         is O(1) in sequence length — so usage is occupancy-proportional
         (the hybrid KV segment is folded into that per-lane constant)."""
         if self.paged:
-            used = self.alloc.peak_in_use * (
-                self.kv_reserved_bytes // self._num_blocks)
+            used = _exact_share(self.kv_reserved_bytes,
+                                self.alloc.peak_in_use, self._num_blocks)
         elif self.kind == "kv":
-            per_tok = self.kv_reserved_bytes // (
-                self.econ.max_slots * self.econ.max_len)
-            used = per_tok * sum(
+            ntok = sum(
                 s.prefilled + max(0, s.generated - 1) + (i in decoding)
                 for i, s in enumerate(self.slots) if s is not None
             )
+            used = _exact_share(self.kv_reserved_bytes, ntok,
+                                self.econ.max_slots * self.econ.max_len)
         else:
-            per_lane = self.kv_reserved_bytes // self.econ.max_slots
-            used = per_lane * sum(s is not None for s in self.slots)
+            used = _exact_share(self.kv_reserved_bytes,
+                                sum(s is not None for s in self.slots),
+                                self.econ.max_slots)
         self._kv_gauge.set_max(used)
 
     # ------------------------------------------------------------------
@@ -1243,6 +1757,13 @@ class ServeEngine:
         progressed = False
         if self._has_deadlines:
             self._expire_deadlines()
+        if self.tier is not None and self.econ.park_idle_s is not None:
+            now = self.clock()
+            for slot, s in enumerate(self.slots):
+                if s is not None and s.held and s.held_since is not None \
+                        and now - s.held_since >= self.econ.park_idle_s:
+                    self._park(slot)
+                    progressed = True
         for slot in range(self.econ.max_slots):
             s = self.slots[slot]
             if s is not None and s.prefilled < s.plen:
@@ -1268,7 +1789,7 @@ class ServeEngine:
         def active():
             return [
                 i for i, s in enumerate(self.slots)
-                if s is not None and s.prefilled >= s.plen
+                if s is not None and s.prefilled >= s.plen and not s.held
             ]
 
         active_slots = active()
@@ -1483,6 +2004,11 @@ class ServeEngine:
                 s.top_k, s.top_p, comp.submit_time, deadline=s.deadline,
                 resume=True, limit=s.limit, replay=tuple(comp.tokens))))
         pend.extend(self._snap_pending(req) for req in self.queue)
+        # parked requests resume DECODING after a restart: hold is
+        # scheduling state, not durable truth — the restarted engine
+        # requeues them like any preempted resume
+        pend.extend(self._snap_pending(self.parked[r])
+                    for r in sorted(self.parked))
         return {
             "format": self._SNAP_FORMAT,
             "arch": self.cfg.name,
@@ -1562,6 +2088,21 @@ class ServeEngine:
             if s is not None and s.rid == rid:
                 self._preempt(slot)     # now front-of-queue, resume=True
                 break
+        if rid in self.parked:
+            # pre-parked, or a held lane the preempt above just parked —
+            # either way it migrates like any resume.  Its host-tier
+            # spill stays behind: with a router-shared tier the importer
+            # restores O(copy); otherwise the resume replays.
+            req = self.parked.pop(rid)
+            comp = self.live.pop(rid, None)
+            self.counters["exported"] += 1
+            if self.obs.tracer is not None:
+                self.obs.mark("export", rid, track=self._track, resume=True)
+            return {
+                "pending": self._snap_pending(req),
+                "completion":
+                    None if comp is None else self._snap_completion(comp),
+            }
         for idx, req in enumerate(self.queue):
             if req.rid == rid:
                 del self.queue[idx]
@@ -1590,6 +2131,7 @@ class ServeEngine:
         req = snap["pending"]
         rid = int(req["rid"])
         if (rid in self.live or rid in self.completions
+                or rid in self.parked
                 or any(r.rid == rid for r in self.queue)):
             raise ValueError(f"rid {rid} already known to this engine")
         resume = bool(req["resume"])
@@ -1686,9 +2228,14 @@ class ServeEngine:
             == len(self.completions), "status counters != completions"
         inflight = sorted(
             [s.rid for s in self.slots if s is not None]
-            + [r.rid for r in self.queue if r.resume])
+            + [r.rid for r in self.queue if r.resume]
+            + list(self.parked))
         assert inflight == sorted(self.live), (
-            f"live rids {sorted(self.live)} != lane/resume rids {inflight}")
+            f"live rids {sorted(self.live)} != lane/resume/parked rids "
+            f"{inflight}")
+        for rid, req in self.parked.items():
+            assert req.resume and req.rid == rid, (
+                f"parked rid {rid} is not a resume pending")
         for slot, q in enumerate(self._quarantine):
             assert 0 <= q <= 1, f"slot {slot}: quarantine {q} out of range"
         if self.rec and self.econ.fused_sampling \
@@ -1697,8 +2244,13 @@ class ServeEngine:
             assert self.rec.lanes_are_zero(self.state["cache"], free), (
                 f"an evicted lane in {free} holds non-zero recurrent state")
         if not self.paged:
+            if self.tier is not None:
+                self.tier.check()
             return
-        self.alloc.check()
+        if self.tier is not None:
+            check_tiered(self.alloc, self.tier)
+        else:
+            self.alloc.check()
         shared = self.econ.prefix_cache
         self.tables.check(refcount=self.alloc.refcount if shared else None)
         bs = self.econ.page_size
@@ -1735,6 +2287,18 @@ class ServeEngine:
             looked = self.counters["prefix_lookup_tokens"]
             out["prefix_hit_rate"] = (
                 self.counters["prefix_hit_tokens"] / looked if looked else 0.0)
+        if self.tier is not None:
+            out["host_tier"] = {
+                "spilled_lanes": self.tier.spilled_lanes,
+                "spilled_blocks": self.tier.spilled_blocks,
+                "used_bytes": self.tier.used_bytes,
+                "capacity_blocks": self.tier.capacity_blocks,
+                "lane_spills": self.tier.lane_spills,
+                "lane_restores": self.tier.lane_restores,
+                "prefix_spills": self.tier.prefix_spills,
+                "prefix_hits": self.tier.prefix_hits,
+                "drops": self.tier.drops,
+            }
         if self.faults is not None:
             out["faults"] = self.faults.stats()
         return out

@@ -132,6 +132,12 @@ class BlockAllocator:
         self.hits = 0          # lookup chains that matched at least a block
         self.misses = 0
         self.cache_evictions = 0
+        # optional hook fired as ``on_evict(block, key)`` when an LRU
+        # *cached* block is reclaimed for reuse — before the index entry
+        # is dropped and before the new owner writes, so the host tier
+        # can still read the block's KV off-device (second-level prefix
+        # cache: reclaimed chains spill instead of dying)
+        self.on_evict = None
 
     @property
     def capacity(self) -> int:
@@ -171,6 +177,8 @@ class BlockAllocator:
             b = self._free.pop(0)
         elif self._cached:
             b, _ = self._cached.popitem(last=False)   # evict LRU cached
+            if self.on_evict is not None:
+                self.on_evict(b, self._block_key.get(b))
             self._forget(b)
             self.cache_evictions += 1
         else:
@@ -220,6 +228,11 @@ class BlockAllocator:
         self._index[key] = block
         self._block_key[block] = key
         return True
+
+    def indexed(self, key: bytes) -> bool:
+        """Whether a chain key is device-indexed (no hit/miss counting —
+        the host tier probes this to decide what to promote)."""
+        return key in self._index
 
     def lookup(self, keys: list[bytes]) -> list[int]:
         """Longest indexed chain prefix of ``keys`` (no refs taken —
@@ -319,6 +332,263 @@ class SlotTables:
             for b, n in counts.items():
                 assert refcount(b) >= n, (
                     f"block {b} mapped {n}x but refcount {refcount(b)}")
+
+
+# ---------------------------------------------------------------------------
+# Host-RAM tier
+# ---------------------------------------------------------------------------
+
+
+class LaneSpill:
+    """One preempted/parked lane's decode state, resident in host RAM.
+
+    ``kind`` selects the payload shape:
+
+    * ``"paged"`` — ``blocks`` is one ``{leaf: ndarray}`` per mapped
+      block, in logical order (the lane's KV, block by block);
+    * ``"lane"``  — ``leaves`` is one ``{leaf: ndarray}`` lane snapshot
+      (slotted KV segment and/or recurrent leaves, per
+      ``registry.lane_leaf_axes``).
+
+    ``prefilled``/``generated`` pin the schedule position the payload
+    corresponds to: restoring writes the payload back and resumes decode
+    at ``prompt[plen + generated - 1]`` — the exact input the lane would
+    have fed next — so continuation is bitwise identical to never having
+    been evicted.
+    """
+
+    __slots__ = ("rid", "kind", "prefilled", "generated", "blocks",
+                 "leaves", "nbytes")
+
+    def __init__(self, rid: int, kind: str, prefilled: int, generated: int,
+                 blocks: list | None = None, leaves: dict | None = None):
+        self.rid = rid
+        self.kind = kind
+        self.prefilled = prefilled
+        self.generated = generated
+        self.blocks = blocks or []
+        self.leaves = leaves
+        self.nbytes = sum(
+            a.nbytes for tree in (self.blocks + [self.leaves or {}])
+            for a in tree.values())
+
+
+class HostTier:
+    """Second-level store for KV/decode state in host RAM.
+
+    Two payload families share one bounded pool:
+
+    * **lane spills** (:class:`LaneSpill`, keyed by request id) — a
+      preempted or parked lane's whole decode state, restored O(copy) at
+      resume instead of O(generated-tokens) decode replay;
+    * **prefix blocks** (keyed by the same sha256 chain keys as
+      :class:`BlockAllocator`'s index) — LRU-reclaimed prefix-cache
+      blocks spill here instead of dying, making the tier a second-level
+      prefix cache consulted by admission and the router's cache-aware
+      scoring.
+
+    Capacity is counted in **block-sized units** (``capacity_blocks``;
+    ``None`` = unbounded): each paged payload block is one unit, and
+    prefix blocks are the only evictable residents (lane spills pin their
+    units until restored or dropped — they back an in-flight request).
+    Whole-lane snapshots (``kind == "lane"``) are O(1) per lane and
+    outside the block budget; they are bounded by the fleet's lane count,
+    not by traffic.
+
+    One tier may be shared by every replica behind a router: request ids
+    are fleet-unique and payloads are plain host arrays, so a crashed
+    replica's spills survive it and failover restores them O(copy) on the
+    survivor.
+
+    Conservation: with a bounded tier attached to an allocator, the
+    three-state device lifecycle grows a fourth, *spilled*, state and
+    :func:`check_tiered` sweeps ``free + live + cached + spilled ==
+    capacity`` across both pools.
+    """
+
+    def __init__(self, capacity_blocks: int | None = None):
+        if capacity_blocks is not None and capacity_blocks < 0:
+            raise ValueError(f"capacity_blocks must be >= 0, got "
+                             f"{capacity_blocks}")
+        self.capacity_blocks = capacity_blocks
+        self._lanes: dict[int, LaneSpill] = {}
+        self._prefix: OrderedDict[bytes, dict] = OrderedDict()  # LRU
+        self._bytes = 0
+        # monotone counters (the engine folds these into its MetricMap)
+        self.lane_spills = 0
+        self.lane_restores = 0
+        self.prefix_spills = 0
+        self.prefix_hits = 0
+        self.drops = 0          # payloads rejected or LRU-dropped for room
+        self.spilled_bytes = 0
+        self.restored_bytes = 0
+
+    # -- accounting -----------------------------------------------------
+    @property
+    def spilled_blocks(self) -> int:
+        """Block-sized units resident (prefix blocks + paged lane blocks)."""
+        return len(self._prefix) + sum(
+            len(sp.blocks) for sp in self._lanes.values())
+
+    @property
+    def spilled_lanes(self) -> int:
+        return len(self._lanes)
+
+    @property
+    def host_free(self) -> int | None:
+        """Remaining block units (None when unbounded)."""
+        if self.capacity_blocks is None:
+            return None
+        return self.capacity_blocks - self.spilled_blocks
+
+    @property
+    def used_bytes(self) -> int:
+        return self._bytes
+
+    @staticmethod
+    def _tree_bytes(sp_or_payload) -> int:
+        if isinstance(sp_or_payload, LaneSpill):
+            return sp_or_payload.nbytes
+        return sum(a.nbytes for a in sp_or_payload.values())
+
+    def _make_room(self, units: int) -> bool:
+        """Free ``units`` block units by LRU-dropping prefix blocks.
+        Lane spills are never evicted (they back in-flight requests)."""
+        if self.capacity_blocks is None:
+            return True
+        while self.capacity_blocks - self.spilled_blocks < units and self._prefix:
+            _, payload = self._prefix.popitem(last=False)
+            self._bytes -= self._tree_bytes(payload)
+            self.drops += 1
+        return self.capacity_blocks - self.spilled_blocks >= units
+
+    # -- lane spills ----------------------------------------------------
+    def put_lane(self, sp: LaneSpill) -> bool:
+        """Admit a lane spill; False if the tier can't make room (the
+        caller falls back to decode replay)."""
+        old = self._lanes.pop(sp.rid, None)
+        if old is not None:
+            self._bytes -= old.nbytes
+        if not self._make_room(len(sp.blocks)):
+            self.drops += 1
+            return False
+        self._lanes[sp.rid] = sp
+        self._bytes += sp.nbytes
+        self.lane_spills += 1
+        self.spilled_bytes += sp.nbytes
+        return True
+
+    def has_lane(self, rid: int) -> bool:
+        return rid in self._lanes
+
+    def peek_lane(self, rid: int) -> LaneSpill | None:
+        return self._lanes.get(rid)
+
+    def pop_lane(self, rid: int) -> LaneSpill | None:
+        """Remove and return a lane spill (restore commit)."""
+        sp = self._lanes.pop(rid, None)
+        if sp is not None:
+            self._bytes -= sp.nbytes
+            self.lane_restores += 1
+            self.restored_bytes += sp.nbytes
+        return sp
+
+    def drop_lane(self, rid: int) -> None:
+        """Discard a lane spill without restoring (terminal request)."""
+        sp = self._lanes.pop(rid, None)
+        if sp is not None:
+            self._bytes -= sp.nbytes
+
+    # -- prefix blocks --------------------------------------------------
+    def put_block(self, key: bytes, payload: dict) -> bool:
+        """Admit one reclaimed prefix block under its chain ``key``."""
+        if key in self._prefix:
+            self._prefix.move_to_end(key)             # already resident
+            return True
+        if not self._make_room(1):
+            self.drops += 1
+            return False
+        self._prefix[key] = payload
+        self._bytes += self._tree_bytes(payload)
+        self.prefix_spills += 1
+        self.spilled_bytes += self._tree_bytes(payload)
+        return True
+
+    def has_block(self, key: bytes) -> bool:
+        return key in self._prefix
+
+    def match_chain(self, keys: list[bytes], start: int = 0) -> int:
+        """How many consecutive chain keys from ``keys[start:]`` are
+        host-resident — the tier's extension of a device chain match
+        (admission restore depth, router cache-aware score)."""
+        n = 0
+        for k in keys[start:]:
+            if k not in self._prefix:
+                break
+            n += 1
+        return n
+
+    def pop_block(self, key: bytes) -> dict | None:
+        """Remove and return a prefix block (restored to the device and
+        re-published there — move semantics keep one owner per chain)."""
+        payload = self._prefix.pop(key, None)
+        if payload is not None:
+            self._bytes -= self._tree_bytes(payload)
+            self.prefix_hits += 1
+            self.restored_bytes += self._tree_bytes(payload)
+        return payload
+
+    def discard_block(self, key: bytes) -> None:
+        """Drop a host copy without restoring — called when the same
+        chain key gets (re)published on device, so each key has exactly
+        one owner (device index XOR host tier)."""
+        payload = self._prefix.pop(key, None)
+        if payload is not None:
+            self._bytes -= self._tree_bytes(payload)
+
+    def check(self) -> None:
+        """Invariant sweep: byte tally matches the payloads, and a
+        bounded tier never exceeds its block budget."""
+        nb = sum(sp.nbytes for sp in self._lanes.values()) + sum(
+            self._tree_bytes(p) for p in self._prefix.values())
+        assert nb == self._bytes, f"tier byte tally {self._bytes} != {nb}"
+        for rid, sp in self._lanes.items():
+            assert sp.rid == rid and sp.kind in ("paged", "lane")
+            assert (sp.kind == "paged") == (sp.leaves is None)
+        if self.capacity_blocks is not None:
+            assert self.spilled_blocks <= self.capacity_blocks, (
+                f"tier over budget: {self.spilled_blocks} block units > "
+                f"{self.capacity_blocks}")
+
+
+def check_tiered(alloc: BlockAllocator, tier: HostTier | None) -> None:
+    """Four-state conservation across the HBM pool and the host tier.
+
+    Each pool keeps its own partition (``free + live + cached ==
+    capacity`` on device, ``spilled + host_free == capacity_blocks`` on
+    a bounded tier), and the cross-pool ownership invariant says every
+    chain key has exactly one owner: a key is indexed on device **xor**
+    resident in the host tier (spill moves it out, promotion moves it
+    back, a republish discards the host copy).  Together:
+    ``free + live + cached + spilled == capacity`` over the combined
+    pool with no block counted twice.
+    """
+    alloc.check()
+    if tier is None:
+        return
+    tier.check()
+    both = set(alloc._index) & set(tier._prefix)
+    assert not both, (
+        f"{len(both)} chain keys owned by device index AND host tier")
+    if tier.capacity_blocks is None:
+        return
+    total = alloc.num_free + alloc.in_use + alloc.num_cached \
+        + tier.spilled_blocks + tier.host_free
+    assert total == alloc.capacity + tier.capacity_blocks, (
+        f"tiered conservation broken: free {alloc.num_free} + live "
+        f"{alloc.in_use} + cached {alloc.num_cached} + spilled "
+        f"{tier.spilled_blocks} + host_free {tier.host_free} != "
+        f"{alloc.capacity + tier.capacity_blocks}")
 
 
 # ---------------------------------------------------------------------------

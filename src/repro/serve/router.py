@@ -62,7 +62,7 @@ from ..core.aot import AotCache
 from ..obs import MetricMap, Observer
 from .engine import STATUSES, Completion, EngineConfig, ServeEngine
 from .faults import FaultPlan
-from .paged import prefix_keys
+from .paged import HostTier, prefix_keys
 
 
 @dataclasses.dataclass(frozen=True)
@@ -110,6 +110,10 @@ class _Record:
     limit: int
     replica: int | None = None     # current placement (None = router queue)
     dispatch_time: float = 0.0
+    # fleet build count at dispatch: if it advanced by collection time,
+    # the service interval absorbed a compile and must not feed the
+    # shed-policy EWMA (see _collect)
+    dispatch_builds: int = 0
     failovers: int = 0
     tokens: list = dataclasses.field(default_factory=list)
     token_times: list = dataclasses.field(default_factory=list)
@@ -182,6 +186,13 @@ class Router:
         self._track = self.obs.name
         # NOT ``aot or ...``: AotCache defines __len__ (see ServeEngine)
         self.aot = aot if aot is not None else AotCache("router", obs=self.obs)
+        # one host tier for the FLEET: request ids are router-unique and
+        # payloads are host arrays, so a crashed replica's lane spills
+        # survive it — failover on a survivor restores O(copy) instead
+        # of replaying the stream — and any replica can serve another's
+        # spilled prefix chains
+        self.tier = HostTier(engine.host_tier_blocks) \
+            if engine.host_tier else None
         self.replicas: list[ReplicaHandle] = []
         dev_params = params
         for i in range(router.replicas):
@@ -189,7 +200,8 @@ class Router:
                 cfg, mesh, rules, dev_params, engine, aot=self.aot,
                 clock=clock,
                 faults=engine_faults[i] if engine_faults else None,
-                obs=self.obs.child(f"replica{i}"))
+                obs=self.obs.child(f"replica{i}"),
+                host_tier=self.tier)
             dev_params = eng.params     # share the placed copy fleet-wide
             self.replicas.append(ReplicaHandle(i, eng))
         self.queue: deque[_Record] = deque()
@@ -486,6 +498,12 @@ class Router:
         if self.econ.prefix_cache:
             keys = prefix_keys(rec.prompt, self.econ.page_size)
             scores = [len(h.engine.alloc.lookup(keys)) for h in accepting]
+            if self.tier is not None:
+                # the host tier extends every replica's device chain: a
+                # replica whose device match continues in host RAM pays
+                # only an O(copy) promotion for those blocks, not prefill
+                scores = [sc + self.tier.match_chain(keys, start=sc)
+                          for sc in scores]
             best = max(scores)
             if best > 0:
                 self.counters["cache_routed"] += 1
@@ -495,6 +513,7 @@ class Router:
     def _place(self, rec: _Record, h: ReplicaHandle) -> None:
         rec.replica = h.idx
         rec.dispatch_time = self.clock()
+        rec.dispatch_builds = self.aot.stats["builds"]
         self.placements[rec.rid] = h.idx
         resume = bool(rec.tokens) or rec.failovers > 0
         pending = {
@@ -541,7 +560,13 @@ class Router:
             comp = h.engine.completions[rec.rid]
             self.completions[rec.rid] = comp
             self.counters[f"status_{comp.status}"] += 1
-            if comp.status == "ok":
+            if comp.status == "ok" \
+                    and self.aot.stats["builds"] == rec.dispatch_builds:
+                # compile-clean samples only: a service interval that
+                # absorbed an executable build (cold start, new bucket)
+                # would seed the EWMA orders of magnitude high and make
+                # the deadline shed reject every tight-but-feasible
+                # request on an otherwise idle fleet
                 service = comp.finish_time - rec.dispatch_time
                 self._ewma_service = service if self._ewma_service is None \
                     else 0.5 * self._ewma_service + 0.5 * service
@@ -632,6 +657,11 @@ class Router:
         for h in self.replicas:
             if h.state != "dead":
                 h.engine.check_invariants()
+        if self.tier is not None:
+            # the shared tier is checked per-replica against each
+            # allocator; this sweeps it once more in case every replica
+            # is dead (the spills must still be internally consistent)
+            self.tier.check()
 
     @property
     def stats(self) -> dict:
@@ -645,6 +675,17 @@ class Router:
             **self.aot.stats,
             "executables": len(self.aot),
         }
+        if self.tier is not None:
+            out["host_tier"] = {
+                "spilled_lanes": self.tier.spilled_lanes,
+                "spilled_blocks": self.tier.spilled_blocks,
+                "used_bytes": self.tier.used_bytes,
+                "lane_spills": self.tier.lane_spills,
+                "lane_restores": self.tier.lane_restores,
+                "prefix_spills": self.tier.prefix_spills,
+                "prefix_hits": self.tier.prefix_hits,
+                "drops": self.tier.drops,
+            }
         if self.faults is not None:
             out["faults"] = self.faults.stats()
         return out

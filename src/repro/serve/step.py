@@ -417,3 +417,97 @@ def paged_prefill_program(cfg: ArchConfig, mesh: Mesh, rules: ShardRules, *,
         return new_state, tok
 
     return fn
+
+
+# ---------------------------------------------------------------------------
+# Host-tier spill/restore transport
+# ---------------------------------------------------------------------------
+#
+# Four fixed-shape programs move lane state between the device cache and
+# the host tier.  Shapes are independent of WHICH block/lane moves (the
+# index is a traced scalar), so one AOT executable each serves every
+# spill and every restore — the transport is builds-flat like the decode
+# path, and the steady_builds_delta gates cover tiered modes too.
+
+
+def paged_block_read_program(cfg: ArchConfig, mesh: Mesh, rules: ShardRules):
+    """Read one physical block out of every paged-cache leaf.
+
+    ``fn(state, block) -> {leaf: (bs, Hk, dh)-ish}`` — the replicated
+    outputs are fetched to host (``np.asarray``) and become one
+    :class:`~repro.serve.paged.LaneSpill` payload block (or a spilled
+    prefix block).  Leaves are (L[,2], NB, bs, Hk, dh); the block axis is
+    ``ndim - 4`` (see :func:`repro.models.lm.copy_paged_block`).
+    """
+
+    def fn(state, block):
+        def rd(c):
+            return jax.lax.dynamic_index_in_dim(
+                c, block, c.ndim - 4, keepdims=False)
+
+        return {name: rd(c) for name, c in state["cache"].items()}
+
+    return fn
+
+
+def paged_block_write_program(cfg: ArchConfig, mesh: Mesh, rules: ShardRules):
+    """Write one physical block of every paged-cache leaf from host
+    payloads — the restore half of :func:`paged_block_read_program`.
+
+    ``fn(state, payload, block) -> state'`` with ``payload`` the
+    ``{leaf: block}`` tree a spill captured.
+    """
+
+    def fn(state, payload, block):
+        def wr(c, row):
+            return jax.lax.dynamic_update_index_in_dim(
+                c, row.astype(c.dtype), block, c.ndim - 4)
+
+        cache = {
+            name: wr(c, payload[name]) for name, c in state["cache"].items()
+        }
+        return {**state, "cache": cache}
+
+    return fn
+
+
+def lane_read_program(cfg: ArchConfig, mesh: Mesh, rules: ShardRules, *,
+                      axes: dict):
+    """Read one lane's slice of every slot-cache leaf in ``axes``
+    (``registry.lane_leaf_axes``: slotted KV segments and/or recurrent
+    leaves — whatever the family says a lane owns).
+
+    ``fn(state, slot) -> {leaf: lane slice}``; outputs are fetched to a
+    ``kind == "lane"`` :class:`~repro.serve.paged.LaneSpill`.
+    """
+
+    def fn(state, slot):
+        return {
+            name: jax.lax.dynamic_index_in_dim(
+                state["cache"][name], slot, axes[name], keepdims=False)
+            for name in axes
+        }
+
+    return fn
+
+
+def lane_write_program(cfg: ArchConfig, mesh: Mesh, rules: ShardRules, *,
+                       axes: dict):
+    """Write one lane's slice of every slot-cache leaf from host payloads
+    — the restore half of :func:`lane_read_program`.
+
+    ``fn(state, payload, slot) -> state'``.  For recurrent leaves this
+    must be pushed *with the lane already marked active on device*: the
+    prefill program's freeze zeroes inactive lanes, so the engine pushes
+    schedule state immediately after a recurrent lane restore.
+    """
+
+    def fn(state, payload, slot):
+        cache = dict(state["cache"])
+        for name, axis in axes.items():
+            c = cache[name]
+            cache[name] = jax.lax.dynamic_update_index_in_dim(
+                c, payload[name].astype(c.dtype), slot, axis)
+        return {**state, "cache": cache}
+
+    return fn

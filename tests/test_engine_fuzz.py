@@ -65,6 +65,18 @@ MODES = {
         max_slots=MAX_SLOTS, max_len=MAX_LEN, kv_layout="paged",
         page_size=BS, num_blocks=6, prefill_chunk=BS, prefix_cache=True,
         admission="preempt"),
+    # host-RAM tier: preempted lanes spill and resume O(copy) instead of
+    # replaying — THE gate for the tier being behavior-invisible
+    "tiered": EngineConfig(
+        max_slots=MAX_SLOTS, max_len=MAX_LEN, kv_layout="paged",
+        page_size=BS, num_blocks=6, admission="preempt", host_tier=True),
+    # tier + prefix cache + chunking: LRU-evicted chains spill to host
+    # and promote back on later matches, amid lane spills and chunked
+    # prefills racing the same pool
+    "tiered_prefix": EngineConfig(
+        max_slots=MAX_SLOTS, max_len=MAX_LEN, kv_layout="paged",
+        page_size=BS, num_blocks=6, prefill_chunk=BS, prefix_cache=True,
+        admission="preempt", host_tier=True),
 }
 
 
@@ -138,7 +150,7 @@ def test_fuzz_cross_engine_parity(setup):
     cfg, mesh, rules, params, aot = setup
     totals = {name: 0 for name in MODES}
     exercised = {"preemptions": 0, "prefix_hit_tokens": 0, "cow_copies": 0,
-                 "prefill_chunks": 0}
+                 "prefill_chunks": 0, "spills": 0, "restores": 0}
     for seed in range(EPISODES):
         rng = np.random.default_rng(1000 + seed)
         stream = make_stream(rng, cfg.vocab)
@@ -155,6 +167,11 @@ def test_fuzz_cross_engine_parity(setup):
             assert eng.alloc.in_use == 0
             assert eng.alloc.num_free + eng.alloc.num_cached \
                 == eng.alloc.capacity
+            if eng.tier is not None:
+                # every lane spill consumed or dropped with its request;
+                # host-resident prefix blocks are legal (like cached)
+                eng.tier.check()
+                assert eng.tier.spilled_lanes == 0
             for k in exercised:
                 exercised[k] += eng.counters.get(k, 0)
     # the stream generator must actually exercise the machinery under
@@ -165,6 +182,8 @@ def test_fuzz_cross_engine_parity(setup):
         assert exercised["prefix_hit_tokens"] > 0, "no prefix hits at all"
         assert exercised["cow_copies"] > 0, "no COW tails in any episode"
         assert exercised["preemptions"] > 0, "no preemptions in any episode"
+        assert exercised["spills"] > 0, "no lane ever spilled to the tier"
+        assert exercised["restores"] > 0, "no lane ever restored O(copy)"
 
 
 # ---------------------------------------------------------------------------

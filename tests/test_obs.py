@@ -232,6 +232,27 @@ def test_flight_recorder_ring_bounds_and_dump(tmp_path):
     assert rec.dumps == 1 and rec.last_dump == path
 
 
+def test_flight_recorder_dump_names_never_collide(tmp_path):
+    """Dump names come from scanning the directory, not a per-recorder
+    counter: two recorders sharing a dump_dir (several engines, or a
+    re-launched process after a crash) must never overwrite each other's
+    dump 000 — the one artifact written because something went wrong."""
+    a = FlightRecorder(capacity=4, clock=FakeClock(), dump_dir=str(tmp_path))
+    b = FlightRecorder(capacity=4, clock=FakeClock(), dump_dir=str(tmp_path))
+    a.record("from_a")
+    b.record("from_b")
+    paths = [a.dump("a0"), b.dump("b0"), a.dump("a1")]
+    assert len(set(paths)) == 3, f"dump paths collided: {paths}"
+    # every dump is still on disk with its own reason — nothing clobbered
+    reasons = {json.load(open(p))["reason"] for p in paths}
+    assert reasons == {"a0", "b0", "a1"}
+    # a recorder in a fresh process (new instance, pre-existing dumps)
+    # resumes after the highest existing index, gaps and all
+    (tmp_path / "flightrec_041.json").write_text("{}")
+    c = FlightRecorder(capacity=4, clock=FakeClock(), dump_dir=str(tmp_path))
+    assert c.dump("c0").endswith("flightrec_042.json")
+
+
 def test_observer_child_isolates_metrics_shares_timeline():
     obs = Observer.full(clock=FakeClock(), name="router")
     c0, c1 = obs.child("replica0"), obs.child("replica1")

@@ -33,6 +33,8 @@ MAX_SLOTS, MAX_LEN, BS = 3, 48, 8
 SLOTTED = EngineConfig(max_slots=MAX_SLOTS, max_len=MAX_LEN)
 PREFIX = EngineConfig(max_slots=2, max_len=MAX_LEN, kv_layout="paged",
                       page_size=BS, prefix_cache=True)
+TIERED = EngineConfig(max_slots=2, max_len=MAX_LEN, kv_layout="paged",
+                      page_size=BS, host_tier=True)
 
 
 @pytest.fixture(scope="module")
@@ -48,7 +50,7 @@ def setup():
     aot = AotCache("router-test")
     # prebuild both engine shapes once: every router below must then
     # serve (and fail over, and drain) without a single fresh compile
-    for ec in (SLOTTED, PREFIX):
+    for ec in (SLOTTED, PREFIX, TIERED):
         ServeEngine(cfg, mesh, rules, params, ec, aot=aot).prebuild()
     return cfg, mesh, rules, params, aot
 
@@ -231,6 +233,45 @@ def test_deadline_aware_early_shed(setup):
     assert router.completions[loose].status == "ok"
 
 
+def test_deadline_shed_cold_start_never_false_sheds(setup):
+    """The EWMA must not be seeded by a compile-contaminated completion:
+    on a cold cache the first request's service time is dominated by AOT
+    builds, and an EWMA seeded with it would shed every
+    tight-but-feasible deadline of the first real wave on an otherwise
+    idle, warm fleet.  Only completions whose dispatch->finish window saw
+    zero fresh builds count as service-time samples."""
+    cfg, mesh, rules, params, _ = setup
+    aot = AotCache("router-coldstart")      # deliberately cold
+    clock = _FakeClock()
+    router = Router(cfg, mesh, rules, params, SLOTTED,
+                    RouterConfig(replicas=1, shed_queue_depth=50),
+                    aot=aot, clock=clock)
+    rng = np.random.default_rng(11)
+    p = rng.integers(0, 100, 8).astype(np.int32)
+    first = router.submit(p, max_new_tokens=4)
+    while router.has_work():
+        router.step()
+        clock.t += 60.0                     # compile-inflated wall time
+    assert router.completions[first].status == "ok"
+    assert aot.stats["builds"] > 0, "cold cache never compiled?"
+    # the contaminated sample was discarded, not averaged in
+    assert router._ewma_service is None
+    # first real wave: deadlines a warm fleet trivially meets, but that
+    # a 60s-per-request EWMA would have declared unreachable
+    rids = [router.submit(p, max_new_tokens=4, deadline_s=30.0)
+            for _ in range(3)]
+    assert all(r not in router.completions for r in rids), \
+        "tight-but-feasible first wave was shed on an idle warm fleet"
+    while router.has_work():
+        router.step()
+        clock.t += 1.0
+    router.check_invariants()
+    assert all(router.completions[r].status == "ok" for r in rids)
+    assert router.counters["status_shed"] == 0
+    # warm, compile-clean completions DO seed the EWMA
+    assert router._ewma_service is not None
+
+
 # ---------------------------------------------------------------------------
 # Crash failover: budgets and total fleet loss
 # ---------------------------------------------------------------------------
@@ -258,6 +299,46 @@ def test_failover_budget_exhaustion(setup):
                        max_new_tokens=4)
     assert router.completions[r2].status == "shed"
     assert "no live replicas" in router.completions[r2].error
+
+
+def test_failover_restores_from_shared_host_tier(setup):
+    """The host tier is fleet-shared: a lane snapshot spilled by one
+    replica survives that replica's crash (payloads are host arrays,
+    rids are router-unique), so failover on the survivor restores
+    O(copy) — zero replayed decode steps — instead of replaying the
+    mirrored stream token by token."""
+    cfg, mesh, rules, params, aot = setup
+    rng = np.random.default_rng(14)
+    p = rng.integers(0, cfg.vocab, 10).astype(np.int32)
+    ref = ServeEngine(cfg, mesh, rules, params, TIERED, aot=aot)
+    want = list(ref.run([p], max_new_tokens=12)[0])
+
+    router = mk_router(setup, TIERED, replicas=2)
+    assert router.tier is not None
+    rid = router.submit(p, max_new_tokens=12)
+    router.step()
+    router.step()                           # genuinely mid-decode
+    victim = router.placements[rid]
+    eng = router.replicas[victim].engine
+    assert len(eng.live[rid].tokens) >= 1
+    # snapshot the lane into the fleet tier (the engine does this on
+    # preempt; here we take it directly so the spill is provably fresh
+    # at crash time), then kill the replica that owns the device state
+    assert eng._spill_lane(eng._find_lane(rid))
+    assert router.tier.has_lane(rid)
+    router.kill(victim)
+    router.check_invariants()
+    router.run()
+    surv = router.replicas[1 - victim].engine
+    c = router.completions[rid]
+    assert c.status == "ok"
+    assert list(c.tokens) == want, "tier-restored failover diverged"
+    assert router.counters["failovers"] == 1
+    # restored O(copy): the survivor never replay-forced a token
+    assert router.tier.lane_restores >= 1
+    assert surv.counters["restores"] >= 1
+    assert surv.counters["replayed_tokens"] == 0
+    assert router.tier.has_lane(rid) is False   # moved out, not copied
 
 
 def test_queued_work_fails_on_total_fleet_loss(setup):
