@@ -94,6 +94,18 @@ Modes:
                       vs the fault-free drive) — the cost of quarantine +
                       preempt-and-replay recovery (ci.sh gates faults
                       fired > 0, parity, and builds-flat).
+    continuous_spec   speculative decoding: the slotted engine with a
+                      draft model (same architecture, params mixed toward
+                      a fresh init) proposing ``spec_k`` tokens per lane
+                      per round, the target verifying all of them in ONE
+                      fused dispatch.  Greedy tokens must be bitwise the
+                      sequential engine's on the same trace (the accept
+                      rule only ever commits the target's own argmax);
+                      the headline is ``tokens_per_decode_dispatch`` —
+                      committed tokens per lane-round, exactly 1.0 for
+                      the sequential engine, > 1.0 when speculation pays
+                      (ci.sh gates parity, acceptance > 0, rejections
+                      > 0, tpd > 1.0, builds-flat).
     continuous_traced the tracing-overhead harness: a submit-all drain
                       drive untraced (best of 2) vs with the FULL observer
                       armed (span tracer + flight-recorder sink).  Tokens
@@ -573,6 +585,56 @@ def run_traced(cfg, mesh, rules, params, trace: list[_Req], *,
     }
 
 
+def run_spec(cfg, mesh, rules, params, draft_params, trace: list[_Req], *,
+             max_slots: int, max_len: int, spec_k: int, aot=None) -> dict:
+    """Speculative-decoding drive vs the identical sequential engine on
+    the same submit-all trace.  Parity is structural (greedy verify
+    commits only the target's own argmax, so drafts gate chain LENGTH,
+    never token identity) and asserted bitwise here; the speedup claim
+    is ``tokens_per_decode_dispatch`` = committed tokens / lane-rounds —
+    the sequential engine is exactly 1.0 per lane-round, so anything
+    above 1.0 means each verify dispatch amortizes over >1 committed
+    token."""
+    from repro.serve import EngineConfig, ServeEngine
+
+    def drive(ec, dp):
+        eng = ServeEngine(cfg, mesh, rules, params, ec, aot=aot,
+                          draft_params=dp)
+        eng.prebuild()
+        b0 = eng.stats["builds"]
+        rids = [eng.submit(r.prompt, max_new_tokens=r.budget)
+                for r in trace]
+        t0 = time.perf_counter()
+        eng.drain()
+        return (eng, [list(eng.completions[r].tokens) for r in rids],
+                time.perf_counter() - t0, eng.stats["builds"] - b0)
+
+    base = EngineConfig(max_slots=max_slots, max_len=max_len)
+    _, want, seq_wall, _ = drive(base, None)
+    eng, got, wall, builds_delta = drive(
+        dataclasses.replace(base, spec_draft=cfg, spec_k=spec_k),
+        draft_params)
+
+    c = eng.counters
+    st = eng.stats
+    tokens = sum(len(t) for t in got)
+    return {
+        "tokens_per_s": tokens / wall, "useful_tokens": tokens,
+        "wall_s": wall, "sequential_wall_s": seq_wall,
+        "spec_k": spec_k,
+        "token_parity": got == want,
+        "spec_rounds": c["spec_rounds"],
+        "spec_drafted": c["spec_drafted"],
+        "spec_accepted": c["spec_accepted"],
+        "spec_rejected": c["spec_rejected"],
+        "spec_committed": c["spec_committed"],
+        "acceptance_rate": st["spec_acceptance_rate"],
+        "tokens_per_decode_dispatch": st["tokens_per_decode_dispatch"],
+        "steady_builds_delta": builds_delta,
+        "metrics": eng.obs.metrics.snapshot(),
+    }
+
+
 def check_recurrent_parity(cfg, trace: list[_Req], *, max_slots: int,
                            max_len: int, preempt_tick: int = 3) -> dict:
     """Greedy parity of the recurrent/hybrid slot engine vs the legacy
@@ -796,6 +858,15 @@ def main(argv=None) -> dict:
         cfg, mesh, rules, params, trace, max_slots=max_slots,
         max_len=max_len, aot=aot, trace_json=trace_json,
         trace_jsonl=trace_jsonl)
+    # speculative decoding: draft = same arch mixed 10% toward a fresh
+    # init — close enough to accept routinely, far enough to reject
+    # routinely, so both the commit and rollback paths are timed
+    draft_params = jax.tree.map(
+        lambda a, b: 0.9 * a + 0.1 * b, params,
+        registry.get_module(cfg).init(cfg, jax.random.PRNGKey(1)))
+    report["modes"]["continuous_spec"] = run_spec(
+        cfg, mesh, rules, params, draft_params, trace,
+        max_slots=max_slots, max_len=max_len, spec_k=3, aot=aot)
 
     # --- recurrent state kinds: the SAME engine over ssm + hybrid ------
     # f32 compute so the engine-vs-generate_static parity checks are
@@ -902,6 +973,18 @@ def main(argv=None) -> dict:
         "recurrent_steady_builds_delta": max(
             report["modes"]["continuous_recurrent"]["steady_builds_delta"],
             report["modes"]["continuous_hybrid"]["steady_builds_delta"]),
+        # speculative decoding: bitwise greedy parity with the
+        # sequential engine while each verify dispatch commits > 1
+        # token per lane-round on average
+        "spec_greedy_parity": (
+            report["modes"]["continuous_spec"]["token_parity"]),
+        "spec_acceptance_rate": (
+            report["modes"]["continuous_spec"]["acceptance_rate"]),
+        "spec_tokens_per_decode_dispatch": (
+            report["modes"]["continuous_spec"]
+            ["tokens_per_decode_dispatch"]),
+        "spec_steady_builds_delta": (
+            report["modes"]["continuous_spec"]["steady_builds_delta"]),
         # observability: a fully-armed observer (tracer + flight
         # recorder) must not perturb the engine — bitwise tokens, no new
         # builds, and >= 95% of the untraced decode rate (ci.sh-gated)

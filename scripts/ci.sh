@@ -12,6 +12,14 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+echo "== repo hygiene =="
+if git ls-files | grep -q '\.pyc$'; then
+  echo "FAIL: compiled bytecode is tracked in git:" >&2
+  git ls-files | grep '\.pyc$' >&2
+  exit 1
+fi
+echo "  no tracked *.pyc"
+
 echo "== tier-1 suite (8 forced host devices; 200-episode engine fuzz) =="
 XLA_FLAGS="--xla_force_host_platform_device_count=8" \
   ENGINE_FUZZ_EPISODES="${ENGINE_FUZZ_EPISODES:-200}" \
@@ -72,6 +80,12 @@ print(f"  tiered: restores {h['tiered_restores']}  "
       f"parity {h['tiered_token_parity']}  "
       f"spilled {td['spilled_bytes'] / 2**20:.1f} MiB  "
       f"builds_delta {h['tiered_steady_builds_delta']}")
+sp = rep["modes"]["continuous_spec"]
+print(f"  spec: parity {h['spec_greedy_parity']}  "
+      f"accept_rate {h['spec_acceptance_rate']:.2f}  "
+      f"tok/lane-round {h['spec_tokens_per_decode_dispatch']:.2f}  "
+      f"accepted {sp['spec_accepted']}  rejected {sp['spec_rejected']}  "
+      f"builds_delta {h['spec_steady_builds_delta']}")
 print(f"  chaos: faults {h['chaos_faults_fired']}  all_ok {h['chaos_all_ok']}  "
       f"parity {h['chaos_token_parity']}  "
       f"overhead {h['chaos_recovery_overhead']:.2f}x  "
@@ -143,6 +157,22 @@ if not h["tiered_o_copy_resume"]:
 if h["tiered_steady_builds_delta"] != 0:
     sys.exit("FAIL: the tiered mode built executables after prebuild — "
              "spill/restore transport must ride the AOT cache")
+if not h["spec_greedy_parity"]:
+    sys.exit("FAIL: speculative decoding changed greedy tokens — the "
+             "draft/verify commit rule must be bitwise vs the sequential "
+             "engine")
+if h["spec_acceptance_rate"] <= 0:
+    sys.exit("FAIL: the spec mode accepted no draft tokens — its parity "
+             "and speedup gates are vacuous (draft too far from target?)")
+if rep["modes"]["continuous_spec"]["spec_rejected"] <= 0:
+    sys.exit("FAIL: the spec mode rejected no draft tokens — the "
+             "rollback path was never exercised (draft == target?)")
+if h["spec_tokens_per_decode_dispatch"] <= 1.0:
+    sys.exit("FAIL: spec decode committed <= 1 token per lane-round — "
+             "speculation is not paying for its verify dispatches")
+if h["spec_steady_builds_delta"] != 0:
+    sys.exit("FAIL: the spec mode built executables after prebuild — "
+             "draft prefill + verify must ride the AOT cache")
 if h["chaos_faults_fired"] <= 0:
     sys.exit("FAIL: the chaos mode injected no faults — its recovery "
              "gates are vacuous (FaultPlan rates/seed no longer fire)")

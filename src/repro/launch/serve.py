@@ -116,6 +116,16 @@ def run_stream(cfg, mesh, rules, params, args, rng):
                       {site: args.chaos_rate for site in ENGINE_FAULT_SITES})
             for i in range(args.replicas)
         ]
+    draft_params = None
+    if args.spec_k > 0:
+        # a same-architecture draft nudged away from the target: cheap to
+        # stand up and accepts often enough to demo multi-token commits
+        # (real deployments pass trained draft weights)
+        mod = registry.get_module(cfg)
+        noise = mod.init(cfg, jax.random.PRNGKey(args.seed + 1))
+        a = args.spec_draft_alpha
+        draft_params = jax.tree.map(lambda p, n: (1 - a) * p + a * n,
+                                    params, noise)
     obs = None
     if args.trace_out or args.flightrec_dir:
         # full flight: tracer + ring-buffer recorder (invariant failures
@@ -135,12 +145,15 @@ def run_stream(cfg, mesh, rules, params, args, rng):
             prefix_cache=args.prefix_cache,
             admission=args.admission,
             max_retries=args.max_retries,
+            spec_draft=cfg if args.spec_k > 0 else None,
+            spec_k=args.spec_k,
         ),
         RouterConfig(replicas=args.replicas,
                      shed_queue_depth=args.shed_queue_depth),
         faults=faults,
         engine_faults=engine_faults,
         obs=obs,
+        draft_params=draft_params,
     )
     arrivals = np.cumsum(rng.exponential(1.0 / args.rate, args.requests))
     prompts = [
@@ -193,6 +206,9 @@ def run_stream(cfg, mesh, rules, params, args, rng):
         if args.kv_layout == "paged":
             line += (f"  prefix hit_rate {s['prefix_hit_rate']:.2f} "
                      f"preempt {s['preemptions']} resume {s['resumed']}")
+        if args.spec_k > 0:
+            line += (f"  spec accept {s['spec_acceptance_rate']:.2f} "
+                     f"tok/round {s['tokens_per_decode_dispatch']:.2f}")
         print(line)
     rs = router.stats
     print(f"-- status: ok {rs['status_ok']} timeout {rs['status_timeout']} "
@@ -276,6 +292,15 @@ def main():
                          "failover; pair with --replicas >= 2)")
     ap.add_argument("--chaos-seed", type=int, default=0,
                     help="FaultPlan seed (reproducible fault schedules)")
+    # speculative decoding knobs (continuous engine)
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help=">0: speculative decoding — a draft model "
+                         "proposes this many tokens per lane, all "
+                         "verified in one fused target dispatch; greedy "
+                         "output is bitwise-unchanged")
+    ap.add_argument("--spec-draft-alpha", type=float, default=0.1,
+                    help="demo draft weights = (1-a)*target + a*fresh "
+                         "init; smaller a = higher acceptance")
     # observability knobs (continuous engine)
     ap.add_argument("--trace-out", default=None, metavar="PATH",
                     help="write the request/engine span timeline as a "

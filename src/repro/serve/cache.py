@@ -128,6 +128,29 @@ class RecurrentCache:
                 jnp.zeros((), leaf.dtype))
         return out
 
+    def snapshot(self, cache: dict) -> dict:
+        """The recurrent leaves of ``cache`` as a flat dict — a cheap
+        per-lane-state copy (XLA aliases the arrays; a later ``where``
+        against the snapshot is the only materialization).  Used by the
+        speculative verify program to roll lanes back to their last
+        committed step."""
+        return {name: cache[name] for name in self.leaf_axes}
+
+    def rollback(self, cache: dict, snap: dict, keep) -> dict:
+        """Per-lane select between ``cache`` (lanes where ``keep`` is
+        True) and the earlier ``snapshot`` ``snap`` (lanes where it is
+        False).  ``keep`` is ``(max_slots,)`` bool.  Kept lanes pass
+        through bitwise (``where`` with a True predicate), so a lane that
+        accepted every speculative token is untouched and a lane that
+        rejected is bitwise the state it had before the rejected steps
+        ran — the property tests/test_spec_decode.py pins."""
+        out = dict(cache)
+        for name, axis in self.leaf_axes.items():
+            out[name] = jnp.where(
+                self._bcast(keep, cache[name], axis), cache[name],
+                snap[name])
+        return out
+
     def lane_is_zero(self, cache: dict, slot: int) -> bool:
         """Host-side check: lane ``slot``'s recurrent leaves are all
         exactly zero (the evict-time-zeroing invariant)."""

@@ -73,10 +73,11 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs.base import ArchConfig
 from repro.core.aot import AotCache
 from repro.models import registry
+from repro.models.attention import DecodeSharding
 from repro.obs import MetricMap, Observer
 from repro.models.common import ShardRules
 from repro.train.step import shardings_for
-from .faults import NONFINITE_TOKEN, FaultPlan
+from .faults import NONFINITE_TOKEN, UNCOMMITTED, FaultPlan
 from .cache import (
     KeyMirror,
     RecurrentCache,
@@ -109,6 +110,8 @@ from .step import (
     sample_tokens,
     slot_decode_program,
     slot_prefill_program,
+    spec_decode_program,
+    spec_draft_prefill_program,
 )
 
 
@@ -193,6 +196,17 @@ class EngineConfig:
     # being held this many clock-seconds; None = held lanes stay
     # resident until release()
     park_idle_s: float | None = None
+    # --- speculative decoding (any layout / state kind) ----------------
+    # draft model config (an ArchConfig from models/registry): each
+    # engine step the draft proposes ``spec_k`` greedy tokens per lane
+    # and ONE bucketed verify executable scores all k+1 positions with
+    # the target — accepted prefixes commit, the first rejection
+    # resamples from the target distribution.  Greedy verification is a
+    # plain argmax comparison, so the committed stream is bitwise the
+    # sequential engine's (asserted by the fuzzer across every state
+    # kind).  Requires fused_sampling; both fields set together.
+    spec_draft: Any = None
+    spec_k: int = 0
 
 
 @dataclasses.dataclass
@@ -306,6 +320,7 @@ class ServeEngine:
         faults: FaultPlan | None = None,
         obs: Observer | None = None,
         host_tier: HostTier | None = None,
+        draft_params=None,
     ):
         if not registry.supports_slot_serving(cfg):
             raise ValueError(
@@ -333,6 +348,24 @@ class ServeEngine:
                     "there is no seq axis to page; use kv_layout='slotted'")
             raise ValueError(
                 f"family {cfg.family!r} does not support paged serving")
+        self.spec = engine.spec_draft is not None
+        if self.spec != (engine.spec_k > 0):
+            raise ValueError(
+                "spec_draft and spec_k must be set together "
+                f"(spec_draft={engine.spec_draft!r}, spec_k={engine.spec_k})")
+        if self.spec:
+            if not engine.fused_sampling:
+                raise ValueError(
+                    "speculative decoding requires fused_sampling=True "
+                    "(the verify row rides the fused int32 token fetch)")
+            if not registry.supports_slot_serving(engine.spec_draft):
+                raise ValueError(
+                    f"draft family {engine.spec_draft.family!r} does not "
+                    "support slot serving")
+            if engine.spec_draft.vocab != cfg.vocab:
+                raise ValueError(
+                    f"draft vocab {engine.spec_draft.vocab} != target "
+                    f"vocab {cfg.vocab}: verify compares token ids")
         self.cfg, self.mesh, self.rules = cfg, mesh, rules
         self.econ = engine
         self.buckets = tuple(engine.prefill_buckets or prompt_buckets(engine.max_len))
@@ -394,6 +427,50 @@ class ServeEngine:
                 cfg, mesh, engine.max_slots, engine.max_len)
             self.state = make_slot_state(
                 cfg, mesh, engine.max_slots, engine.max_len, engine.seed)
+        # --- speculative-decode draft lane state -----------------------
+        # the draft cache is ALWAYS slotted (even under a paged target):
+        # its per-lane state is small — max_slots x max_len worst-case for
+        # a KV draft, O(1) for a recurrent one — and lives as one more
+        # leaf of the engine state dict so the verify executable advances
+        # target and draft in a single dispatch.  Draft state is never
+        # spilled to the host tier: committed tokens fully determine it,
+        # so restores rebuild it with one draft prefill over the history
+        # (greedy parity is draft-independent — drafts only gate how many
+        # target tokens commit per step, never their values).
+        self._draft_rec = None
+        self.draft_params = None
+        if self.spec:
+            dcfg = engine.spec_draft
+            dmod = registry.get_module(dcfg)
+            ddec = DecodeSharding.choose(mesh, engine.max_slots)
+            dsds = dmod.make_cache_specs(dcfg, engine.max_slots,
+                                         engine.max_len)
+            dsh = jax.tree.map(
+                lambda p: NamedSharding(mesh, p), dmod.cache_pspec(dcfg, ddec),
+                is_leaf=lambda x: isinstance(x, P))
+            self._state_sh["draft"] = dsh
+            self.state["draft"] = jax.tree.map(
+                lambda sd, d: jax.device_put(jnp.zeros(sd.shape, sd.dtype), d),
+                dsds, dsh,
+                is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+            self._dp_sh = shardings_for(mesh, registry.param_pspecs(dcfg, rules))
+            self._dparams_sds = registry.abstract_params(dcfg)
+            if draft_params is None:
+                # self-contained default (router replicas need zero extra
+                # plumbing): a deterministic draft init from the engine
+                # seed.  Real deployments pass trained draft weights.
+                draft_params = dmod.init(dcfg, jax.random.PRNGKey(engine.seed))
+            self.draft_params = jax.device_put(draft_params, self._dp_sh)
+            self._draft_rec = RecurrentCache(dcfg)
+            # draft rebuilds cover committed HISTORIES (prompt + emitted
+            # tokens), which can outgrow the largest *prompt* bucket when
+            # prefill_buckets is customized below max_len
+            self._spec_buckets = self.buckets \
+                if max(self.buckets) >= engine.max_len \
+                else self.buckets + (engine.max_len,)
+        elif draft_params is not None:
+            raise ValueError(
+                "draft_params passed but EngineConfig.spec_draft is None")
         self._state_sds = state_sds(self.state)
         self.kv_reserved_bytes = cache_nbytes(self.state["cache"])
 
@@ -455,6 +532,14 @@ class ServeEngine:
             "spills", "restores", "spilled_bytes", "restored_bytes",
             "spill_drops", "prefix_spills", "host_prefix_hits",
             "holds", "releases", "parked",
+            # speculative decoding: verify dispatches, lane-rounds (one
+            # active lane in one verify dispatch), draft tokens
+            # proposed/accepted, explicit rejections, and total committed
+            # tokens (spec_committed / spec_rounds = mean committed chain
+            # length per lane-round — the sequential engine is exactly
+            # 1.0, so > 1.0 is the headline speedup)
+            "spec_steps", "spec_rounds", "spec_drafted", "spec_accepted",
+            "spec_rejected", "spec_committed",
         ), gauges=("kv_peak_used_bytes",))
         self._kv_gauge = self.obs.metrics.gauge("kv_peak_used_bytes")
         self._next_rid = 0
@@ -489,7 +574,10 @@ class ServeEngine:
         e = self.econ
         return (self.cfg.name, e.max_slots, e.max_len, e.eos_id,
                 e.fused_sampling, e.kv_layout, e.page_size,
-                self._num_blocks, e.paged_attn)
+                self._num_blocks, e.paged_attn,
+                # spec changes the STATE SHAPE (the draft leaf), so every
+                # executable — not just the verify program — keys on it
+                e.spec_draft.name if e.spec_draft else None, e.spec_k)
 
     def _decode_exe(self):
         key = ("slot_decode",) + self._sampler_key()
@@ -517,6 +605,65 @@ class ServeEngine:
             return jitted.lower(self._params_sds, self._state_sds).compile()
 
         return self.aot.get(key, build)
+
+    def _spec_exe(self):
+        """The draft+verify speculative step (serve/step.py): k greedy
+        draft proposals plus k+1 target scores per lane in ONE dispatch,
+        returning a ``(max_slots, k+1)`` row matrix — still a single
+        int32 fetch per engine step."""
+        key = ("spec_decode",) + self._sampler_key()
+
+        def build():
+            e = self.econ
+            fn = spec_decode_program(
+                self.cfg, e.spec_draft, self.mesh, self.rules, k=e.spec_k,
+                eos_id=e.eos_id, paged=self.paged, impl=e.paged_attn,
+            )
+            jitted = jax.jit(
+                fn,
+                in_shardings=(self._p_sh, self._dp_sh, self._state_sh),
+                out_shardings=(self._state_sh, self._rep),
+                donate_argnums=(2,),
+            )
+            return jitted.lower(self._params_sds, self._dparams_sds,
+                                self._state_sds).compile()
+
+        return self.aot.get(key, build)
+
+    def _spec_prefill_exe(self, bucket: int):
+        """Rebuild one lane's draft cache from its committed token
+        history (admission, and every restore path — draft state is
+        never spilled)."""
+        key = ("spec_draft_prefill", bucket) + self._sampler_key()
+
+        def build():
+            rep = self._rep
+            i32 = lambda shape=(): jax.ShapeDtypeStruct(shape, jnp.int32)
+            fn = spec_draft_prefill_program(
+                self.econ.spec_draft, self.mesh, self.rules)
+            jitted = jax.jit(
+                fn,
+                in_shardings=(self._dp_sh, self._state_sh, rep, rep, rep),
+                out_shardings=self._state_sh,
+                donate_argnums=(1,),
+            )
+            return jitted.lower(self._dparams_sds, self._state_sds,
+                                i32((1, bucket)), i32(), i32()).compile()
+
+        return self.aot.get(key, build)
+
+    def _spec_draft_prefill(self, slot: int, hist: np.ndarray) -> None:
+        """Seed lane ``slot``'s draft cache with the committed history
+        ``hist`` (prompt, or prompt + committed tokens up to — not
+        including — the pending decode input).  Bucketed like the target
+        prefill so the AOT cache stays flat."""
+        hist = np.asarray(hist, np.int32).reshape(-1)
+        bucket = bucket_for(int(hist.size), self._spec_buckets)
+        padded = np.zeros((1, bucket), np.int32)
+        padded[0, : hist.size] = hist
+        self.state = self._spec_prefill_exe(bucket)(
+            self.draft_params, self.state, self._put(padded, jnp.int32),
+            self._put(slot, jnp.int32), self._put(hist.size, jnp.int32))
 
     def _prefill_exe(self, bucket: int, first: bool = True):
         key = ("slot_prefill", bucket, first) + self._sampler_key()
@@ -667,7 +814,8 @@ class ServeEngine:
         ``steady_builds_delta == 0`` an invariant rather than a race.
         """
         e = self.econ
-        self._decode_exe()
+        if not self.spec:       # spec engines never dispatch plain decode
+            self._decode_exe()
         chunks = (e.prefill_chunk,) if (self.paged and e.prefill_chunk) \
             else self.buckets
         for C in chunks:
@@ -687,6 +835,10 @@ class ServeEngine:
             else:
                 self._lane_read_exe()
                 self._lane_write_exe()
+        if self.spec:
+            self._spec_exe()
+            for C in self._spec_buckets:
+                self._spec_prefill_exe(C)
 
     # ------------------------------------------------------------------
     # Request lifecycle
@@ -861,6 +1013,15 @@ class ServeEngine:
             # leaf, so the lane's decode input token must be re-pushed
             # from the host mirror along with the active bit
             self._sched_dirty = True
+        if self.spec:
+            # a held lane's RECURRENT draft leaves were freeze-zeroed
+            # while inactive (a KV draft survives via lazy overwrite,
+            # but rebuilding unconditionally keeps one code path);
+            # committed history fully determines the draft state
+            comp = self.live[rid]
+            self._spec_draft_prefill(slot, np.concatenate([
+                s.prompt,
+                np.asarray(comp.tokens[: s.generated - 1], np.int32)]))
         self.counters["releases"] += 1
         if self.obs.tracer is not None:
             self.obs.mark("release", rid, track=self._track, slot=slot)
@@ -1286,6 +1447,12 @@ class ServeEngine:
             self._sched_dirty = False
         else:
             self._sched_dirty = True
+        if self.spec:
+            # lane spills carry only TARGET state; rebuild the draft
+            # cache from the committed history the spill covers (the
+            # pending input seq[plen+k_cov-1] is the next decode input,
+            # so the draft's written history stops just before it)
+            self._spec_draft_prefill(slot, seq[: plen + k_cov - 1])
         if self.obs.tracer is not None:
             self.obs.mark("restore", req.rid, track=self._track, slot=slot,
                           source="host_tier", kind=sp.kind, nbytes=sp.nbytes)
@@ -1324,6 +1491,11 @@ class ServeEngine:
         self._tok_mirror[slot] = int(seq[matched])
         self._active_mirror[slot] = True
         self._sched_dirty = True             # pushed before the next decode
+        if self.spec:
+            # the shared chain restores only TARGET KV; rebuild the
+            # draft cache over the restored history (everything before
+            # the pending input seq[matched])
+            self._spec_draft_prefill(slot, seq[:matched])
         return True
 
     # -- admission ------------------------------------------------------
@@ -1530,6 +1702,10 @@ class ServeEngine:
         if end < s.plen:
             return                              # more chunks to come
         self.counters["prefills"] += 1
+        if self.spec:
+            # the lane decodes from here: seed its draft cache with the
+            # full prompt (draft state is never restored, always rebuilt)
+            self._spec_draft_prefill(slot, s.prompt)
 
         if self.econ.fused_sampling:
             tok = int(np.asarray(out)[0])
@@ -1746,6 +1922,53 @@ class ServeEngine:
                                 self.econ.max_slots)
         self._kv_gauge.set_max(used)
 
+    def _advance_lane(self, i: int, tok: int, now: float) -> str:
+        """Commit ONE fetched token for lane ``i`` — the per-token host
+        walk shared by the plain decode step (one call per lane) and the
+        speculative verify row (one call per accepted position, in row
+        order).  Returns the outcome: ``"fault"`` (non-finite sentinel:
+        lane quarantined + requeued, nothing committed), ``"replay"``
+        (preemption replay: recorded token force-fed, nothing emitted),
+        ``"done"`` (emitted and finished), or ``"ok"`` (emitted)."""
+        s = self.slots[i]
+        if tok == NONFINITE_TOKEN:
+            # lane reported non-finite logits: its sample is invalid and
+            # nothing is emitted — quarantine + bounded retry via
+            # preempt-and-requeue (the resume replays the recorded
+            # tokens bitwise), or terminal "failed" once the retry
+            # budget is spent
+            self.counters["faults_detected"] += 1
+            self._retry_lane(i, "non-finite logits at decode")
+            return "fault"
+        s.generated += 1
+        comp = self.live[s.rid]
+        replaying = s.generated <= s.emit_from
+        if replaying:
+            # preemption replay: force the RECORDED token as the next
+            # input (== the regenerated one under greedy; a stochastic
+            # resample at a different key-stream position must not fork
+            # the conditioning away from the emitted history).  No
+            # re-emission, no done: the original run continued past
+            # every replayed position.
+            self._tok_mirror[i] = int(comp.tokens[s.generated - 1])
+            self._sched_dirty = True
+            self.counters["replayed_tokens"] += 1
+        else:
+            comp.tokens.append(tok)
+            comp.token_times.append(now)
+            self._tok_mirror[i] = tok
+        if self.paged and \
+                (s.plen + s.generated - 1) % self.econ.page_size == 0:
+            self._publish(i)
+        if replaying:
+            return "replay"
+        done = (s.plen + s.generated - 1 >= s.limit) or (
+            self.econ.eos_id is not None and tok == self.econ.eos_id)
+        if done:
+            self._finish(i, now)
+            return "done"
+        return "ok"
+
     # ------------------------------------------------------------------
     # The serving loop
     # ------------------------------------------------------------------
@@ -1803,7 +2026,15 @@ class ServeEngine:
                 if s is None:
                     continue                    # preempted by an earlier map
                 next_pos = s.plen + s.generated - 1
-                self._map_blocks(i, next_pos // self.econ.page_size + 1)
+                # spec: the verify row can write up to spec_k positions
+                # past the next one — pre-map the whole horizon (capped
+                # at the lane's budget) so rejected-step overshoot lands
+                # in the lane's OWN blocks, never the write sink of an
+                # unmapped entry and never a shared block (a freshly
+                # mapped block is refcount-1 by construction)
+                horizon = next_pos + (self.econ.spec_k if self.spec else 0)
+                horizon = min(horizon, s.limit - 1)
+                self._map_blocks(i, horizon // self.econ.page_size + 1)
             self._push_tables()
             active_slots = active()
         if active_slots:
@@ -1820,8 +2051,12 @@ class ServeEngine:
             # step-critical path, measured by the engine's own clock
             sid = None if self.obs.tracer is None else self.obs.begin(
                 "decode", track=self._track, lanes=len(active_slots))
-            exe = self._decode_exe()
-            self.state, out = exe(self.params, self.state)
+            if self.spec:
+                self.state, out = self._spec_exe()(
+                    self.params, self.draft_params, self.state)
+            else:
+                exe = self._decode_exe()
+                self.state, out = exe(self.params, self.state)
             self._last_op = "decode"
             sub = None if self.econ.fused_sampling \
                 else self._key_mirror.split()
@@ -1829,7 +2064,12 @@ class ServeEngine:
             self.counters["decode_steps"] += 1
             self.counters["dead_slot_steps"] += (
                 self.econ.max_slots - len(active_slots))
-            if self.econ.fused_sampling:
+            if self.spec:
+                # (max_slots, k+1) verify rows — still ONE int32 fetch
+                rows = np.asarray(out)
+                self.counters["spec_steps"] += 1
+                self.counters["spec_rounds"] += len(active_slots)
+            elif self.econ.fused_sampling:
                 toks = np.asarray(out)          # the one per-step host sync
             else:
                 arr = lambda f, d, dt: np.array([
@@ -1856,47 +2096,46 @@ class ServeEngine:
                         self.obs.instant(
                             "fault", track=self._track, site="decode_logits",
                             rid=self.slots[lane].rid)
-                    toks = np.array(toks, copy=True)
-                    toks[lane] = NONFINITE_TOKEN
+                    if self.spec:
+                        rows = np.array(rows, copy=True)
+                        rows[lane, 0] = NONFINITE_TOKEN
+                    else:
+                        toks = np.array(toks, copy=True)
+                        toks[lane] = NONFINITE_TOKEN
             now = self.clock()
-            for i in active_slots:
-                s = self.slots[i]
-                tok = int(toks[i])
-                if tok == NONFINITE_TOKEN:
-                    # lane reported non-finite logits: its sample is
-                    # invalid and nothing is emitted — quarantine +
-                    # bounded retry via preempt-and-requeue (the resume
-                    # replays the recorded tokens bitwise), or terminal
-                    # status "failed" once the retry budget is spent
-                    self.counters["faults_detected"] += 1
-                    self._retry_lane(i, "non-finite logits at decode")
-                    continue
-                s.generated += 1
-                comp = self.live[s.rid]
-                replaying = s.generated <= s.emit_from
-                if replaying:
-                    # preemption replay: force the RECORDED token as the
-                    # next input (== the regenerated one under greedy; a
-                    # stochastic resample at a different key-stream
-                    # position must not fork the conditioning away from
-                    # the emitted history).  No re-emission, no done: the
-                    # original run continued past every replayed position.
-                    self._tok_mirror[i] = int(comp.tokens[s.generated - 1])
-                    self._sched_dirty = True
-                    self.counters["replayed_tokens"] += 1
-                else:
-                    comp.tokens.append(tok)
-                    comp.token_times.append(now)
-                    self._tok_mirror[i] = tok
-                if self.paged and \
-                        (s.plen + s.generated - 1) % self.econ.page_size == 0:
-                    self._publish(i)
-                if replaying:
-                    continue
-                done = (s.plen + s.generated - 1 >= s.limit) or (
-                    self.econ.eos_id is not None and tok == self.econ.eos_id)
-                if done:
-                    self._finish(i, now)
+            if self.spec:
+                for i in active_slots:
+                    s = self.slots[i]
+                    # accounting is per-SPECULATION: replay rounds force
+                    # one recorded token and speculate nothing
+                    replaying0 = s.generated < s.emit_from
+                    c = 0
+                    outcome = "ok"
+                    for tok in rows[i]:
+                        tok = int(tok)
+                        if tok == UNCOMMITTED:
+                            break       # first rejected/inactive position
+                        outcome = self._advance_lane(i, tok, now)
+                        if outcome == "fault":
+                            break
+                        c += 1
+                        if outcome == "done":
+                            break
+                    self.counters["spec_committed"] += c
+                    if not replaying0:
+                        self.counters["spec_drafted"] += self.econ.spec_k
+                        if c:
+                            # the row's first commit scores the pending
+                            # token (not a draft); commits 2..c each
+                            # accept one draft proposal
+                            self.counters["spec_accepted"] += c - 1
+                        if outcome == "ok" and c <= self.econ.spec_k:
+                            # the chain ended by draft mismatch (not by
+                            # finishing, faulting, or running out of row)
+                            self.counters["spec_rejected"] += 1
+            else:
+                for i in active_slots:
+                    self._advance_lane(i, int(toks[i]), now)
             if not self.econ.fused_sampling:
                 self._writeback_sampled()
             progressed = True
@@ -2243,6 +2482,13 @@ class ServeEngine:
             free = [i for i, s in enumerate(self.slots) if s is None]
             assert self.rec.lanes_are_zero(self.state["cache"], free), (
                 f"an evicted lane in {free} holds non-zero recurrent state")
+        if self.spec and self._draft_rec and self._last_op == "decode":
+            # the spec program's draft-side freeze is the only thing
+            # zeroing dead draft lanes — sweep it like the target's
+            free = [i for i, s in enumerate(self.slots) if s is None]
+            assert self._draft_rec.lanes_are_zero(self.state["draft"], free), (
+                f"an evicted lane in {free} holds non-zero DRAFT "
+                "recurrent state")
         if not self.paged:
             if self.tier is not None:
                 self.tier.check()
@@ -2263,9 +2509,20 @@ class ServeEngine:
             assert kv_len <= self.tables.mapped(i) * bs, (
                 f"slot {i}: {kv_len} KV positions written but only "
                 f"{self.tables.mapped(i)} blocks mapped")
-            for b in self.tables.blocks(i):
+            for j, b in enumerate(self.tables.blocks(i)):
                 assert self.alloc.refcount(b) >= 1, (
                     f"slot {i} maps non-live block {b}")
+                if (j + 1) * bs > kv_len:
+                    # no mapped block extending past the lane's committed
+                    # KV may be shared: publication only ever indexes
+                    # FULL blocks ((j+1)*bs <= kv_len at publish time),
+                    # so any write past the commit point — a plain decode
+                    # write, or spec verify overshoot on rejected steps —
+                    # can only land in a block this lane owns outright
+                    assert self.alloc.refcount(b) == 1, (
+                        f"slot {i}: block {b} covers positions past "
+                        f"kv_len {kv_len} but is shared "
+                        f"(refcount {self.alloc.refcount(b)})")
         if self.econ.admission == "deficit":
             assert self.alloc.available >= self._deficit >= 0, (
                 f"deficit {self._deficit} exceeds available "
@@ -2281,6 +2538,16 @@ class ServeEngine:
             "state_kind": self.kind,
             "kv_reserved_bytes": self.kv_reserved_bytes,
         }
+        if self.spec:
+            drafted = self.counters["spec_drafted"]
+            out["spec_acceptance_rate"] = (
+                self.counters["spec_accepted"] / drafted if drafted else 0.0)
+            # mean committed chain length per lane per verify dispatch;
+            # the sequential engine commits exactly 1.0 per lane-round,
+            # so anything above 1.0 is speculation paying for itself
+            rounds = self.counters["spec_rounds"]
+            out["tokens_per_decode_dispatch"] = (
+                self.counters["spec_committed"] / rounds if rounds else 0.0)
         if self.paged:
             out["prefix_cached_blocks"] = self.alloc.num_cached
             out["prefix_cache_evictions"] = self.alloc.cache_evictions

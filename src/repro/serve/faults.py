@@ -64,6 +64,14 @@ _VICTIM_STREAM = 1
 # quarantine the lane and retry the request, or fail it terminally.
 NONFINITE_TOKEN = -1
 
+# Sentinel for speculative-decode verify rows: entries past a lane's
+# accepted prefix (the draft diverged, the lane was inactive, or the lane
+# finished earlier in the row).  Rides the same int32 fetch as the tokens
+# themselves — the host stops committing a lane's row at the first
+# UNCOMMITTED entry.  Distinct from NONFINITE_TOKEN, which marks a
+# *committed* position whose logits were non-finite (quarantine path).
+UNCOMMITTED = -2
+
 
 class FaultPlan:
     """Seeded per-site fault schedule.

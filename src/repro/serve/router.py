@@ -171,6 +171,7 @@ class Router:
         faults: FaultPlan | None = None,
         engine_faults: list[FaultPlan | None] | None = None,
         obs: Observer | None = None,
+        draft_params=None,
     ):
         if engine_faults is not None and len(engine_faults) != router.replicas:
             raise ValueError("engine_faults must have one entry per replica")
@@ -195,14 +196,17 @@ class Router:
             if engine.host_tier else None
         self.replicas: list[ReplicaHandle] = []
         dev_params = params
+        dev_draft = draft_params
         for i in range(router.replicas):
             eng = ServeEngine(
                 cfg, mesh, rules, dev_params, engine, aot=self.aot,
                 clock=clock,
                 faults=engine_faults[i] if engine_faults else None,
                 obs=self.obs.child(f"replica{i}"),
-                host_tier=self.tier)
+                host_tier=self.tier,
+                draft_params=dev_draft)
             dev_params = eng.params     # share the placed copy fleet-wide
+            dev_draft = eng.draft_params    # ditto for the draft weights
             self.replicas.append(ReplicaHandle(i, eng))
         self.queue: deque[_Record] = deque()
         self.records: dict[int, _Record] = {}

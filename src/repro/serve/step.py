@@ -28,7 +28,7 @@ from repro.models import registry
 from repro.models.attention import NEG_INF
 from repro.models.common import ShardRules
 from repro.train.step import shardings_for
-from .faults import NONFINITE_TOKEN
+from .faults import NONFINITE_TOKEN, UNCOMMITTED
 
 
 def jit_prefill(cfg: ArchConfig, mesh: Mesh, rules: ShardRules,
@@ -415,6 +415,186 @@ def paged_prefill_program(cfg: ArchConfig, mesh: Mesh, rules: ShardRules, *,
             state["tokens"], jnp.where(is_last, tok[0], state["tokens"][slot]))
         new_state["active"] = upd(state["active"], alive)
         return new_state, tok
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# Speculative decoding (draft/verify)
+# ---------------------------------------------------------------------------
+
+
+def spec_decode_program(cfg: ArchConfig, dcfg: ArchConfig, mesh: Mesh,
+                        rules: ShardRules, *, k: int,
+                        eos_id: int | None = None, paged: bool = False,
+                        impl: str = "ref"):
+    """One speculative decode round over every lane: the draft model
+    proposes ``k`` tokens per lane, the target scores all ``k + 1``
+    positions, and each lane commits its accepted prefix — up to ``k + 1``
+    tokens per dispatch instead of one.
+
+    ``fn(params, dparams, state) -> (state', rows (max_slots, k+1) int32)``
+    — the rows matrix is the ONLY host fetch: entry ``(lane, i)`` is the
+    ``i``-th committed token of the lane's round, :data:`UNCOMMITTED`
+    past the accepted prefix, or :data:`NONFINITE_TOKEN` for a committed
+    position whose logits were non-finite (same quarantine contract as
+    the plain decode program).
+
+    Accept rule (greedy path): target step ``i`` consumes input ``u_i``
+    (``u_0`` = the lane's pending token, ``u_i = draft_i`` after) at
+    position ``lengths + i`` and samples ``y_i``; the chain stays valid
+    while ``y_{i-1} == draft_{i-1}``, so every committed ``y_i`` is
+    computed from exactly the committed token sequence — bitwise what
+    the sequential engine would have sampled, no matter what the draft
+    proposed.  The first mismatch commits the *target*'s ``y_i`` (the
+    "resample" — for greedy, plain argmax) and invalidates the rest of
+    the row.  Stochastic lanes draw per-position subkeys
+    (``fold_in(sub, i)``); only the greedy path is bitwise-comparable to
+    the sequential engine.
+
+    State handling per kind:
+
+    * **KV (slotted/paged)** — write-then-truncate: rejected positions
+      hold junk KV past the commit point, lazily overwritten before the
+      lane next attends them (the same argument as eviction; paged junk
+      beyond the mapped horizon routes to the write sink, and shared
+      prefix blocks are always fully committed so junk never lands in
+      one — swept by ``check_invariants``).
+    * **recurrent/hybrid leaves** — snapshot/rollback: ``keep`` tracks
+      the state after the lane's last *committed* step and is restored
+      wholesale on the way out (:meth:`RecurrentCache.rollback`), so a
+      rejecting lane's state is bitwise the state before the rejected
+      steps ran.
+
+    The draft runs ``k + 1`` steps (the last consumes its own final
+    proposal) so its KV covers positions ``lengths .. lengths + k`` —
+    no gap when a lane accepts everything.  Recurrent draft leaves
+    select the snapshot after step ``c_len - 1``, i.e. having consumed
+    exactly the committed sequence minus the new pending token.
+
+    Replaying lanes commit exactly ONE token per round (``valid`` drops
+    them after step 0): the host forces each recorded token between
+    dispatches, so speculating past the forced token would verify
+    against inputs the host is about to override.
+    """
+    from .cache import RecurrentCache
+
+    if k < 1:
+        raise ValueError(f"spec_k must be >= 1, got {k}")
+    mod = registry.get_module(cfg)
+    dmod = registry.get_module(dcfg)
+    rec = RecurrentCache(cfg)
+    drec = RecurrentCache(dcfg)
+
+    def target_step(params, state, cache, tok, pos):
+        if paged:
+            return mod.decode_step_paged(
+                cfg, mesh, rules, params, cache, tok, pos,
+                state["tables"], impl=impl)
+        return mod.decode_step(cfg, mesh, rules, params, cache, tok, pos)
+
+    def fn(params, dparams, state):
+        key, sub = jax.random.split(state["key"])
+        active = state["active"]
+        replay = state["replay"]
+        lengths = state["lengths"]
+        B = active.shape[0]
+
+        # --- draft pass: k proposals + one covering step ---------------
+        dcache = state["draft"]
+        drafts, dstates = [], []
+        z = state["tokens"]
+        for i in range(k + 1):
+            dlogits, dcache = dmod.decode_step(
+                dcfg, mesh, rules, dparams, dcache, z, lengths + i)
+            if drec:
+                dstates.append(drec.snapshot(dcache))
+            if i < k:
+                z = jnp.argmax(
+                    dlogits.astype(jnp.float32), axis=-1).astype(jnp.int32)
+                drafts.append(z)
+
+        # --- target verify ladder --------------------------------------
+        cache = state["cache"]
+        keep = rec.snapshot(cache) if rec else None
+        valid = active
+        c_len = jnp.zeros(B, jnp.int32)
+        last_tok = jnp.zeros(B, jnp.int32)
+        any_done = jnp.zeros(B, bool)
+        rows = []
+        u = state["tokens"]
+        for i in range(k + 1):
+            logits, cache = target_step(params, state, cache, u, lengths + i)
+            tok = sample_tokens(
+                logits, jax.random.fold_in(sub, i), state["temps"],
+                top_ks=state["top_ks"], top_ps=state["top_ps"])
+            finite = jnp.all(jnp.isfinite(logits), axis=-1)
+            y = jnp.where(finite, tok, jnp.int32(NONFINITE_TOKEN)).astype(
+                jnp.int32)
+            done = finite & (lengths + i + 1 >= state["limits"])
+            if eos_id is not None:
+                done |= finite & (y == eos_id)
+            committed = valid & finite
+            rows.append(jnp.where(valid, y, jnp.int32(UNCOMMITTED)))
+            last_tok = jnp.where(committed, y, last_tok)
+            c_len = c_len + committed.astype(jnp.int32)
+            any_done |= committed & done
+            if rec:
+                keep = rec.snapshot(rec.rollback(cache, keep, committed))
+            if i < k:
+                valid = valid & finite & ~done & ~replay & (y == drafts[i])
+                u = drafts[i]
+
+        act_new = active & ~any_done
+        if rec:
+            cache = {**cache, **keep}
+            cache = rec.freeze(cache, act_new | replay)
+        if drec:
+            dsel = dstates[0]
+            for j in range(1, k + 1):
+                dsel = drec.snapshot(
+                    drec.rollback({**dcache, **dstates[j]}, dsel, c_len > j))
+            dcache = {**dcache, **dsel}
+            dcache = drec.freeze(dcache, act_new | replay)
+
+        new_state = {
+            **state, "cache": cache, "draft": dcache,
+            "tokens": jnp.where(active, last_tok, 0).astype(jnp.int32),
+            "lengths": lengths + c_len,
+            "active": act_new, "key": key,
+        }
+        return new_state, jnp.stack(rows, axis=1)
+
+    return fn
+
+
+def spec_draft_prefill_program(dcfg: ArchConfig, mesh: Mesh,
+                               rules: ShardRules):
+    """Seed the DRAFT model's lane from a token history: prefill
+    ``hist`` (the prompt plus every committed token except the pending
+    one, padded to a bucket) into draft lane ``slot``.
+
+    ``fn(dparams, state, hist (1, bucket), slot, plen) -> state'`` —
+    runs at admission and on every restore path (prefix-chain, host-tier,
+    held-lane release).  The draft state it builds is *not* bitwise the
+    state a decode-origin draft would have — it doesn't need to be:
+    committed tokens never depend on draft values, only the accepted
+    chain LENGTH does, so rebuilding the draft from history preserves
+    output parity exactly.
+
+    Deliberately NO freeze here: the device ``active`` vector can be
+    stale mid-admission (the host batches scheduling pushes), so a
+    freeze keyed on it could zero a lane another restore seeded moments
+    earlier in the same engine step.  Inactive-lane draft zeroing is the
+    spec decode program's job — it freezes the draft side every step,
+    which is exactly when the invariant sweep checks it.
+    """
+    dmod = registry.get_module(dcfg)
+
+    def fn(dparams, state, hist, slot, plen):
+        dcache, _ = dmod.prefill_slot(
+            dcfg, mesh, rules, dparams, state["draft"], hist, slot, plen)
+        return {**state, "draft": dcache}
 
     return fn
 

@@ -129,9 +129,10 @@ def make_stream(rng, vocab):
     return out
 
 
-def drive(cfg, mesh, rules, params, aot, ec, stream):
+def drive(cfg, mesh, rules, params, aot, ec, stream, draft_params=None):
     """Replay a stream through one engine; invariants swept every step."""
-    eng = ServeEngine(cfg, mesh, rules, params, ec, aot=aot)
+    eng = ServeEngine(cfg, mesh, rules, params, ec, aot=aot,
+                      draft_params=draft_params)
     i, tick, guard = 0, 0, 0
     while i < len(stream) or eng.has_work():
         while i < len(stream) and stream[i][0] <= tick:
@@ -216,13 +217,15 @@ def rec_setup(request):
     return cfg, mesh, rules, params, AotCache(f"fuzz-{cfg.family}")
 
 
-def drive_recurrent(cfg, mesh, rules, params, aot, stream, preempts):
+def drive_recurrent(cfg, mesh, rules, params, aot, stream, preempts,
+                    ec=None, draft_params=None):
     """Replay a stream through a slotted recurrent engine; ``preempts``
     maps tick -> slot to preempt (empty = the parity reference).  Sweeps
     the allocator-free invariants plus recurrent evict-time zeroing."""
     eng = ServeEngine(
         cfg, mesh, rules, params,
-        EngineConfig(max_slots=MAX_SLOTS, max_len=MAX_LEN), aot=aot)
+        ec or EngineConfig(max_slots=MAX_SLOTS, max_len=MAX_LEN), aot=aot,
+        draft_params=draft_params)
     i, tick, guard = 0, 0, 0
     while i < len(stream) or eng.has_work():
         while i < len(stream) and stream[i][0] <= tick:
@@ -267,6 +270,125 @@ def test_fuzz_recurrent_preempt_parity(rec_setup):
     if REC_EPISODES >= 5:
         assert preempted > 0, "no recurrent preemption in any episode"
         assert replayed > 0, "no decode replay in any episode"
+
+
+# ---------------------------------------------------------------------------
+# Speculative decoding: draft/verify engines vs the sequential reference
+# ---------------------------------------------------------------------------
+#
+# Greedy spec decoding must be bitwise-invisible: every committed token is
+# the target model's argmax over the committed history (drafts only gate
+# how MANY positions commit per round, never WHICH token commits), so a
+# spec engine's stream equals the plain slotted engine's stream exactly —
+# layered on every state kind and on preempt/spill machinery.  The draft
+# is the same architecture with params mixed toward a fresh init: close
+# enough to accept routinely, far enough to reject routinely, so both the
+# commit and the rollback paths are exercised (vacuity-guarded below).
+
+SPEC_K = 3
+SPEC_EPISODES = max(2, EPISODES // 10)
+SPEC_REC_EPISODES = max(2, EPISODES // 40)
+
+
+def _draft_mix(cfg, params, alpha):
+    """Draft params: target params mixed ``alpha`` toward a fresh init."""
+    noise = registry.get_module(cfg).init(cfg, jax.random.PRNGKey(1))
+    return jax.tree.map(lambda a, b: (1 - alpha) * a + alpha * b,
+                        params, noise)
+
+
+def spec_modes(cfg):
+    """Spec engine configs (need the draft ArchConfig, hence a function)."""
+    sp = {"spec_draft": cfg, "spec_k": SPEC_K}
+    return {
+        "spec_slotted": EngineConfig(
+            max_slots=MAX_SLOTS, max_len=MAX_LEN, **sp),
+        # paged + prefix: verify rounds cross block boundaries, publish
+        # full blocks, and share chains — with the k-token pre-map
+        "spec_prefix": EngineConfig(
+            max_slots=MAX_SLOTS, max_len=MAX_LEN, kv_layout="paged",
+            page_size=BS, prefill_chunk=BS, prefix_cache=True, **sp),
+        # tight pool: decode growth preempts lanes mid-speculation; the
+        # resume replays the COMMITTED stream only
+        "spec_preempt": EngineConfig(
+            max_slots=MAX_SLOTS, max_len=MAX_LEN, kv_layout="paged",
+            page_size=BS, num_blocks=6, admission="preempt", **sp),
+        # host tier: spec lanes spill O(copy) and resume with the draft
+        # cache rebuilt from committed history
+        "spec_tiered": EngineConfig(
+            max_slots=MAX_SLOTS, max_len=MAX_LEN, kv_layout="paged",
+            page_size=BS, num_blocks=6, admission="preempt",
+            host_tier=True, **sp),
+    }
+
+
+@pytest.fixture(scope="module")
+def spec_setup(setup):
+    cfg, mesh, rules, params, aot = setup
+    return cfg, mesh, rules, params, _draft_mix(cfg, params, 0.15), aot
+
+
+def test_fuzz_spec_parity(spec_setup):
+    cfg, mesh, rules, params, dparams, aot = spec_setup
+    agg = {"spec_accepted": 0, "spec_rejected": 0, "preemptions": 0,
+           "spills": 0, "restores": 0}
+    for seed in range(SPEC_EPISODES):
+        rng = np.random.default_rng(3000 + seed)
+        stream = make_stream(rng, cfg.vocab)
+        want, _ = drive(cfg, mesh, rules, params, aot, MODES["slotted"],
+                        stream)
+        for name, ec in spec_modes(cfg).items():
+            got, eng = drive(cfg, mesh, rules, params, aot, ec, stream,
+                             draft_params=dparams)
+            assert got == want, (
+                f"episode seed={seed}: spec engine {name!r} diverged from "
+                f"the sequential slotted engine\n  want={want}\n  got ={got}")
+            if eng.paged:
+                assert eng.alloc.in_use == 0
+            if eng.tier is not None:
+                eng.tier.check()
+                assert eng.tier.spilled_lanes == 0
+            for k in agg:
+                agg[k] += eng.counters.get(k, 0)
+    # both halves of the accept rule must fire, or parity is vacuous:
+    # accepted == 0 would reduce every round to sequential decode, and
+    # rejected == 0 would never exercise KV truncation / state rollback
+    assert agg["spec_accepted"] > 0, "no draft token ever accepted"
+    assert agg["spec_rejected"] > 0, "no draft token ever rejected"
+    if SPEC_EPISODES >= 10:
+        assert agg["preemptions"] > 0, "no preemption hit a spec engine"
+        assert agg["spills"] > 0, "no spec lane ever spilled to the tier"
+        assert agg["restores"] > 0, "no spec lane ever restored O(copy)"
+
+
+def test_fuzz_spec_recurrent_parity(rec_setup):
+    """Spec decoding over the recurrent state kinds (xLSTM ssm state,
+    Zamba's hybrid mamba+KV cache): rejection rolls the recurrent leaves
+    back via snapshot/where instead of KV truncation, and host-initiated
+    preempts land mid-speculation.  Parity reference: the plain
+    (non-spec, non-preempt) engine."""
+    cfg, mesh, rules, params, aot = rec_setup
+    dparams = _draft_mix(cfg, params, 0.02)
+    ec = EngineConfig(max_slots=MAX_SLOTS, max_len=MAX_LEN,
+                      spec_draft=cfg, spec_k=SPEC_K)
+    accepted = rejected = 0
+    for seed in range(SPEC_REC_EPISODES):
+        rng = np.random.default_rng(7000 + seed)
+        stream = make_stream(rng, cfg.vocab)
+        want, _ = drive_recurrent(cfg, mesh, rules, params, aot, stream, {})
+        preempts = {
+            int(t): int(rng.integers(MAX_SLOTS))
+            for t in rng.integers(1, 30, size=int(rng.integers(1, 4)))
+        }
+        got, eng = drive_recurrent(cfg, mesh, rules, params, aot, stream,
+                                   preempts, ec=ec, draft_params=dparams)
+        assert got == want, (
+            f"episode seed={seed}: spec {cfg.family} engine diverged"
+            f"\n  want={want}\n  got ={got}")
+        accepted += eng.counters["spec_accepted"]
+        rejected += eng.counters["spec_rejected"]
+    assert accepted > 0, f"no draft token ever accepted ({cfg.family})"
+    assert rejected > 0, f"no draft token ever rejected ({cfg.family})"
 
 
 def test_fuzz_episode_determinism(setup):
@@ -342,12 +464,13 @@ class _FakeClock:
 
 
 def drive_chaos(cfg, mesh, rules, params, aot, ec, stream, faults,
-                deadline_every=0, cancel_ticks=frozenset()):
+                deadline_every=0, cancel_ticks=frozenset(),
+                draft_params=None):
     """Replay a stream under a seeded fault schedule; invariants swept
     after every step, and the engine must drain without raising."""
     clock = _FakeClock()
     eng = ServeEngine(cfg, mesh, rules, params, ec, aot=aot, faults=faults,
-                      clock=clock)
+                      clock=clock, draft_params=draft_params)
     i, tick, guard = 0, 0, 0
     while i < len(stream) or eng.has_work():
         while i < len(stream) and stream[i][0] <= tick:
